@@ -1,0 +1,67 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.index import SPFreshIndex
+from repro.core.types import LireConfig
+
+
+def bench_cfg(**kw) -> LireConfig:
+    args = dict(
+        dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=8192,
+        num_postings_cap=1024, num_vectors_cap=65536, split_limit=48,
+        merge_limit=6, reassign_range=8, reassign_budget=256,
+        replica_count=2, nprobe=8,
+    )
+    args.update(kw)
+    return LireConfig(**args)
+
+
+def recall_at(index: SPFreshIndex, queries: np.ndarray, gt: np.ndarray,
+              k: int = 10, nprobe: int | None = None) -> float:
+    _, got = index.search(queries, k, nprobe=nprobe)
+    hits = 0
+    for row_gt, row_got in zip(gt, got):
+        hits += len(set(row_gt.tolist()) & set(row_got.tolist()))
+    return hits / (gt.shape[0] * gt.shape[1])
+
+
+def timed_search(index: SPFreshIndex, queries: np.ndarray, k: int = 10,
+                 nprobe: int | None = None, chunk: int = 64) -> dict:
+    """Per-chunk search wall times (warm) → latency percentiles in ms."""
+    # warmup/compile
+    index.search(queries[:chunk], k, nprobe=nprobe)
+    lats = []
+    for s in range(0, len(queries), chunk):
+        q = queries[s:s + chunk]
+        if len(q) < chunk:
+            break
+        t0 = time.perf_counter()
+        index.search(q, k, nprobe=nprobe)
+        lats.append((time.perf_counter() - t0) * 1e3 / chunk)
+    arr = np.asarray(lats) if lats else np.asarray([0.0])
+    return {
+        "mean_ms": float(arr.mean()),
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+    }
+
+
+def posting_stats(index: SPFreshIndex) -> dict:
+    lens = np.asarray(index.state.pool.posting_len)
+    valid = np.asarray(index.state.centroid_valid)
+    lv = lens[valid]
+    return {
+        "n_postings": int(valid.sum()),
+        "max_len": int(lv.max()) if lv.size else 0,
+        "mean_len": float(lv.mean()) if lv.size else 0.0,
+        # tail-latency driver in the paper: candidates scanned per query
+        "scan_cost_p99": float(np.percentile(lv, 99)) if lv.size else 0.0,
+    }
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

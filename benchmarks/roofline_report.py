@@ -1,0 +1,83 @@
+"""§Roofline report: aggregate the dry-run JSONs into the roofline table
+(used verbatim in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "results/dryrun_final") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def table(rows: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " mem/dev GB | model/HLO | compile_s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"skipped: {r.get('skip_reason', '')[:70]} | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"{r.get('status')} | — | — | — |"
+            )
+            continue
+        t = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        ratio = r.get("model_to_hlo_flops")
+        ratio_s = f"{ratio:.2f}" if ratio is not None else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant'].replace('_s', '')} | "
+            f"{ma.get('total_bytes', 0) / 1e9:.2f} | {ratio_s} | "
+            f"{r.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(lines)
+
+
+def collective_breakdown(rows: list[dict], arch: str, shape: str,
+                         mesh: str = "single") -> dict:
+    for r in rows:
+        if (r.get("arch"), r.get("shape"), r.get("mesh")) == (arch, shape, mesh):
+            return {
+                "bytes": r.get("collective_bytes", {}),
+                "counts": r.get("hlo_collective_counts", {}),
+            }
+    return {}
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = load()
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    skipped = sum(1 for r in rows if r.get("status") == "skipped")
+    bad = [r for r in rows if r.get("status") not in ("ok", "skipped")]
+    return [
+        f"roofline/cells,0.0,ok={ok};skipped={skipped};failed={len(bad)}"
+    ] + [
+        f"roofline/failed/{r['arch']}_{r['shape']}_{r['mesh']},0.0,"
+        f"status={r.get('status')}"
+        for r in bad
+    ]
+
+
+if __name__ == "__main__":
+    rows = load()
+    print("## single-pod (16×16 = 256 chips)\n")
+    print(table(rows, "single"))
+    print("\n## multi-pod (2×16×16 = 512 chips)\n")
+    print(table(rows, "multi"))

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+BENCHES = [
+    ("shift", "benchmarks.bench_shift"),                 # Fig. 2 / Fig. 10
+    ("update_sim", "benchmarks.bench_update_sim"),       # Fig. 7 (workload A/B)
+    ("stress", "benchmarks.bench_stress"),               # Fig. 9 (workload C)
+    ("reassign_range", "benchmarks.bench_reassign_range"),  # Fig. 11
+    ("pipeline", "benchmarks.bench_pipeline_balance"),   # Fig. 12
+    ("rebuild_cost", "benchmarks.bench_rebuild_cost"),   # Table 1
+    ("kernels", "benchmarks.bench_kernels"),             # hot-path micro
+    ("roofline", "benchmarks.roofline_report"),          # §Roofline summary
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow); default quick")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            for line in mod.run(quick=not args.full):
+                print(line, flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""The paper's technique as a framework feature: two-tower retrieval served
+by the SPFresh index (the `retrieval_cand` cell) with streaming catalog
+churn — vs the brute-force GEMM baseline.
+
+    PYTHONPATH=src python examples/retrieval_serving.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.types import LireConfig
+from repro.models import recsys as R
+from repro.serve.retrieval import IndexedRetriever
+
+
+def main() -> None:
+    model_cfg = R.TwoTowerConfig(
+        n_items=20000, n_user_fields=4, user_vocab_per_field=1000,
+        embed_dim=32, tower_dims=(64, 16),
+    )
+    params = R.twotower_init(jax.random.PRNGKey(0), model_cfg)
+    index_cfg = LireConfig(
+        dim=16, block_size=16, max_blocks_per_posting=8, num_blocks=16384,
+        num_postings_cap=2048, num_vectors_cap=262144,
+        split_limit=96, merge_limit=12, reassign_range=8, replica_count=2,
+        nprobe=16,
+    )
+
+    retriever = IndexedRetriever(params, model_cfg, index_cfg)
+    catalog = np.arange(15000)
+    t0 = time.perf_counter()
+    retriever.build_corpus(catalog)
+    print(f"corpus of {len(catalog)} items indexed in "
+          f"{time.perf_counter() - t0:.1f}s "
+          f"({retriever.index.stats()['n_postings']} postings)")
+
+    rng = np.random.default_rng(1)
+    users = rng.integers(0, 1000, size=(16, 4)).astype(np.int32)
+
+    t0 = time.perf_counter()
+    s_ann, ids_ann = retriever.retrieve(users, k=10)
+    t_ann = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    s_bf, ids_bf = retriever.retrieve_bruteforce(users, k=10)
+    t_bf = time.perf_counter() - t0
+
+    hits = sum(
+        len(set(a.tolist()) & set(b.tolist()))
+        for a, b in zip(ids_ann, ids_bf)
+    )
+    print(f"ANN recall vs brute force: {hits / 160:.3f} "
+          f"(ann {t_ann * 1e3:.0f}ms vs gemm {t_bf * 1e3:.0f}ms for 16 queries)")
+
+    # --- streaming catalog churn: no index rebuild ---
+    new_items = np.arange(15000, 16000)
+    t0 = time.perf_counter()
+    retriever.add_items(new_items)
+    print(f"+1000 items in-place in {time.perf_counter() - t0:.1f}s; "
+          f"stats: splits={retriever.index.stats()['n_splits']}, "
+          f"reassigned={retriever.index.stats()['n_reassigned']}")
+    s2, ids2 = retriever.retrieve(users, k=10)
+    fresh = (ids2 >= 15000).sum()
+    print(f"fresh items now appearing in top-10s: {fresh}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Assigned-architecture registry.
+
+``get_cells(arch)`` returns the (arch × shape) Cell list; ``all_cells()``
+returns every cell (40 assigned + the paper's own spfresh cells).
+Exact configs from the assignment are in the per-arch modules.
+"""
+from __future__ import annotations
+
+from repro.configs.common import Cell
+
+_ARCH_MODULES = [
+    "granite_20b",
+    "deepseek_7b",
+    "qwen15_110b",
+    "granite_moe_1b_a400m",
+    "phi35_moe_42b_a6_6b",
+    "gat_cora",
+    "bert4rec",
+    "mind",
+    "two_tower_retrieval",
+    "deepfm",
+    "spfresh",
+]
+
+_CELLS: dict[str, list[Cell]] | None = None
+
+
+def _load() -> dict[str, list[Cell]]:
+    global _CELLS
+    if _CELLS is None:
+        import importlib
+
+        _CELLS = {}
+        for mod_name in _ARCH_MODULES:
+            mod = importlib.import_module(f"repro.configs.{mod_name}")
+            cells = mod.cells()
+            assert cells, mod_name
+            _CELLS[cells[0].arch] = cells
+    return _CELLS
+
+
+def arch_names() -> list[str]:
+    return list(_load().keys())
+
+
+def get_cells(arch: str) -> list[Cell]:
+    return _load()[arch]
+
+
+def get_cell(arch: str, shape: str) -> Cell:
+    for c in _load()[arch]:
+        if c.shape == shape:
+            return c
+    raise KeyError(f"{arch}/{shape}")
+
+
+def all_cells(include_skipped: bool = True) -> list[Cell]:
+    out = []
+    for cells in _load().values():
+        for c in cells:
+            if include_skipped or c.skip_reason is None:
+                out.append(c)
+    return out

@@ -1,0 +1,115 @@
+"""bert4rec [recsys] embed_dim=64 n_blocks=2 n_heads=2 seq_len=200
+interaction=bidir-seq [arXiv:1904.06690; paper]."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import OPT, RECSYS_SHAPES, Cell, _recsys_cell, _sds
+from repro.models import recsys as R
+from repro.train.optimizer import make_train_step
+
+CONFIG = R.Bert4RecConfig(
+    # 2^20 - 1 so the (n_items + 1 [MASK]) table rows shard 16-way
+    name="bert4rec", n_items=1_048_575, embed_dim=64, n_blocks=2, n_heads=2,
+    d_ff=256, seq_len=200,
+)
+
+SMOKE = R.Bert4RecConfig(
+    name="bert4rec-smoke", n_items=128, embed_dim=16, n_blocks=2, n_heads=2,
+    d_ff=32, seq_len=12,
+)
+
+
+N_MASK = 4  # masked positions scored per sequence (BERT4Rec masks ~2%)
+
+
+def _batch_struct(cfg, sh, kind, shape_name):
+    b = sh["batch"]
+    out = {"items": _sds((b, cfg.seq_len), jnp.int32)}
+    if kind == "train":
+        out["mask_pos"] = _sds((b, N_MASK), jnp.int32)
+        out["mask_label"] = _sds((b, N_MASK), jnp.int32)
+    elif shape_name == "serve_bulk":
+        out["pair_items"] = _sds((b,), jnp.int32)
+    elif shape_name == "retrieval_cand":
+        out["candidate_ids"] = _sds((sh["n_candidates"],), jnp.int32)
+    return out
+
+
+def _make_batch(cfg, sh, rng, kind, shape_name):
+    b = sh["batch"]
+    items = rng.integers(0, cfg.n_items, size=(b, cfg.seq_len)).astype(np.int32)
+    out = {"items": jnp.asarray(items)}
+    if kind == "train":
+        n_mask = min(N_MASK, cfg.seq_len)
+        pos = np.stack([
+            rng.choice(cfg.seq_len, size=n_mask, replace=False)
+            for _ in range(b)
+        ]).astype(np.int32)
+        labels = items[np.arange(b)[:, None], pos].copy()
+        items2 = items.copy()
+        items2[np.arange(b)[:, None], pos] = cfg.mask_id
+        if n_mask < N_MASK:
+            pad = N_MASK - n_mask
+            pos = np.pad(pos, ((0, 0), (0, pad)))
+            labels = np.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        out = {"items": jnp.asarray(items2), "mask_pos": jnp.asarray(pos),
+               "mask_label": jnp.asarray(labels)}
+    elif shape_name == "serve_bulk":
+        out["pair_items"] = jnp.asarray(
+            rng.integers(0, cfg.n_items, size=b), jnp.int32
+        )
+    elif shape_name == "retrieval_cand":
+        out["candidate_ids"] = jnp.asarray(
+            rng.integers(0, cfg.n_items, size=sh["n_candidates"]), jnp.int32
+        )
+    return out
+
+
+def _pair_score(params, batch, cfg):
+    hidden = R.bert4rec_encode(params, batch["items"], cfg)[:, -1]
+    cand = params["item_embed"][jnp.clip(batch["pair_items"], 0, cfg.n_items - 1)]
+    return jnp.sum(hidden * cand, axis=-1)
+
+
+def _cand_score(params, batch, cfg):
+    hidden = R.bert4rec_encode(params, batch["items"], cfg)[:, -1]  # (1, d)
+    cand = params["item_embed"][jnp.clip(batch["candidate_ids"], 0, cfg.n_items - 1)]
+    return hidden @ cand.T  # (1, C)
+
+
+def cells() -> list[Cell]:
+    out = []
+    for shape_name, sh in RECSYS_SHAPES.items():
+        kind = sh["kind"]
+        if kind == "train":
+            def make_step(cfg):
+                return make_train_step(
+                    lambda p, b, _cfg=cfg: R.bert4rec_loss(p, b, _cfg), OPT
+                )
+            donate = (0, 1)
+        elif shape_name == "serve_p99":
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return R.bert4rec_score(params, batch, _cfg)
+                return step
+            donate = ()
+        elif shape_name == "serve_bulk":
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return _pair_score(params, batch, _cfg)
+                return step
+            donate = ()
+        else:  # retrieval_cand
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return _cand_score(params, batch, _cfg)
+                return step
+            donate = ()
+        out.append(_recsys_cell(
+            "bert4rec", shape_name, CONFIG, SMOKE, kind, make_step,
+            R.bert4rec_init,
+            lambda cfg, s, _k=kind, _n=shape_name: _batch_struct(cfg, s, _k, _n),
+            lambda cfg, s, rng, _k=kind, _n=shape_name: _make_batch(cfg, s, rng, _k, _n),
+            donate=donate,
+        ))
+    return out

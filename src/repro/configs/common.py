@@ -1,0 +1,399 @@
+"""Cell registry: every assigned (architecture × input shape) combination
+becomes a `Cell` with abstract input specs, a step function, and sharding
+rules — consumed by the dry-run, the smoke tests, and the roofline pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shard_rules
+from repro.models import gnn, recsys, transformer as tf
+from repro.train.optimizer import AdamWConfig, adamw_init, make_train_step
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    family: str
+    kind: str                        # train | prefill | decode | serve
+    model_cfg: Any
+    step_fn: Callable                # pure fn(*inputs)
+    input_specs: Callable[[], tuple]        # () -> tuple of abstract args
+    in_shardings: Callable[[bool], tuple]   # multi_pod -> tuple of spec trees
+    make_smoke_inputs: Callable[[Any, np.random.Generator], tuple] | None = None
+    smoke_cfg: Any = None
+    skip_reason: str | None = None
+    donate_argnums: tuple = ()
+    out_shardings: Callable | None = None   # multi_pod -> out spec tree
+    smoke_step_fn: Callable | None = None   # step built against smoke_cfg
+    # LM cells: rebuild (step, specs, shardings, ..., outs) for a variant
+    # config — used by the dry-run's two-point loop-analysis correction.
+    make_for_cfg: Callable | None = None
+    # Mesh-coupled cells (the spfresh index: shard_map needs the mesh):
+    # make_mesh_step(mesh, multi_pod) -> (step_fn, abstract_args)
+    make_mesh_step: Any = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+OPT = AdamWConfig()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+LM_SMOKE_SHAPES = {
+    "train_4k": dict(kind="train", seq=32, batch=2),
+    "prefill_32k": dict(kind="prefill", seq=64, batch=2),
+    "decode_32k": dict(kind="decode", seq=64, batch=4),
+    "long_500k": dict(kind="decode", seq=128, batch=1),
+}
+
+
+def lm_cells(arch: str, cfg: tf.LMConfig, smoke: tf.LMConfig) -> list[Cell]:
+    cells = []
+    for shape_name, sh in LM_SHAPES.items():
+        kind = sh["kind"]
+        skip = None
+        if shape_name == "long_500k":
+            skip = (
+                "pure full-attention arch: long_500k requires sub-quadratic "
+                "attention (assignment rule; see DESIGN.md §5)"
+            )
+
+        def make(the_cfg, shape_name=shape_name, sh=sh, kind=kind):
+            seq, batch = sh["seq"], sh["batch"]
+            ssh = LM_SMOKE_SHAPES[shape_name]
+
+            if kind == "train":
+                def loss(params, b, _cfg=the_cfg):
+                    return tf.loss_fn(params, b, _cfg)
+                step = make_train_step(loss, OPT)
+
+                def specs(_cfg=the_cfg, seq=seq, batch=batch):
+                    p = tf.param_specs(_cfg)
+                    o = jax.eval_shape(adamw_init, p)
+                    b = {
+                        "tokens": _sds((batch, seq), I32),
+                        "labels": _sds((batch, seq), I32),
+                    }
+                    return (p, o, b)
+
+                def shardings(multi_pod, _cfg=the_cfg):
+                    ps = shard_rules.lm_param_specs(_cfg, multi_pod=multi_pod)
+                    return (
+                        ps,
+                        shard_rules.opt_state_specs(ps),
+                        shard_rules.lm_batch_specs("train", multi_pod=multi_pod),
+                    )
+
+                def smoke_inputs(scfg, rng, ssh=ssh):
+                    params = tf.init_params(jax.random.PRNGKey(0), scfg)
+                    opt = adamw_init(params)
+                    toks = jnp.asarray(
+                        rng.integers(0, scfg.vocab, size=(ssh["batch"], ssh["seq"])),
+                        I32,
+                    )
+                    return (params, opt, {"tokens": toks, "labels": toks})
+
+                return step, specs, shardings, smoke_inputs, (0, 1), None
+
+            if kind == "prefill":
+                def step(params, tokens, _cfg=the_cfg):
+                    return tf.prefill(params, tokens, _cfg)
+
+                def specs(_cfg=the_cfg, seq=seq, batch=batch):
+                    return (tf.param_specs(_cfg), _sds((batch, seq), I32))
+
+                def shardings(multi_pod, _cfg=the_cfg):
+                    da = shard_rules.data_axes(multi_pod)
+                    return (
+                        shard_rules.lm_param_specs(_cfg, multi_pod=multi_pod),
+                        P(da, None),
+                    )
+
+                def smoke_inputs(scfg, rng, ssh=ssh):
+                    params = tf.init_params(jax.random.PRNGKey(0), scfg)
+                    toks = jnp.asarray(
+                        rng.integers(0, scfg.vocab, size=(ssh["batch"], ssh["seq"])),
+                        I32,
+                    )
+                    return (params, toks)
+
+                def outs(multi_pod):
+                    da = shard_rules.data_axes(multi_pod)
+                    return (P(da, "model"), shard_rules.lm_cache_specs(multi_pod))
+                return step, specs, shardings, smoke_inputs, (), outs
+
+            # decode
+            def step(params, cache, tokens, pos, _cfg=the_cfg):
+                return tf.decode_step(params, cache, tokens, pos, _cfg)
+
+            def specs(_cfg=the_cfg, seq=seq, batch=batch):
+                cache = jax.eval_shape(
+                    lambda: tf.init_cache(_cfg, batch, seq)
+                )
+                return (
+                    tf.param_specs(_cfg), cache, _sds((batch,), I32),
+                    _sds((), I32),
+                )
+
+            def shardings(multi_pod, _cfg=the_cfg):
+                da = shard_rules.data_axes(multi_pod)
+                return (
+                    shard_rules.lm_param_specs(_cfg, multi_pod=multi_pod),
+                    shard_rules.lm_cache_specs(multi_pod),
+                    P(da),
+                    P(),
+                )
+
+            def smoke_inputs(scfg, rng, ssh=ssh):
+                params = tf.init_params(jax.random.PRNGKey(0), scfg)
+                cache = tf.init_cache(scfg, ssh["batch"], ssh["seq"])
+                toks = jnp.asarray(
+                    rng.integers(0, scfg.vocab, size=(ssh["batch"],)), I32
+                )
+                return (params, cache, toks, jnp.asarray(ssh["seq"] // 2, I32))
+
+            def outs(multi_pod):
+                da = shard_rules.data_axes(multi_pod)
+                return (P(da, "model"), shard_rules.lm_cache_specs(multi_pod))
+            return step, specs, shardings, smoke_inputs, (1,), outs
+
+        step, specs, shardings, smoke_inputs, donate, outs = make(cfg)
+        smoke_step = make(smoke)[0]
+        cells.append(Cell(
+            arch=arch, shape=shape_name, family="lm", kind=kind,
+            model_cfg=cfg, smoke_cfg=smoke, step_fn=step, input_specs=specs,
+            in_shardings=shardings, make_smoke_inputs=smoke_inputs,
+            skip_reason=skip, donate_argnums=donate, smoke_step_fn=smoke_step,
+            out_shardings=outs, make_for_cfg=make,
+        ))
+    return cells
+
+
+# ===========================================================================
+# GNN family (gat-cora)
+# ===========================================================================
+
+GNN_SHAPES = {
+    # shape -> (kind, n_nodes, n_edges, d_feat, n_classes, extras)
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(
+        n_nodes=1024 + 1024 * 15 + 1024 * 150,
+        n_edges=1024 * 15 + 1024 * 150 * 10 // 10 * 10,  # 15360 + 153600
+        d_feat=602, n_classes=41, n_targets=1024,
+    ),
+    "ogb_products": dict(
+        n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_classes=47
+    ),
+    "molecule": dict(
+        n_nodes=30 * 128, n_edges=64 * 128, d_feat=32, n_classes=2,
+        n_graphs=128, readout="mean",
+    ),
+}
+
+GNN_SMOKE_SHAPES = {
+    "full_graph_sm": dict(n_nodes=64, n_edges=256, d_feat=24, n_classes=7),
+    "minibatch_lg": dict(
+        n_nodes=8 + 8 * 3 + 8 * 6, n_edges=8 * 3 + 8 * 6, d_feat=16,
+        n_classes=5, n_targets=8,
+    ),
+    "ogb_products": dict(n_nodes=128, n_edges=512, d_feat=12, n_classes=7),
+    "molecule": dict(
+        n_nodes=5 * 8, n_edges=8 * 8, d_feat=8, n_classes=2, n_graphs=8,
+        readout="mean",
+    ),
+}
+
+
+def gnn_cells(arch: str, base: gnn.GATConfig) -> list[Cell]:
+    cells = []
+    for shape_name, sh in GNN_SHAPES.items():
+        cfg = dataclasses.replace(
+            base, d_in=sh["d_feat"], n_classes=sh["n_classes"],
+            readout=sh.get("readout", "none"), n_graphs=sh.get("n_graphs", 0),
+        )
+        ssh = GNN_SMOKE_SHAPES[shape_name]
+        smoke = dataclasses.replace(
+            base, d_in=ssh["d_feat"], n_classes=ssh["n_classes"],
+            readout=ssh.get("readout", "none"), n_graphs=ssh.get("n_graphs", 0),
+        )
+
+        def make(the_cfg, sh=sh):
+            def loss(params, b, _cfg=the_cfg):
+                return gnn.loss_fn(params, b, _cfg)
+            step = make_train_step(loss, OPT)
+
+            def batch_struct(sh, _cfg):
+                n, e = sh["n_nodes"], sh["n_edges"]
+                # pad the edge list to shard over the full 512-device mesh
+                # (padded edges carry src/dst = -1 and are ignored)
+                e = ((e + 511) // 512) * 512
+                b = {
+                    "features": _sds((n, sh["d_feat"]), F32),
+                    "edge_src": _sds((e,), I32),
+                    "edge_dst": _sds((e,), I32),
+                }
+                if "n_graphs" in sh:
+                    b["graph_ids"] = _sds((n,), I32)
+                    b["labels"] = _sds((sh["n_graphs"],), I32)
+                else:
+                    b["labels"] = _sds((n,), I32)
+                return b
+
+            def specs(_cfg=the_cfg, sh=sh):
+                p = gnn.param_specs(_cfg)
+                o = jax.eval_shape(adamw_init, p)
+                return (p, o, batch_struct(sh, _cfg))
+
+            def shardings(multi_pod, _cfg=the_cfg, sh=sh):
+                p = gnn.param_specs(_cfg)
+                ps = shard_rules.gnn_param_specs(p)
+                bs = shard_rules.gnn_batch_specs(
+                    batch_struct(sh, _cfg), multi_pod=multi_pod
+                )
+                return (ps, shard_rules.opt_state_specs(ps), bs)
+
+            def smoke_inputs(scfg, rng, ssh=ssh, shape_name=shape_name):
+                params = gnn.init_params(jax.random.PRNGKey(0), scfg)
+                opt = adamw_init(params)
+                n, e = ssh["n_nodes"], ssh["n_edges"]
+                if shape_name == "minibatch_lg":
+                    # use the REAL fanout sampler for the sampled-training
+                    # cell (fanouts chosen to reproduce ssh geometry)
+                    from repro.data.graphs import CSRGraph, sample_subgraph
+
+                    g = CSRGraph.random(
+                        max(64, n), avg_degree=8, d_feat=ssh["d_feat"],
+                        n_classes=ssh["n_classes"], seed=0,
+                    )
+                    targets = rng.choice(g.n_nodes, size=ssh["n_targets"],
+                                         replace=False)
+                    raw = sample_subgraph(g, targets, (3, 6),
+                                          np.random.default_rng(1))
+                    b = {
+                        "features": jnp.asarray(raw["features"]),
+                        "edge_src": jnp.asarray(raw["edge_src"]),
+                        "edge_dst": jnp.asarray(raw["edge_dst"]),
+                        "labels": jnp.asarray(raw["labels"]),
+                    }
+                    return (params, opt, b)
+                b = {
+                    "features": jnp.asarray(rng.normal(size=(n, ssh["d_feat"])), F32),
+                    "edge_src": jnp.asarray(rng.integers(0, n, size=e), I32),
+                    "edge_dst": jnp.asarray(rng.integers(0, n, size=e), I32),
+                }
+                if "n_graphs" in ssh:
+                    g = ssh["n_graphs"]
+                    b["graph_ids"] = jnp.asarray(
+                        np.repeat(np.arange(g), n // g), I32
+                    )
+                    b["labels"] = jnp.asarray(
+                        rng.integers(0, ssh["n_classes"], size=g), I32
+                    )
+                else:
+                    labels = rng.integers(0, ssh["n_classes"], size=n).astype(np.int32)
+                    if "n_targets" in ssh:
+                        labels[ssh["n_targets"]:] = -1
+                    b["labels"] = jnp.asarray(labels)
+                return (params, opt, b)
+            return step, specs, shardings, smoke_inputs
+
+        step, specs, shardings, smoke_inputs = make(cfg)
+        smoke_step = make(smoke)[0]
+        cells.append(Cell(
+            arch=arch, shape=shape_name, family="gnn", kind="train",
+            model_cfg=cfg, smoke_cfg=smoke, step_fn=step, input_specs=specs,
+            in_shardings=shardings, make_smoke_inputs=smoke_inputs,
+            donate_argnums=(0, 1), smoke_step_fn=smoke_step,
+        ))
+    return cells
+
+
+# ===========================================================================
+# Recsys family
+# ===========================================================================
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=1_000_000),
+}
+
+RECSYS_SMOKE_SHAPES = {
+    "train_batch": dict(kind="train", batch=32),
+    "serve_p99": dict(kind="serve", batch=8),
+    "serve_bulk": dict(kind="serve", batch=64),
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=256),
+}
+
+
+def _recsys_cell(
+    arch: str,
+    shape_name: str,
+    cfg,
+    smoke_cfg,
+    kind: str,
+    make_step,          # cfg -> step_fn
+    init_fn,
+    batch_struct_fn,
+    make_batch_fn,
+    donate=(),
+) -> Cell:
+    def specs():
+        p = jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+        b = batch_struct_fn(cfg, RECSYS_SHAPES[shape_name])
+        if kind == "train":
+            o = jax.eval_shape(adamw_init, p)
+            return (p, o, b)
+        return (p, b)
+
+    def shardings(multi_pod):
+        p = jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+        ps = shard_rules.recsys_param_specs(p, multi_pod=multi_pod)
+        b = batch_struct_fn(cfg, RECSYS_SHAPES[shape_name])
+        bs = shard_rules.recsys_batch_specs(b, multi_pod=multi_pod)
+        if kind == "train":
+            return (ps, shard_rules.opt_state_specs(ps), bs)
+        return (ps, bs)
+
+    def smoke_inputs(scfg, rng):
+        params = init_fn(jax.random.PRNGKey(0), scfg)
+        b = make_batch_fn(scfg, RECSYS_SMOKE_SHAPES[shape_name], rng)
+        if kind == "train":
+            return (params, adamw_init(params), b)
+        return (params, b)
+
+    return Cell(
+        arch=arch, shape=shape_name, family="recsys", kind=kind,
+        model_cfg=cfg, smoke_cfg=smoke_cfg, step_fn=make_step(cfg),
+        input_specs=specs, in_shardings=shardings,
+        make_smoke_inputs=smoke_inputs, donate_argnums=donate,
+        smoke_step_fn=make_step(smoke_cfg),
+    )

@@ -1,0 +1,69 @@
+"""deepfm [recsys] n_sparse=39 embed_dim=10 mlp=400-400-400 interaction=fm
+[arXiv:1703.04247; paper]."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import RECSYS_SHAPES, Cell, _recsys_cell, _sds
+from repro.models import recsys as R
+from repro.train.optimizer import make_train_step
+
+CONFIG = R.DeepFMConfig(
+    name="deepfm", n_fields=39, vocab_per_field=1_000_000, embed_dim=10,
+    mlp_dims=(400, 400, 400),
+)
+
+SMOKE = R.DeepFMConfig(
+    name="deepfm-smoke", n_fields=6, vocab_per_field=64, embed_dim=4,
+    mlp_dims=(16, 16),
+)
+
+
+def _batch_struct(cfg, sh):
+    b = sh["batch"] * sh.get("n_candidates", 1)
+    out = {"fields": _sds((b, cfg.n_fields), jnp.int32)}
+    if sh.get("kind") == "train":
+        out["labels"] = _sds((b,), jnp.int32)
+    return out
+
+
+def _make_batch(cfg, sh, rng):
+    b = sh["batch"] * sh.get("n_candidates", 1)
+    out = {
+        "fields": jnp.asarray(
+            rng.integers(0, cfg.vocab_per_field, size=(b, cfg.n_fields)),
+            jnp.int32,
+        )
+    }
+    if sh.get("kind") == "train":
+        out["labels"] = jnp.asarray(rng.integers(0, 2, size=b), jnp.int32)
+    return out
+
+
+def cells() -> list[Cell]:
+    from repro.configs.common import OPT
+    out = []
+    for shape_name, sh in RECSYS_SHAPES.items():
+        kind = "train" if sh["kind"] == "train" else "serve"
+        if kind == "train":
+            def make_step(cfg):
+                return make_train_step(
+                    lambda p, b, _cfg=cfg: R.deepfm_loss(p, b, _cfg), OPT
+                )
+            donate = (0, 1)
+        else:
+            # retrieval_cand for a ranking model = bulk-score 1M candidates
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return R.deepfm_forward(params, batch, _cfg)
+                return step
+            donate = ()
+        out.append(_recsys_cell(
+            "deepfm", shape_name, CONFIG, SMOKE, kind, make_step,
+            R.deepfm_init,
+            lambda cfg, s, _k=kind: _batch_struct(cfg, {**s, "kind": _k}),
+            lambda cfg, s, rng, _k=kind: _make_batch(cfg, {**s, "kind": _k}, rng),
+            donate=donate,
+        ))
+    return out

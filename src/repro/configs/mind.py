@@ -1,0 +1,102 @@
+"""mind [recsys] embed_dim=64 n_interests=4 capsule_iters=3
+interaction=multi-interest [arXiv:1904.08030]."""
+import jax.numpy as jnp
+
+from repro.configs.common import OPT, RECSYS_SHAPES, Cell, _recsys_cell, _sds
+from repro.models import recsys as R
+from repro.train.optimizer import make_train_step
+
+CONFIG = R.MINDConfig(
+    name="mind", n_items=1_000_000, embed_dim=64, n_interests=4,
+    capsule_iters=3, seq_len=50,
+)
+
+SMOKE = R.MINDConfig(
+    name="mind-smoke", n_items=128, embed_dim=16, n_interests=4,
+    capsule_iters=3, seq_len=10,
+)
+
+
+def _batch_struct(cfg, sh, kind, shape_name):
+    b = sh["batch"]
+    out = {"items": _sds((b, cfg.seq_len), jnp.int32)}
+    if kind == "train":
+        out["target"] = _sds((b,), jnp.int32)
+    elif shape_name == "serve_bulk":
+        out["pair_items"] = _sds((b,), jnp.int32)
+    elif shape_name == "retrieval_cand":
+        out["candidate_ids"] = _sds((sh["n_candidates"],), jnp.int32)
+    return out
+
+
+def _make_batch(cfg, sh, rng, kind, shape_name):
+    b = sh["batch"]
+    out = {
+        "items": jnp.asarray(
+            rng.integers(0, cfg.n_items, size=(b, cfg.seq_len)), jnp.int32
+        )
+    }
+    if kind == "train":
+        out["target"] = jnp.asarray(rng.integers(0, cfg.n_items, size=b), jnp.int32)
+    elif shape_name == "serve_bulk":
+        out["pair_items"] = jnp.asarray(
+            rng.integers(0, cfg.n_items, size=b), jnp.int32
+        )
+    elif shape_name == "retrieval_cand":
+        out["candidate_ids"] = jnp.asarray(
+            rng.integers(0, cfg.n_items, size=sh["n_candidates"]), jnp.int32
+        )
+    return out
+
+
+def _pair_score(params, batch, cfg):
+    """Bulk scoring: max over interests of capsule·item."""
+    caps = R.mind_interests(params, batch["items"], cfg)  # (B, K, d)
+    cand = params["item_embed"][jnp.clip(batch["pair_items"], 0, cfg.n_items - 1)]
+    return jnp.max(jnp.einsum("bkd,bd->bk", caps, cand), axis=-1)
+
+
+def _cand_score(params, batch, cfg):
+    """Retrieval: every interest queries the 1M candidates; max-combine."""
+    caps = R.mind_interests(params, batch["items"], cfg)  # (1, K, d)
+    cand = params["item_embed"][jnp.clip(batch["candidate_ids"], 0, cfg.n_items - 1)]
+    scores = jnp.einsum("bkd,cd->bkc", caps, cand)
+    return jnp.max(scores, axis=1)  # (1, C)
+
+
+def cells() -> list[Cell]:
+    out = []
+    for shape_name, sh in RECSYS_SHAPES.items():
+        kind = sh["kind"]
+        if kind == "train":
+            def make_step(cfg):
+                return make_train_step(
+                    lambda p, b, _cfg=cfg: R.mind_loss(p, b, _cfg), OPT
+                )
+            donate = (0, 1)
+        elif shape_name == "serve_p99":
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return R.mind_serve(params, batch, _cfg)
+                return step
+            donate = ()
+        elif shape_name == "serve_bulk":
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return _pair_score(params, batch, _cfg)
+                return step
+            donate = ()
+        else:
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return _cand_score(params, batch, _cfg)
+                return step
+            donate = ()
+        out.append(_recsys_cell(
+            "mind", shape_name, CONFIG, SMOKE, kind, make_step,
+            R.mind_init,
+            lambda cfg, s, _k=kind, _n=shape_name: _batch_struct(cfg, s, _k, _n),
+            lambda cfg, s, rng, _k=kind, _n=shape_name: _make_batch(cfg, s, rng, _k, _n),
+            donate=donate,
+        ))
+    return out

@@ -1,0 +1,140 @@
+"""spfresh-1b — the paper's own architecture at billion scale.
+
+Document-sharded SPFresh: one LIRE shard per device (256 on the single-pod
+16×16 mesh, 512 on the 2×16×16 multi-pod mesh).  Per-shard geometry below
+holds ~2M live vectors (≈8M replica slots): 256 shards ≈ 0.5B, 512 shards
+≈ 1.1B vectors — the paper's SPACEV1B/SIFT1B regime with int8 payloads.
+
+Cells (serving steps, the paper's §5 workloads):
+  * serve_search — Q=1024 queries, k=10, nprobe=64 (paper's search setting)
+  * serve_update — B=4096 inserts routed + appended (Updater)
+  * maintain     — one Local-Rebuilder round on every shard in parallel
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import Cell, _sds
+from repro.core.types import LireConfig, make_empty_state
+from repro.distributed import sharded_index as D
+
+# Per-shard geometry (per device).
+CONFIG = LireConfig(
+    dim=100,                      # SPACEV byte vectors
+    block_size=32,
+    # §Perf iter 1: capacity 256→160 (MB 8→5).  The scan gathers FULL
+    # posting buffers; steady-state live length sits between merge_limit
+    # and split_limit, so capacity slack is pure HBM waste.  160 keeps
+    # split_limit+GC headroom while cutting scan traffic 1.6×.
+    max_blocks_per_posting=4,     # posting capacity 128
+    num_blocks=262_144,           # 838 MB int8 payload / device
+    num_postings_cap=65_536,
+    num_vectors_cap=4_194_304,    # 4M handles / shard
+    vector_dtype="int8",
+    scan_dtype="bfloat16",        # §Perf iter 2: halve upcast traffic in the scan
+    split_limit=96,
+    merge_limit=12,
+    reassign_range=64,            # paper default (Fig. 11)
+    reassign_budget=256,
+    replica_count=4,
+    replica_rng=1.15,
+    nprobe=64,                    # paper: search nearest 64 postings
+)
+
+SMOKE = LireConfig(
+    dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=1024,
+    num_postings_cap=128, num_vectors_cap=4096, split_limit=48,
+    merge_limit=6, reassign_range=8, reassign_budget=128, replica_count=2,
+    nprobe=8,
+)
+
+SEARCH_Q = 1024
+UPDATE_B = 4096
+# probe_chunk=0: the probe-chunk lax.scan would be counted once by XLA's
+# cost analysis; unchunked gives exact FLOP/byte counts for the roofline
+# (the Pallas posting_scan kernel bounds real VMEM use on hardware).
+PROBE_CHUNK = 0
+
+
+def _shard_axes(multi_pod: bool):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def _n_shards(multi_pod: bool):
+    return 512 if multi_pod else 256
+
+
+def _stacked_state_specs(n_shards: int):
+    abstract = jax.eval_shape(lambda: make_empty_state(CONFIG))
+    return jax.tree_util.tree_map(
+        lambda x: _sds((n_shards, *x.shape), x.dtype), abstract
+    )
+
+
+# two-level router geometry (§Perf Cell A iter 4): 512 groups of ≤256
+# centroids per shard; queries probe the 32 nearest groups
+N_GROUPS = 512
+GROUP_CAP = 256
+GPROBE = 32
+
+
+def _make_mesh_step(shape: str):
+    def make(mesh, multi_pod: bool):
+        axes = _shard_axes(multi_pod)
+        n = _n_shards(multi_pod)
+        state_specs = _stacked_state_specs(n)
+        if shape == "serve_search":
+            fn = D.make_search_step(
+                mesh, CONFIG, k=10, shard_axes=axes, probe_chunk=PROBE_CHUNK
+            )
+            args = (
+                state_specs,
+                _sds((SEARCH_Q, CONFIG.dim), jnp.float32),
+                _sds((n,), jnp.bool_),
+            )
+            return fn, args
+        if shape == "serve_search_grouped":
+            from repro.core.grouping import GroupIndex
+
+            fn = D.make_search_step(
+                mesh, CONFIG, k=10, shard_axes=axes,
+                probe_chunk=PROBE_CHUNK, gprobe=GPROBE,
+            )
+            gi = GroupIndex(
+                group_centroids=_sds((n, N_GROUPS, CONFIG.dim), jnp.float32),
+                group_sqn=_sds((n, N_GROUPS), jnp.float32),
+                members=_sds((n, N_GROUPS, GROUP_CAP), jnp.int32),
+                member_valid=_sds((n, N_GROUPS, GROUP_CAP), jnp.bool_),
+            )
+            args = (
+                state_specs,
+                _sds((SEARCH_Q, CONFIG.dim), jnp.float32),
+                _sds((n,), jnp.bool_),
+                gi,
+            )
+            return fn, args
+        if shape == "serve_update":
+            fn = D.make_insert_step(mesh, CONFIG, shard_axes=axes)
+            args = (state_specs, _sds((UPDATE_B, CONFIG.dim), jnp.float32))
+            return fn, args
+        if shape == "maintain":
+            fn = D.make_maintenance_step(mesh, CONFIG, shard_axes=axes)
+            return fn, (state_specs,)
+        raise KeyError(shape)
+    return make
+
+
+def cells() -> list[Cell]:
+    out = []
+    for shape in ("serve_search", "serve_search_grouped", "serve_update",
+                  "maintain"):
+        c = Cell(
+            arch="spfresh-1b", shape=shape, family="index",
+            kind="serve", model_cfg=CONFIG, smoke_cfg=SMOKE,
+            step_fn=None, input_specs=None, in_shardings=None,
+            make_smoke_inputs=None,
+        )
+        c.make_mesh_step = _make_mesh_step(shape)
+        out.append(c)
+    return out

@@ -1,0 +1,179 @@
+"""two-tower-retrieval [recsys] embed_dim=256 tower_mlp=1024-512-256
+interaction=dot — sampled-softmax retrieval [RecSys'19 (YouTube)].
+
+This is the paper-flagship arch: ``retrieval_cand`` is exactly the ANN
+query SPFresh serves (see repro/serve/retrieval.py + benchmarks)."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import OPT, RECSYS_SHAPES, Cell, _recsys_cell, _sds
+from repro.models import recsys as R
+from repro.train.optimizer import make_train_step
+
+CONFIG = R.TwoTowerConfig(
+    name="two-tower-retrieval",
+    n_items=10_000_000,
+    n_user_fields=8,
+    user_vocab_per_field=100_000,
+    embed_dim=256,
+    tower_dims=(1024, 512, 256),
+)
+
+SMOKE = R.TwoTowerConfig(
+    name="two-tower-smoke", n_items=512, n_user_fields=4,
+    user_vocab_per_field=64, embed_dim=16, tower_dims=(32, 16),
+)
+
+
+def _batch_struct(cfg, sh, kind, shape_name):
+    b = sh["batch"]
+    out = {"user_fields": _sds((b, cfg.n_user_fields), jnp.int32)}
+    if shape_name == "retrieval_cand":
+        out["candidate_ids"] = _sds((sh["n_candidates"],), jnp.int32)
+        return out
+    out["item_ids"] = _sds((b,), jnp.int32)
+    if kind == "train":
+        out["item_logq"] = _sds((b,), jnp.float32)
+    return out
+
+
+def _make_batch(cfg, sh, rng, kind, shape_name):
+    b = sh["batch"]
+    out = {
+        "user_fields": jnp.asarray(
+            rng.integers(0, cfg.user_vocab_per_field,
+                         size=(b, cfg.n_user_fields)), jnp.int32
+        )
+    }
+    if shape_name == "retrieval_cand":
+        out["candidate_ids"] = jnp.asarray(
+            rng.integers(0, cfg.n_items, size=sh["n_candidates"]), jnp.int32
+        )
+        return out
+    out["item_ids"] = jnp.asarray(rng.integers(0, cfg.n_items, size=b), jnp.int32)
+    if kind == "train":
+        out["item_logq"] = jnp.zeros((b,), jnp.float32)
+    return out
+
+
+# --------------------------------------------------------------------------
+# §Perf iter 3 (beyond-paper flagship): retrieval_cand served by the SPFresh
+# index instead of the brute-force 1M-candidate GEMM.  The item corpus lives
+# in a document-sharded LIRE index over item-tower embeddings (dim 256,
+# bf16); the user query runs the tower, then a distributed nprobe=16 search.
+# --------------------------------------------------------------------------
+
+def _ann_index_cfg():
+    from repro.core.types import LireConfig
+
+    # per-shard geometry: 10M items / 256 shards ≈ 40k items (+ replica
+    # headroom) per device
+    return LireConfig(
+        dim=256, block_size=32, max_blocks_per_posting=4,   # cap 128
+        num_blocks=4096, num_postings_cap=2048,
+        num_vectors_cap=131072, vector_dtype="bfloat16",
+        split_limit=96, merge_limit=12, reassign_range=16,
+        reassign_budget=128, replica_count=2, nprobe=16,
+    )
+
+
+def _ann_make_mesh_step(mesh, multi_pod: bool):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.types import make_empty_state
+    from repro.distributed import sharded_index as D
+    from repro.distributed.sharding import recsys_param_specs
+
+    icfg = _ann_index_cfg()
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n_shards = 512 if multi_pod else 256
+    cfg = dataclasses.replace(CONFIG, dtype="bfloat16")
+
+    search = D.make_search_step(mesh, icfg, k=10, shard_axes=axes, nprobe=16)
+
+    def step(params, user_fields, state_stacked, alive):
+        u = R.user_tower(params, user_fields, cfg)  # (1, 256)
+        return search(state_stacked, u.astype(jnp.float32), alive)
+
+    abstract = jax.eval_shape(lambda: make_empty_state(icfg))
+    state_specs = jax.tree_util.tree_map(
+        lambda x: _sds((n_shards, *x.shape), x.dtype), abstract
+    )
+    p_abs = jax.eval_shape(
+        lambda k: R.twotower_init(k, cfg), jax.random.PRNGKey(0)
+    )
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        recsys_param_specs(p_abs, multi_pod=multi_pod),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    ax_spec = axes if len(axes) > 1 else axes[0]
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            p_sh,
+            NamedSharding(mesh, P(None, None)),
+            jax.tree_util.tree_map(
+                lambda x: NamedSharding(
+                    mesh, P(ax_spec, *([None] * x.ndim))
+                ),
+                abstract,
+            ),
+            NamedSharding(mesh, P(None)),
+        ),
+    )
+    args = (
+        p_abs,
+        _sds((1, CONFIG.n_user_fields), jnp.int32),
+        state_specs,
+        _sds((n_shards,), jnp.bool_),
+    )
+    return jitted, args
+
+
+def cells() -> list[Cell]:
+    out = []
+    ann = Cell(
+        arch="two-tower-retrieval", shape="retrieval_cand_ann",
+        family="recsys", kind="serve",
+        model_cfg=CONFIG, smoke_cfg=SMOKE, step_fn=None, input_specs=None,
+        in_shardings=None, make_smoke_inputs=None,
+    )
+    ann.make_mesh_step = _ann_make_mesh_step
+    out.append(ann)
+    for shape_name, sh in RECSYS_SHAPES.items():
+        kind = sh["kind"]
+        if kind == "train":
+            def make_step(cfg):
+                return make_train_step(
+                    lambda p, b, _cfg=cfg: R.twotower_loss(p, b, _cfg), OPT
+                )
+            donate = (0, 1)
+        elif shape_name == "retrieval_cand":
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return R.twotower_retrieval(params, batch, _cfg)
+                return step
+            donate = ()
+        else:
+            def make_step(cfg):
+                def step(params, batch, _cfg=cfg):
+                    return R.twotower_score_pairs(params, batch, _cfg)
+                return step
+            donate = ()
+        # §Perf iter 2: the serving cells read a bf16-cast checkpoint —
+        # halves table-gather + activation HBM traffic at iso-recall.
+        cell_cfg = (
+            dataclasses.replace(CONFIG, dtype="bfloat16")
+            if shape_name == "retrieval_cand" else CONFIG
+        )
+        out.append(_recsys_cell(
+            "two-tower-retrieval", shape_name, cell_cfg, SMOKE, kind, make_step,
+            R.twotower_init,
+            lambda cfg, s, _k=kind, _n=shape_name: _batch_struct(cfg, s, _k, _n),
+            lambda cfg, s, rng, _k=kind, _n=shape_name: _make_batch(cfg, s, rng, _k, _n),
+            donate=donate,
+        ))
+    return out

@@ -1,0 +1,3 @@
+"""SPFresh core: LIRE protocol, SPANN-style index, NPA conditions."""
+from repro.core.index import SPFreshIndex, build_state  # noqa: F401
+from repro.core.types import IndexState, LireConfig, make_empty_state  # noqa: F401

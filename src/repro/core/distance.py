@@ -1,0 +1,62 @@
+"""Distance primitives shared by the whole index stack.
+
+All SPFresh math assumes a Euclidean space (the NPA necessary-condition proofs
+in paper §3.3 are Euclidean); squared L2 preserves the argmin/ordering so we
+never take square roots on hot paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# A value larger than any attainable squared distance for normalized data,
+# used to mask out invalid centroids/slots.  Finite so top-k stays stable.
+MASK_DISTANCE = jnp.float32(3.0e38)
+
+
+def squared_norms(x: Array) -> Array:
+    """Row-wise squared L2 norms, computed in f32."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=-1)
+
+
+def pairwise_sql2(q: Array, x: Array, x_sqn: Array | None = None) -> Array:
+    """Pairwise squared-L2 distances ``(m, n)`` between ``q (m,d)`` and ``x (n,d)``.
+
+    Uses the expansion ``‖q‖² − 2 qᵀx + ‖x‖²`` so the contraction runs on the
+    MXU as a single GEMM.  Accumulation is f32 regardless of storage dtype.
+    """
+    qf = q.astype(jnp.float32)
+    q_sqn = jnp.sum(qf * qf, axis=-1, keepdims=True)  # (m, 1)
+    if x_sqn is None:
+        x_sqn = squared_norms(x)
+    cross = jax.lax.dot_general(
+        qf,
+        x.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (m, n)
+    d = q_sqn - 2.0 * cross + x_sqn[None, :]
+    # Numerical guard: the expansion can go slightly negative.
+    return jnp.maximum(d, 0.0)
+
+
+def sql2(q: Array, x: Array) -> Array:
+    """Squared L2 between broadcastable ``q (..., d)`` and ``x (..., d)``."""
+    diff = q.astype(jnp.float32) - x.astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def masked_topk(
+    dists: Array, valid: Array, k: int
+) -> tuple[Array, Array]:
+    """Top-k *smallest* distances among ``valid`` entries.
+
+    Returns ``(dists (..., k), indices (..., k))``.  Invalid entries get
+    MASK_DISTANCE, so callers can detect "fewer than k valid" by comparing.
+    """
+    masked = jnp.where(valid, dists, MASK_DISTANCE)
+    neg_d, idx = jax.lax.top_k(-masked, k)
+    return -neg_d, idx

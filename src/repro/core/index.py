@@ -1,0 +1,341 @@
+"""SPFreshIndex — the user-facing index object.
+
+Composition (paper Fig. 5):
+  * offline build      — SPANN hierarchical balanced clustering + closure
+                         replication (host-driven, §3.1);
+  * foreground Updater — `insert`/`delete` (jitted `lire.insert_batch` /
+                         `lire.delete_batch`), WAL-logged;
+  * background Local Rebuilder — `maintain()` drains split/merge/reassign
+                         jobs (jitted `lire.maintenance_step`);
+  * Searcher           — `search()`;
+  * crash recovery     — `snapshot()` / `restore()` = snapshot + WAL replay.
+
+The wrapper is a thin *host* convenience: all state transitions are the
+functional ops in `repro.core.lire`; distributed execution wraps those same
+ops in shard_map (see `repro.distributed.sharded_index`).
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lire
+from repro.core.clustering import hierarchical_balanced_kmeans
+from repro.core.distance import pairwise_sql2
+from repro.core.types import IndexState, LireConfig, make_empty_state
+from repro.storage.snapshot import load_snapshot, save_snapshot, snapshot_exists
+from repro.storage.wal import WriteAheadLog, iter_wal
+
+_INSERT_CHUNK = 256
+_QUERY_CHUNK = 64
+
+
+def _build_routing(
+    vectors: np.ndarray,
+    centroids: np.ndarray,
+    assign: np.ndarray,
+    cfg: LireConfig,
+    chunk: int = 8192,
+) -> list[list[int]]:
+    """Vector → posting membership lists: primary (from the clustering) plus
+    SPANN closure replicas (top-R centroids within the replica_rng ratio)."""
+    n = vectors.shape[0]
+    p = centroids.shape[0]
+    members: list[list[int]] = [[] for _ in range(p)]
+    for i in range(n):
+        members[int(assign[i])].append(i)
+
+    if cfg.replica_count > 1 and p > 1:
+        r = min(cfg.replica_count, p)
+        cen = jnp.asarray(centroids, jnp.float32)
+        factor = float(cfg.replica_rng) ** 2
+        cap = cfg.posting_capacity
+        for start in range(0, n, chunk):
+            xs = jnp.asarray(vectors[start : start + chunk], jnp.float32)
+            d = pairwise_sql2(xs, cen)
+            neg_d, idx = jax.lax.top_k(-d, r)
+            dists = np.asarray(-neg_d)
+            idx = np.asarray(idx)
+            for row in range(idx.shape[0]):
+                vid = start + row
+                dmin = dists[row, 0]
+                for j in range(r):
+                    pid = int(idx[row, j])
+                    if pid == int(assign[vid]):
+                        continue
+                    if dists[row, j] <= factor * dmin and len(members[pid]) < cap:
+                        members[pid].append(vid)
+    return members
+
+
+def build_state(
+    cfg: LireConfig,
+    vectors: np.ndarray,
+    *,
+    seed: int = 0,
+    build_posting_size: int | None = None,
+) -> IndexState:
+    """Offline SPANN-style build → a ready IndexState (host-constructed)."""
+    cfg.validate()
+    vectors = np.asarray(vectors, np.float32)
+    n, d = vectors.shape
+    assert d == cfg.dim, (d, cfg.dim)
+    assert n <= cfg.num_vectors_cap
+
+    target = build_posting_size or max(cfg.merge_limit + 1, int(cfg.split_limit * 0.6))
+    centroids, assign = hierarchical_balanced_kmeans(
+        vectors, max_posting_size=target, seed=seed
+    )
+    p = centroids.shape[0]
+    if p > cfg.num_postings_cap:
+        raise ValueError(
+            f"build produced {p} postings > cap {cfg.num_postings_cap}; "
+            "raise num_postings_cap or split_limit"
+        )
+    members = _build_routing(vectors, centroids, assign, cfg)
+
+    bs, mb = cfg.block_size, cfg.max_blocks_per_posting
+    cap = cfg.posting_capacity
+    blocks = np.zeros((cfg.num_blocks, bs, d), np.dtype(cfg.vector_dtype))
+    block_vid = np.full((cfg.num_blocks, bs), -1, np.int32)
+    block_ver = np.zeros((cfg.num_blocks, bs), np.uint8)
+    posting_blocks = np.full((cfg.num_postings_cap, mb), -1, np.int32)
+    posting_len = np.zeros((cfg.num_postings_cap,), np.int32)
+
+    next_block = 0
+    for pid in range(p):
+        mem = members[pid][:cap]
+        posting_len[pid] = len(mem)
+        nb = math.ceil(len(mem) / bs) if mem else 0
+        if next_block + nb > cfg.num_blocks:
+            raise ValueError("num_blocks too small for the build")
+        for b in range(nb):
+            bid = next_block
+            next_block += 1
+            posting_blocks[pid, b] = bid
+            rows = mem[b * bs : (b + 1) * bs]
+            blocks[bid, : len(rows)] = vectors[rows]
+            block_vid[bid, : len(rows)] = rows
+
+    state = make_empty_state(cfg, seed=seed)
+    # free block stack: unused blocks
+    free_blocks = np.arange(next_block, cfg.num_blocks, dtype=np.int32)
+    free_stack = np.zeros((cfg.num_blocks,), np.int32)
+    free_stack[: free_blocks.size] = free_blocks
+    # free pid stack: unused pids
+    free_pids = np.arange(p, cfg.num_postings_cap, dtype=np.int32)
+    pid_stack = np.zeros((cfg.num_postings_cap,), np.int32)
+    pid_stack[: free_pids.size] = free_pids
+
+    cen = np.zeros((cfg.num_postings_cap, d), np.float32)
+    cen[:p] = centroids
+    cvalid = np.zeros((cfg.num_postings_cap,), bool)
+    cvalid[:p] = True
+
+    pool = state.pool.replace(
+        blocks=jnp.asarray(blocks),
+        block_vid=jnp.asarray(block_vid),
+        block_ver=jnp.asarray(block_ver),
+        posting_blocks=jnp.asarray(posting_blocks),
+        posting_len=jnp.asarray(posting_len),
+        free_stack=jnp.asarray(free_stack),
+        free_top=jnp.asarray(free_blocks.size, jnp.int32),
+    )
+    return state.replace(
+        pool=pool,
+        centroids=jnp.asarray(cen),
+        centroid_sqn=jnp.asarray(np.sum(cen * cen, axis=-1)),
+        centroid_valid=jnp.asarray(cvalid),
+        pid_free_stack=jnp.asarray(pid_stack),
+        pid_free_top=jnp.asarray(free_pids.size, jnp.int32),
+    )
+
+
+def _pad_to(x: np.ndarray, size: int, fill=0) -> np.ndarray:
+    pad = size - x.shape[0]
+    if pad <= 0:
+        return x
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(x, width, constant_values=fill)
+
+
+class SPFreshIndex:
+    """Stateful host wrapper over the functional LIRE ops."""
+
+    def __init__(self, state: IndexState, wal_path: str | None = None):
+        self.state = state
+        self.wal = WriteAheadLog(wal_path) if wal_path else None
+        self._wal_applied = self.wal.next_seqno - 1 if self.wal else -1
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        cfg: LireConfig,
+        vectors: np.ndarray,
+        *,
+        seed: int = 0,
+        wal_path: str | None = None,
+    ) -> "SPFreshIndex":
+        return cls(build_state(cfg, vectors, seed=seed), wal_path=wal_path)
+
+    # ---------------------------- Updater -----------------------------
+    def insert(
+        self,
+        vecs: np.ndarray,
+        vids: np.ndarray,
+        *,
+        log: bool = True,
+        max_retries: int = 4,
+    ) -> None:
+        """Foreground insert with pipeline backpressure.
+
+        When a primary append hits a posting at hard capacity, we run the
+        Local Rebuilder (which splits the oversized posting) and retry the
+        unlanded vectors — the explicit-backpressure form of the paper's
+        Updater→Rebuilder feed-forward pipeline.
+        """
+        vecs = np.asarray(vecs, np.float32)
+        vids = np.asarray(vids, np.int32)
+        if log and self.wal is not None:
+            self._wal_applied = self.wal.append(
+                "insert", {"vecs": vecs, "vids": vids}
+            )
+        for s in range(0, len(vids), _INSERT_CHUNK):
+            v = vecs[s : s + _INSERT_CHUNK]
+            i = vids[s : s + _INSERT_CHUNK]
+            for attempt in range(max_retries + 1):
+                nvalid = len(i)
+                if nvalid == 0:
+                    break
+                vp = _pad_to(v, _INSERT_CHUNK)
+                ip = _pad_to(i, _INSERT_CHUNK, fill=-1)
+                valid = np.arange(_INSERT_CHUNK) < nvalid
+                self.state, landed = lire.insert_batch(
+                    self.state, jnp.asarray(vp), jnp.asarray(ip), jnp.asarray(valid)
+                )
+                landed = np.asarray(landed)[:nvalid]
+                if landed.all() or attempt == max_retries:
+                    break
+                # Backpressure: let the rebuilder split the full posting(s).
+                self.maintain()
+                v, i = v[~landed], i[~landed]
+
+    def delete(self, vids: np.ndarray, *, log: bool = True) -> None:
+        vids = np.asarray(vids, np.int32)
+        if log and self.wal is not None:
+            self._wal_applied = self.wal.append("delete", {"vids": vids})
+        for s in range(0, len(vids), _INSERT_CHUNK):
+            i = vids[s : s + _INSERT_CHUNK]
+            nvalid = len(i)
+            i = _pad_to(i, _INSERT_CHUNK, fill=-1)
+            valid = np.arange(_INSERT_CHUNK) < nvalid
+            self.state = lire.delete_batch(
+                self.state, jnp.asarray(i), jnp.asarray(valid)
+            )
+
+    # ------------------------- Local Rebuilder -------------------------
+    def maintain(self, max_steps: int | None = None) -> int:
+        """Drain split/merge/reassign jobs; returns steps executed."""
+        self.state, steps = lire.rebuild_drain(self.state, max_steps)
+        return steps
+
+    # ---------------------------- Searcher -----------------------------
+    def search(
+        self, queries: np.ndarray, k: int, *, nprobe: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, np.float32)
+        nq = queries.shape[0]
+        out_d, out_v = [], []
+        for s in range(0, nq, _QUERY_CHUNK):
+            q = _pad_to(queries[s : s + _QUERY_CHUNK], _QUERY_CHUNK)
+            d, v = lire.search(
+                self.state, jnp.asarray(q), k=k,
+                nprobe=nprobe or self.state.cfg.nprobe,
+            )
+            out_d.append(np.asarray(d))
+            out_v.append(np.asarray(v))
+        d = np.concatenate(out_d)[:nq]
+        v = np.concatenate(out_v)[:nq]
+        return d, v
+
+    # ------------------------- Crash recovery --------------------------
+    def snapshot(self, path: str) -> None:
+        save_snapshot(
+            path, self.state, extra={"wal_seqno": self._wal_applied}
+        )
+        if self.wal is not None:
+            self.wal.truncate()
+
+    @classmethod
+    def restore(
+        cls,
+        path: str,
+        cfg: LireConfig,
+        *,
+        wal_path: str | None = None,
+    ) -> "SPFreshIndex":
+        """Latest snapshot + WAL replay (paper §4.4)."""
+        template = make_empty_state(cfg)
+        if snapshot_exists(path):
+            state, manifest = load_snapshot(path, template)
+            after = manifest["extra"].get("wal_seqno", -1)
+        else:
+            state, after = template, -1
+        idx = cls.__new__(cls)
+        idx.state = state
+        idx.wal = None
+        idx._wal_applied = after
+        if wal_path and os.path.exists(wal_path):
+            for rec in iter_wal(wal_path, after_seqno=after):
+                if rec.op == "insert":
+                    idx.insert(rec.payload["vecs"], rec.payload["vids"], log=False)
+                elif rec.op == "delete":
+                    idx.delete(rec.payload["vids"], log=False)
+                idx._wal_applied = rec.seqno
+        if wal_path:
+            idx.wal = WriteAheadLog(wal_path)
+        return idx
+
+    # ---------------------------- Accounting ---------------------------
+    def stats(self) -> dict:
+        s = self.state.stats
+        out = {
+            k: int(getattr(s, k))
+            for k in (
+                "n_inserts", "n_deletes", "n_appends", "n_append_drops",
+                "n_splits", "n_gc_writebacks", "n_merges",
+                "n_reassign_checked", "n_reassign_candidates",
+                "n_reassigned", "n_reassign_overflow",
+            )
+        }
+        out["n_postings"] = int(self.state.n_postings)
+        out["used_blocks"] = int(
+            self.state.pool.num_blocks_cap - self.state.pool.free_top
+        )
+        return out
+
+    def memory_bytes(self) -> dict:
+        """Resource accounting analogous to paper Fig. 7(d): what must sit in
+        'DRAM' (centroids + mappings + versions) vs 'disk' (block payloads)."""
+        st = self.state
+        in_mem = (
+            st.centroids.size * 4
+            + st.centroid_sqn.size * 4
+            + st.centroid_valid.size
+            + st.versions.size
+            + st.pool.posting_blocks.size * 4
+            + st.pool.posting_len.size * 4
+            + st.pool.free_stack.size * 4
+            + st.pid_free_stack.size * 4
+        )
+        on_disk = (
+            st.pool.blocks.size * st.pool.blocks.dtype.itemsize
+            + st.pool.block_vid.size * 4
+            + st.pool.block_ver.size
+        )
+        return {"memory": in_mem, "disk": on_disk}

@@ -1,0 +1,606 @@
+"""LIRE protocol operations — paper §3 + §4.2.
+
+External interface: :func:`insert_batch`, :func:`delete_batch`,
+:func:`search`.  Internal (Local Rebuilder): :func:`split_posting`,
+:func:`merge_posting`, :func:`maintenance_step`.
+
+Every op is a jittable, fixed-shape functional state transition.  Branchy
+protocol logic is expressed with ``enable`` masks threaded through the
+storage ops, so a maintenance step is constant work regardless of whether a
+job fires (the TPU idiom for the paper's background job queue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import npa
+from repro.core.clustering import balanced_two_means
+from repro.core.distance import MASK_DISTANCE, masked_topk, pairwise_sql2, sql2
+from repro.core.types import (
+    IndexState,
+    LireStats,
+    alloc_pid,
+    bump_stat,
+    free_pid,
+    set_centroid,
+)
+from repro.storage import blockpool as bp
+from repro.storage import versionmap as vm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Centroid navigation (the SPTAG replacement: dense GEMM + top-k)
+# ---------------------------------------------------------------------------
+
+def navigate(state: IndexState, queries: Array, nprobe: int) -> tuple[Array, Array]:
+    """Nearest-``nprobe`` valid posting centroids for each query.
+
+    Returns ``(dists (Q, nprobe), pids (Q, nprobe))``; invalid slots have
+    MASK_DISTANCE.  With ``cfg.use_pallas_nav`` the fused Pallas ``l2_topk``
+    kernel runs (TPU target; interpret mode on CPU); the pure-XLA GEMM +
+    masked top-k below is the oracle and the default CPU path.
+    """
+    if state.cfg.use_pallas_nav:
+        from repro.kernels.l2_topk.ops import l2_topk
+
+        d, idx = l2_topk(
+            queries, state.centroids, state.centroid_valid, k=nprobe,
+            interpret=state.cfg.pallas_interpret,
+        )
+        d = jnp.where(idx >= 0, d, MASK_DISTANCE)
+        return d, idx
+    d = pairwise_sql2(queries, state.centroids, state.centroid_sqn)
+    return masked_topk(d, state.centroid_valid[None, :], nprobe)
+
+
+def route(
+    state: IndexState, vecs: Array, r: int
+) -> tuple[Array, Array, Array]:
+    """Insert/reassign routing: top-``r`` centroids + closure-replica mask.
+
+    A vector is replicated into posting ``i`` iff
+    ``d_i <= replica_rng^2 * d_min`` (SPANN closure rule, squared-L2 form).
+    Returns ``(pids (B, r), dists (B, r), replica_ok (B, r))``.
+    """
+    dists, pids = navigate(state, vecs, r)
+    dmin = dists[:, :1]
+    factor = jnp.float32(state.cfg.replica_rng) ** 2
+    replica_ok = (dists <= factor * dmin) & (dists < MASK_DISTANCE / 2)
+    return pids, dists, replica_ok
+
+
+# ---------------------------------------------------------------------------
+# External interface: Insert / Delete (the foreground Updater, §4.1)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def insert_batch(
+    state: IndexState, vecs: Array, vids: Array, valid: Array
+) -> tuple[IndexState, Array]:
+    """Foreground insert: route to nearest posting(s), append at tail.
+
+    O(1) per append (tail-block write) — splits are *not* done here; the
+    background rebuilder discovers oversized postings by length scan.
+
+    Returns ``(state, landed (B,))`` — ``landed`` is False when even the
+    *primary* (nearest-posting) append failed because the posting is at hard
+    capacity; the host Updater applies backpressure: run maintenance (which
+    splits the oversized posting) and retry.  This is the feed-forward
+    pipeline of paper §4.2 with explicit backpressure instead of threads.
+    """
+    cfg = state.cfg
+
+    # (Re)activate the id: clear deletion bit, keep version counter.
+    # Disabled rows scatter to the scratch slot (duplicate-index hazard).
+    idx = vm._targets(state.versions, vids, valid)
+    cur = state.versions[idx]
+    cleared = cur & vm.VERSION_MASK
+    versions = state.versions.at[idx].set(cleared)
+    state = state.replace(versions=versions)
+
+    pids, _, replica_ok = route(state, vecs, cfg.replica_count)
+    enable = valid[:, None] & replica_ok  # (B, R)
+
+    flat_pids = pids.reshape(-1)
+    flat_enable = enable.reshape(-1)
+    flat_vecs = jnp.repeat(vecs, cfg.replica_count, axis=0)
+    flat_vids = jnp.repeat(vids, cfg.replica_count)
+    flat_vers = jnp.repeat(cleared, cfg.replica_count)
+
+    pool, oks = bp.append_batch(
+        state.pool,
+        jnp.maximum(flat_pids, 0),
+        flat_vecs,
+        flat_vids,
+        flat_vers,
+        flat_enable & (flat_pids >= 0),
+    )
+    oks2 = oks.reshape(-1, cfg.replica_count)
+    landed = oks2[:, 0] | ~valid  # primary append succeeded (or not requested)
+    stats = state.stats
+    stats = bump_stat(stats, "n_inserts", jnp.sum(valid))
+    stats = bump_stat(stats, "n_appends", jnp.sum(oks))
+    stats = bump_stat(
+        stats, "n_append_drops", jnp.sum(flat_enable & (flat_pids >= 0)) - jnp.sum(oks)
+    )
+    return state.replace(pool=pool, stats=stats, step=state.step + 1), landed
+
+
+@jax.jit
+def delete_batch(state: IndexState, vids: Array, valid: Array) -> IndexState:
+    """Tombstone delete (paper: one thread suffices — it's a bit set)."""
+    versions = vm.mark_deleted(state.versions, jnp.maximum(vids, 0), valid)
+    stats = bump_stat(state.stats, "n_deletes", jnp.sum(valid))
+    return state.replace(versions=versions, stats=stats, step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# Search (the SPANN searcher over versioned postings)
+# ---------------------------------------------------------------------------
+
+def _dedup_topk_1d(
+    dists: Array, vids: Array, live: Array, k: int
+) -> tuple[Array, Array]:
+    """Top-k smallest with duplicate-vid suppression (replicas!).
+
+    Sort by (vid primary, dist secondary); keep first occurrence of each vid;
+    then masked top-k.
+    """
+    order = jnp.lexsort((dists, vids))
+    sv = vids[order]
+    sl = live[order]
+    sd = dists[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sv[1:] != sv[:-1]]
+    )
+    keep = first & sl
+    top_d, sel = masked_topk(sd, keep, k)
+    out_vids = jnp.where(top_d < MASK_DISTANCE / 2, sv[sel], -1)
+    return top_d, out_vids
+
+
+def _scan_probe_chunk(
+    state: IndexState, queries: Array, pids: Array, probe_valid: Array
+) -> tuple[Array, Array, Array]:
+    """Score one chunk of probed postings.  queries (Q, d); pids (Q, c).
+    Returns (dists (Q, c*cap), vids, live)."""
+    cfg = state.cfg
+    q, c = pids.shape
+    cap = cfg.posting_capacity
+    flat_pids = jnp.maximum(pids.reshape(-1), 0)
+    vecs, vids, vers, slot_valid = bp.parallel_get(state.pool, flat_pids)
+    stale = vm.is_stale(state.versions, vids, vers)
+    live = slot_valid & ~stale & probe_valid.reshape(-1)[:, None]
+    vecs = vecs.reshape(q, c * cap, -1)
+    vids = vids.reshape(q, c * cap)
+    live = live.reshape(q, c * cap)
+    # scan math in cfg.scan_dtype (bf16 on TPU) with f32 accumulation —
+    # halves the upcast traffic of int8 payloads (§Perf spfresh iter 2)
+    sd = jnp.dtype(cfg.scan_dtype)
+    qv = queries.astype(sd)
+    xv = vecs.astype(sd)
+    diff = qv[:, None, :] - xv
+    dists = jnp.sum(
+        (diff * diff).astype(jnp.float32), axis=-1
+    )
+    return dists, vids, live
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "probe_chunk"))
+def search(
+    state: IndexState,
+    queries: Array,
+    *,
+    k: int,
+    nprobe: int | None = None,
+    probe_chunk: int = 0,
+) -> tuple[Array, Array]:
+    """ANN search: centroid navigation → posting scan → dedup top-k.
+
+    Returns ``(dists (Q, k), vids (Q, k))``; missing results are ``-1`` with
+    MASK_DISTANCE.  ``nprobe`` is the latency-budget knob (the paper's 10 ms
+    hard cut becomes a fixed candidate budget under jit).
+
+    ``probe_chunk > 0`` processes the probed postings in chunks with a
+    running candidate set (the flash-style streaming scan): the gather
+    buffer is O(Q · chunk · cap · d) instead of O(Q · nprobe · cap · d),
+    which is what makes billion-scale nprobe=64 scans fit in HBM.  On TPU
+    the Pallas ``posting_scan`` kernel fuses this gather+distance entirely.
+    """
+    cfg = state.cfg
+    nprobe = cfg.nprobe if nprobe is None else nprobe
+    q = queries.shape[0]
+    cap = cfg.posting_capacity
+
+    nav_d, pids = navigate(state, queries, nprobe)  # (Q, nprobe)
+    probe_valid = nav_d < MASK_DISTANCE / 2
+
+    if probe_chunk <= 0 or nprobe % probe_chunk != 0 or nprobe == probe_chunk:
+        dists, vids, live = _scan_probe_chunk(state, queries, pids, probe_valid)
+        return jax.vmap(lambda d, v, m: _dedup_topk_1d(d, v, m, k))(
+            dists, vids, live
+        )
+
+    nc = nprobe // probe_chunk
+    keep = min(max(4 * k, 64), probe_chunk * cap)
+    pids_c = pids.reshape(q, nc, probe_chunk).transpose(1, 0, 2)
+    pvalid_c = probe_valid.reshape(q, nc, probe_chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        best_d, best_v = carry  # (Q, keep)
+        pc, vc = inp
+        d, v, live = _scan_probe_chunk(state, queries, pc, vc)
+        d = jnp.where(live, d, MASK_DISTANCE)
+        cat_d = jnp.concatenate([best_d, d], axis=1)
+        cat_v = jnp.concatenate([best_v, v], axis=1)
+        neg, sel = jax.lax.top_k(-cat_d, keep)
+        return (-neg, jnp.take_along_axis(cat_v, sel, axis=1)), None
+
+    init = (
+        jnp.full((q, keep), MASK_DISTANCE, jnp.float32),
+        jnp.full((q, keep), -1, jnp.int32),
+    )
+    (best_d, best_v), _ = jax.lax.scan(body, init, (pids_c, pvalid_c))
+    live = best_d < MASK_DISTANCE / 2
+    return jax.vmap(lambda d, v, m: _dedup_topk_1d(d, v, m, k))(
+        best_d, best_v, live
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reassignment execution (shared by split and merge)
+# ---------------------------------------------------------------------------
+
+def _execute_reassigns(
+    state: IndexState,
+    cand_vecs: Array,   # (C, d)
+    cand_vids: Array,   # (C,)
+    cand_cur_pid: Array,  # (C,) posting the candidate currently lives in
+    cand_mask: Array,   # (C,) passed the necessary conditions
+) -> IndexState:
+    """Paper §3.3 final stage: per candidate, search the new closest posting,
+    NPA-recheck to drop false positives, then version-bump + re-append.
+
+    Candidates are compacted to ``reassign_budget`` rows (overflow counted —
+    the paper reports ~79 actual reassigns out of ~5094 evaluated, so the
+    budget is generous).
+    """
+    cfg = state.cfg
+    c = cand_vecs.shape[0]
+    budget = min(cfg.reassign_budget, c)
+
+    # --- compact to budget ---
+    order = jnp.argsort(~cand_mask, stable=True)  # True (mask) rows first
+    take = order[:budget]
+    vecs = cand_vecs[take]
+    vids = cand_vids[take]
+    cur_pid = cand_cur_pid[take]
+    mask = cand_mask[take]
+    n_cand = jnp.sum(cand_mask)
+    overflow = jnp.maximum(n_cand - budget, 0)
+
+    # --- dedup same vid within the batch (concurrent-reassign CAS analogue) ---
+    same = (vids[:, None] == vids[None, :]) & (
+        jnp.arange(budget)[:, None] > jnp.arange(budget)[None, :]
+    )
+    dup = jnp.any(same & mask[None, :], axis=1)
+    mask = mask & ~dup
+    # Deleted/stale ids never get reassigned (they get GC'd instead).
+    mask = mask & ~vm.is_deleted(state.versions, jnp.maximum(vids, 0)) & (vids >= 0)
+
+    # --- NPA re-check: find the true nearest posting now ---
+    pids, dists, replica_ok = route(state, vecs, cfg.replica_count)
+    nearest = pids[:, 0]
+    # False-positive filter (paper: "if a vector actually does not need
+    # reassignment, the reassign operation is aborted"): if a LIVE replica of
+    # this vid already sits in the nearest posting, NPA is satisfied.
+    safe_vids = jnp.maximum(vids, 0)
+    cur_ver = state.versions[safe_vids] & vm.VERSION_MASK
+    t_vids, t_vers, t_valid = jax.vmap(
+        lambda p: bp.gather_posting_ids(state.pool, p)
+    )(jnp.maximum(nearest, 0))  # (budget, cap)
+    replica_there = jnp.any(
+        (t_vids == vids[:, None])
+        & t_valid
+        & ((t_vers & vm.VERSION_MASK) == cur_ver[:, None]),
+        axis=-1,
+    )
+    need = mask & (nearest >= 0) & (nearest != cur_pid) & ~replica_there
+
+    # --- append fresh replicas at the new homes with a TENTATIVE version ---
+    # The version map is only bumped if the primary append lands; otherwise
+    # the old replicas stay live (no data loss when the target is full) and
+    # the tentative appends are stale garbage, GC'd by the next split.
+    tentative_ver = (cur_ver + 1) & vm.VERSION_MASK
+    enable = need[:, None] & replica_ok & (pids >= 0)
+    flat_pids = jnp.maximum(pids.reshape(-1), 0)
+    flat_enable = enable.reshape(-1)
+    flat_vecs = jnp.repeat(vecs, cfg.replica_count, axis=0)
+    flat_vids = jnp.repeat(vids, cfg.replica_count)
+    flat_vers = jnp.repeat(tentative_ver, cfg.replica_count)
+    pool, oks = bp.append_batch(
+        state.pool, flat_pids, flat_vecs, flat_vids, flat_vers, flat_enable
+    )
+    landed = oks.reshape(-1, cfg.replica_count)[:, 0]
+    commit = need & landed
+    versions = vm.bump_version(state.versions, safe_vids, commit)
+    state = state.replace(versions=versions)
+
+    stats = state.stats
+    stats = bump_stat(stats, "n_reassign_candidates", n_cand)
+    stats = bump_stat(stats, "n_reassign_overflow", overflow)
+    stats = bump_stat(stats, "n_reassigned", jnp.sum(commit))
+    stats = bump_stat(stats, "n_appends", jnp.sum(oks))
+    stats = bump_stat(
+        stats, "n_append_drops", jnp.sum(flat_enable) - jnp.sum(oks)
+    )
+    return state.replace(pool=pool, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Split (Local Rebuilder job, §4.2.1)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def split_posting(
+    state: IndexState, pid: Array, enable: Array
+) -> tuple[IndexState, Array]:
+    """Split job: GC the posting; if still oversized, balanced-2-means split,
+    then LIRE reassignment over the split + ``reassign_range`` neighbors.
+
+    Returns ``(state, acted)`` where acted covers both GC-writeback and true
+    splits.
+    """
+    cfg = state.cfg
+    cap = cfg.posting_capacity
+    pid = jnp.asarray(pid, jnp.int32)
+    enable = enable & (pid >= 0) & state.centroid_valid[jnp.maximum(pid, 0)]
+    safe_pid = jnp.maximum(pid, 0)
+
+    vecs, vids, vers, valid = bp.gather_posting(state.pool, safe_pid)
+    live = valid & ~vm.is_stale(state.versions, vids, vers)
+    n_live = jnp.sum(live)
+    cur_len = state.pool.posting_len[safe_pid]
+    cur_ver = state.versions[jnp.maximum(vids, 0)] & vm.VERSION_MASK
+
+    # ---- Case A: garbage-collection write-back resolves the job ----
+    gc_wb = enable & (n_live <= cfg.split_limit) & (n_live < cur_len)
+    order_live = jnp.argsort(~live, stable=True)
+    pool, _ = bp.put_posting(
+        state.pool,
+        safe_pid,
+        vecs[order_live],
+        vids[order_live],
+        cur_ver[order_live],
+        n_live,
+        gc_wb,
+    )
+    state = state.replace(pool=pool)
+
+    # ---- Case B: real split ----
+    want_split = enable & (n_live > cfg.split_limit)
+    if not cfg.enable_split:
+        want_split = jnp.asarray(False)
+    rng, sub = jax.random.split(state.rng)
+    state = state.replace(rng=rng)
+    new_centroids, assign = balanced_two_means(
+        sub, vecs.astype(jnp.float32), live, iters=cfg.kmeans_iters
+    )
+
+    state, pid1 = alloc_pid(state, want_split)
+    state, pid2 = alloc_pid(state, want_split)
+    ok = want_split & (pid1 >= 0) & (pid2 >= 0)
+    # Roll back a half-successful allocation.
+    state = free_pid(state, pid1, want_split & ~ok)
+    state = free_pid(state, pid2, want_split & ~ok)
+
+    old_centroid = state.centroids[safe_pid]
+
+    # Retire the old posting (blocks + centroid + id).
+    pool = bp.free_posting(state.pool, safe_pid, ok)
+    state = state.replace(pool=pool)
+    state = free_pid(state, pid, ok)
+
+    # Write the two halves.
+    in0 = live & (assign == 0)
+    in1 = live & (assign == 1)
+    n0 = jnp.sum(in0)
+    n1 = jnp.sum(in1)
+    order0 = jnp.argsort(~in0, stable=True)
+    order1 = jnp.argsort(~in1, stable=True)
+    pool, ok_put0 = bp.put_posting(
+        state.pool, jnp.maximum(pid1, 0), vecs[order0], vids[order0],
+        cur_ver[order0], n0, ok,
+    )
+    pool, ok_put1 = bp.put_posting(
+        pool, jnp.maximum(pid2, 0), vecs[order1], vids[order1],
+        cur_ver[order1], n1, ok,
+    )
+    state = state.replace(pool=pool)
+    state = set_centroid(state, pid1, new_centroids[0], ok)
+    state = set_centroid(state, pid2, new_centroids[1], ok)
+
+    # ---- Reassignment (the heart of LIRE) ----
+    # Neighbors: reassign_range nearest postings to the *old* centroid,
+    # excluding the two freshly created ones.
+    nb_d = pairwise_sql2(
+        old_centroid[None, :], state.centroids, state.centroid_sqn
+    )[0]
+    nb_valid_mask = state.centroid_valid & (
+        jnp.arange(cfg.num_postings_cap) != jnp.maximum(pid1, 0)
+    ) & (jnp.arange(cfg.num_postings_cap) != jnp.maximum(pid2, 0))
+    nb_dist, nb_pids = masked_topk(
+        nb_d[None, :], nb_valid_mask[None, :], cfg.reassign_range
+    )
+    nb_pids = nb_pids[0]
+    nb_ok = (nb_dist[0] < MASK_DISTANCE / 2)
+
+    nvecs, nvids, nvers, nvalid = bp.parallel_get(
+        state.pool, jnp.maximum(nb_pids, 0)
+    )  # (RR, cap, ...)
+    nlive = nvalid & ~vm.is_stale(state.versions, nvids, nvers)
+    nlive = nlive & nb_ok[:, None]
+
+    flat_nvecs = nvecs.reshape(-1, cfg.dim)
+    flat_nvids = nvids.reshape(-1)
+    flat_nlive = nlive.reshape(-1)
+    flat_ncur = jnp.repeat(nb_pids, cap)
+
+    # Eq. (2) for neighbor vectors; Eq. (1) for the split posting's vectors.
+    eq2 = npa.split_neighbor_candidates(
+        flat_nvecs.astype(jnp.float32), old_centroid, new_centroids
+    )
+    eq1 = npa.split_old_posting_candidates(
+        vecs.astype(jnp.float32), old_centroid, new_centroids
+    )
+    own_cur = jnp.where(assign == 0, jnp.maximum(pid1, 0), jnp.maximum(pid2, 0))
+
+    cand_vecs = jnp.concatenate([vecs, flat_nvecs], axis=0)
+    cand_vids = jnp.concatenate([vids, flat_nvids], axis=0)
+    cand_cur = jnp.concatenate([own_cur, flat_ncur], axis=0)
+    cand_mask = jnp.concatenate(
+        [eq1 & live & ok, eq2 & flat_nlive & ok], axis=0
+    )
+
+    checked = jnp.where(ok, jnp.sum(live) + jnp.sum(flat_nlive), 0)
+    stats = bump_stat(state.stats, "n_reassign_checked", checked)
+    stats = bump_stat(stats, "n_splits", ok)
+    stats = bump_stat(stats, "n_gc_writebacks", gc_wb)
+    state = state.replace(stats=stats, step=state.step + 1)
+
+    if cfg.enable_reassign:
+        state = _execute_reassigns(
+            state, cand_vecs, cand_vids, cand_cur, cand_mask
+        )
+    return state, (ok | gc_wb)
+
+
+# ---------------------------------------------------------------------------
+# Merge (Local Rebuilder job, §3.2 / §4.2.1)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def merge_posting(
+    state: IndexState, pid: Array, enable: Array
+) -> tuple[IndexState, Array]:
+    """Merge job: append the undersized posting's live vectors into the
+    nearest posting that can hold them, delete its centroid, then run the
+    (neighbor-free) reassignment check over the moved vectors.
+    """
+    cfg = state.cfg
+    pid = jnp.asarray(pid, jnp.int32)
+    safe_pid = jnp.maximum(pid, 0)
+    enable = enable & (pid >= 0) & state.centroid_valid[safe_pid]
+
+    vecs, vids, vers, valid = bp.gather_posting(state.pool, safe_pid)
+    live = valid & ~vm.is_stale(state.versions, vids, vers)
+    n_live = jnp.sum(live)
+    enable = enable & (n_live < cfg.merge_limit)
+
+    # Nearest posting able to absorb us: try the 4 closest.
+    own_centroid = state.centroids[safe_pid]
+    d = pairwise_sql2(own_centroid[None, :], state.centroids, state.centroid_sqn)[0]
+    cand_mask = state.centroid_valid & (
+        jnp.arange(cfg.num_postings_cap) != safe_pid
+    )
+    cd, cpids = masked_topk(d[None, :], cand_mask[None, :], 4)
+    cd, cpids = cd[0], cpids[0]
+    fits = (cd < MASK_DISTANCE / 2) & (
+        state.pool.posting_len[jnp.maximum(cpids, 0)] + n_live
+        <= cfg.posting_capacity
+    )
+    any_fit = jnp.any(fits)
+    first_fit = jnp.argmax(fits)  # first True
+    target = jnp.where(any_fit, cpids[first_fit], -1)
+    do = enable & any_fit & (n_live > 0)
+    # Empty postings are simply retired.
+    retire_empty = enable & (n_live == 0)
+
+    cur_ver = state.versions[jnp.maximum(vids, 0)] & vm.VERSION_MASK
+    pool, oks = bp.append_batch(
+        state.pool,
+        jnp.full_like(vids, jnp.maximum(target, 0)),
+        vecs,
+        vids,
+        cur_ver,
+        live & do,
+    )
+    state = state.replace(pool=pool)
+
+    # Retire the merged-away posting — only if every live vector actually
+    # landed in the target (pool OOM mid-merge must not lose vectors).
+    all_moved = jnp.all(oks == (live & do))
+    do = do & all_moved
+    gone = do | retire_empty
+    pool = bp.free_posting(state.pool, safe_pid, gone)
+    state = state.replace(pool=pool)
+    state = free_pid(state, pid, gone)
+
+    # Reassign check over moved vectors only (no neighbor scan for merges).
+    state = state.replace(
+        stats=bump_stat(
+            bump_stat(state.stats, "n_merges", do),
+            "n_reassign_checked", jnp.where(do, n_live, 0),
+        ),
+        step=state.step + 1,
+    )
+    cand_cur = jnp.full_like(vids, jnp.maximum(target, 0))
+    if cfg.enable_reassign:
+        state = _execute_reassigns(state, vecs, vids, cand_cur, live & do)
+    return state, gone
+
+
+# ---------------------------------------------------------------------------
+# Maintenance driver (the Local Rebuilder queue, discovered by length scan)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def maintenance_step(state: IndexState) -> tuple[IndexState, Array]:
+    """One background rebuild step: split the most oversized posting (if
+    any), merge the most undersized (if any).  Constant work; returns
+    ``(state, did_work)``.
+
+    The §3.4 convergence argument bounds how many steps a driver loop needs:
+    each split consumes a free posting id, so ``P_cap`` is a hard bound on
+    cascade length.
+    """
+    cfg = state.cfg
+    lens = state.pool.posting_len
+    valid = state.centroid_valid
+
+    split_scores = jnp.where(valid, lens, -1)
+    split_pid = jnp.argmax(split_scores).astype(jnp.int32)
+    want_split = split_scores[split_pid] > cfg.split_limit
+    state, split_acted = split_posting(state, split_pid, want_split)
+
+    merge_scores = jnp.where(
+        valid & (lens < cfg.merge_limit), lens, jnp.iinfo(jnp.int32).max
+    )
+    merge_pid = jnp.argmin(merge_scores).astype(jnp.int32)
+    want_merge = merge_scores[merge_pid] < cfg.merge_limit
+    if not cfg.enable_merge:
+        want_merge = jnp.asarray(False)
+    state, merge_acted = merge_posting(state, merge_pid, want_merge)
+
+    return state, (split_acted | merge_acted)
+
+
+def rebuild_drain(
+    state: IndexState, max_steps: int | None = None
+) -> tuple[IndexState, int]:
+    """Host-driven Local Rebuilder loop: run maintenance steps until
+    quiescent.  Bounded by the convergence proof (≤ P_cap splits possible).
+    """
+    limit = max_steps if max_steps is not None else 2 * state.cfg.num_postings_cap
+    steps = 0
+    for _ in range(limit):
+        state, did = maintenance_step(state)
+        steps += 1
+        if not bool(did):
+            break
+    return state, steps

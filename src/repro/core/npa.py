@@ -1,0 +1,52 @@
+"""NPA (Nearest Partition Assignment) necessary conditions — paper §3.3.
+
+After a split of posting with (deleted) centroid ``A_o`` into new centroids
+``A_1, A_2``:
+
+* Eq. (1): a vector ``v`` that lived in the old posting must be *checked* for
+  reassignment iff  ``D(v, A_o) <= D(v, A_i)  for all i in {1,2}``.
+* Eq. (2): a vector ``v`` living in a nearby posting ``B`` must be *checked*
+  iff             ``D(v, A_i) <= D(v, A_o)  for some i in {1,2}``.
+
+These are *necessary* conditions: they bound the candidate set; the actual
+reassignment does a full nearest-posting search afterwards (false positives
+are dropped there).  Both are pure vectorized distance comparisons here.
+
+For a *merge* (old centroid deleted, vectors appended to a surviving posting)
+every vector of the deleted posting is a candidate (paper §3.3: "only vectors
+from deleted posting require reassignment").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distance import sql2
+
+Array = jax.Array
+
+
+def split_old_posting_candidates(
+    v: Array, old_centroid: Array, new_centroids: Array
+) -> Array:
+    """Eq. (1) over a batch ``v (n, d)``.
+
+    Returns bool ``(n,)`` — True when the vector must be *checked*.
+    ``new_centroids`` is ``(2, d)``.
+    """
+    d_old = sql2(v, old_centroid[None, :])  # (n,)
+    d_new = jax.vmap(lambda c: sql2(v, c[None, :]), out_axes=1)(new_centroids)
+    # (n, 2): distance to each new centroid
+    return jnp.all(d_old[:, None] <= d_new, axis=-1)
+
+
+def split_neighbor_candidates(
+    v: Array, old_centroid: Array, new_centroids: Array
+) -> Array:
+    """Eq. (2) over a batch ``v (n, d)`` of vectors in *nearby* postings.
+
+    Returns bool ``(n,)`` — True when the vector must be *checked*.
+    """
+    d_old = sql2(v, old_centroid[None, :])
+    d_new = jax.vmap(lambda c: sql2(v, c[None, :]), out_axes=1)(new_centroids)
+    return jnp.any(d_new <= d_old[:, None], axis=-1)

@@ -1,0 +1,187 @@
+"""Index state and protocol configuration for SPFresh/LIRE.
+
+Everything is fixed-capacity and functional: ``IndexState`` is a pytree whose
+static geometry (capacities, protocol thresholds) lives in a hashable
+``LireConfig`` aux field.  A LIRE operation is ``state' = op(state, ...)``
+under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.storage.blockpool import BlockPool, make_block_pool
+from repro.utils.tree import field, pytree_dataclass
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LireConfig:
+    """Static protocol + geometry parameters (hashable; pytree aux data)."""
+
+    dim: int = 128
+    # --- storage geometry ---
+    block_size: int = 16            # vectors per block ("SSD block")
+    max_blocks_per_posting: int = 8  # MB; posting capacity = BS*MB
+    num_blocks: int = 4096           # B_cap
+    num_postings_cap: int = 512      # P_cap
+    num_vectors_cap: int = 65536     # N_cap (version map size)
+    vector_dtype: str = "float32"    # storage dtype for posting payloads
+    scan_dtype: str = "float32"      # distance-scan compute dtype (f32 accum)
+    # --- LIRE protocol ---
+    split_limit: int = 96            # split when live length exceeds this
+    merge_limit: int = 12            # merge when 0 < live length below this
+    reassign_range: int = 8          # nearby postings scanned after a split (paper: 64)
+    reassign_budget: int = 256       # max vectors actually reassigned per job
+    replica_count: int = 4           # max closure replicas per vector (paper avg 5.47, max 8)
+    replica_rng: float = 1.15        # replicate while d <= rng^2 * d_min (squared-L2 ratio)
+    # --- search ---
+    nprobe: int = 8                  # postings probed per query (paper: 64)
+    # --- split clustering ---
+    kmeans_iters: int = 8
+    # --- protocol ablations (benchmarks: SPANN+ / +split / full LIRE) ---
+    enable_split: bool = True
+    enable_merge: bool = True
+    enable_reassign: bool = True
+    # --- kernel integration (TPU target; interpret=True executes on CPU) ---
+    use_pallas_nav: bool = False
+    pallas_interpret: bool = True
+
+    @property
+    def posting_capacity(self) -> int:
+        return self.block_size * self.max_blocks_per_posting
+
+    def validate(self) -> None:
+        assert self.split_limit <= self.posting_capacity, (
+            "split_limit must fit in a posting"
+        )
+        assert self.merge_limit < self.split_limit
+        assert self.replica_count >= 1
+        assert self.nprobe >= 1
+
+
+@pytree_dataclass
+class LireStats:
+    """Cumulative protocol counters (paper §5.2 reports these)."""
+
+    n_inserts: Array        # external insert requests
+    n_deletes: Array        # external delete requests
+    n_appends: Array        # physical appends (inserts × replicas + reassigns)
+    n_append_drops: Array   # appends dropped (posting/pool at capacity)
+    n_splits: Array         # split actions executed
+    n_gc_writebacks: Array  # split jobs resolved by GC-only write-back
+    n_merges: Array         # merge actions executed
+    n_reassign_checked: Array  # vectors evaluated by the NPA conditions
+    n_reassign_candidates: Array  # vectors passing the necessary conditions
+    n_reassigned: Array     # vectors actually reassigned (post NPA re-check)
+    n_reassign_overflow: Array  # candidates dropped by reassign_budget
+
+    @staticmethod
+    def zeros() -> "LireStats":
+        z = jnp.zeros((), jnp.int32)
+        return LireStats(*([z] * 11))
+
+
+@pytree_dataclass
+class IndexState:
+    cfg: LireConfig = field(static=True)
+    pool: BlockPool
+    centroids: Array        # (P_cap, d) f32
+    centroid_sqn: Array     # (P_cap,) f32 cached ||c||^2
+    centroid_valid: Array   # (P_cap,) bool
+    versions: Array         # (N_cap,) u8 — 7-bit version + deletion bit
+    pid_free_stack: Array   # (P_cap,) i32
+    pid_free_top: Array     # () i32
+    rng: Array              # PRNG key for split clustering
+    step: Array             # () i32 monotonically increasing op counter
+    next_vid: Array         # () i32 — local slot allocator (distributed insert)
+    stats: LireStats
+
+    @property
+    def n_postings(self) -> Array:
+        return jnp.sum(self.centroid_valid.astype(jnp.int32))
+
+
+def make_empty_state(cfg: LireConfig, seed: int = 0) -> IndexState:
+    cfg.validate()
+    dtype = jnp.dtype(cfg.vector_dtype)
+    pool = make_block_pool(
+        num_blocks=cfg.num_blocks,
+        block_size=cfg.block_size,
+        dim=cfg.dim,
+        num_postings_cap=cfg.num_postings_cap,
+        max_blocks_per_posting=cfg.max_blocks_per_posting,
+        dtype=dtype,
+    )
+    p = cfg.num_postings_cap
+    return IndexState(
+        cfg=cfg,
+        pool=pool,
+        centroids=jnp.zeros((p, cfg.dim), jnp.float32),
+        centroid_sqn=jnp.zeros((p,), jnp.float32),
+        centroid_valid=jnp.zeros((p,), bool),
+        # +1: reserved scratch slot for disabled scatter rows (see versionmap).
+        versions=jnp.zeros((cfg.num_vectors_cap + 1,), jnp.uint8),
+        pid_free_stack=jnp.arange(p, dtype=jnp.int32),
+        pid_free_top=jnp.asarray(p, jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+        step=jnp.asarray(0, jnp.int32),
+        next_vid=jnp.asarray(0, jnp.int32),
+        stats=LireStats.zeros(),
+    )
+
+
+def alloc_pid(state: IndexState, enable: Array) -> tuple[IndexState, Array]:
+    """Pop a posting id from the free stack (-1 on exhaustion/no-op)."""
+    has = enable & (state.pid_free_top > 0)
+    top = jnp.maximum(state.pid_free_top - 1, 0)
+    pid = jnp.where(has, state.pid_free_stack[top], -1)
+    state = state.replace(
+        pid_free_top=jnp.where(has, top, state.pid_free_top)
+    )
+    return state, pid
+
+
+def free_pid(state: IndexState, pid: Array, enable: Array) -> IndexState:
+    do = enable & (pid >= 0)
+    stack = jnp.where(
+        do,
+        state.pid_free_stack.at[state.pid_free_top].set(pid.astype(jnp.int32)),
+        state.pid_free_stack,
+    )
+    valid = jnp.where(
+        do, state.centroid_valid.at[jnp.maximum(pid, 0)].set(False),
+        state.centroid_valid,
+    )
+    return state.replace(
+        pid_free_stack=stack,
+        pid_free_top=jnp.where(do, state.pid_free_top + 1, state.pid_free_top),
+        centroid_valid=valid,
+    )
+
+
+def set_centroid(
+    state: IndexState, pid: Array, centroid: Array, enable: Array
+) -> IndexState:
+    safe = jnp.maximum(pid, 0)
+    do = enable & (pid >= 0)
+    c = centroid.astype(jnp.float32)
+    centroids = jnp.where(do, state.centroids.at[safe].set(c), state.centroids)
+    sqn = jnp.where(
+        do, state.centroid_sqn.at[safe].set(jnp.sum(c * c)), state.centroid_sqn
+    )
+    valid = jnp.where(
+        do, state.centroid_valid.at[safe].set(True), state.centroid_valid
+    )
+    return state.replace(
+        centroids=centroids, centroid_sqn=sqn, centroid_valid=valid
+    )
+
+
+def bump_stat(stats: LireStats, name: str, amount) -> LireStats:
+    return stats.replace(
+        **{name: getattr(stats, name) + jnp.asarray(amount, jnp.int32)}
+    )

@@ -1,0 +1,9 @@
+"""Data substrate: synthetic vector streams with distribution shift
+(SPACEV-like skew / SIFT-like uniform), the paper's update workloads
+(A/B/C), LM token pipeline, and the GNN neighbor sampler."""
+from repro.data.vectors import (  # noqa: F401
+    UpdateWorkload,
+    make_shifting_stream,
+    make_sift_like,
+    make_spacev_like,
+)

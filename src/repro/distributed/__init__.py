@@ -1,0 +1,2 @@
+"""Distribution layer: production meshes, per-family sharding rules,
+shard_map'd sharded index, distributed top-k, elastic re-sharding."""

@@ -1,0 +1,358 @@
+"""Distributed SPFresh: the index sharded over the ``model`` axis,
+queries parallel over ``data`` (and ``pod``) — shard_map'd LIRE.
+
+Design (DESIGN.md §4):
+  * postings are partitioned in *centroid space* (balanced k-means over
+    shards) so LIRE's reassignment locality stays shard-local;
+  * each (pod, data) row holds a full replica of every index shard —
+    data-axis = query parallelism / read replicas;
+  * updates are replicated deterministically across rows (every replica
+    applies the same jitted transition), so replicas never diverge;
+  * search does a per-shard local top-k then ONE all_gather(k) over
+    ``model`` — the tournament merge (O(k·M) bytes, not O(candidates));
+  * vector handles are (shard, slot): global_vid = shard * N_shard + slot;
+    version state is owned by exactly one shard — no cross-shard races;
+  * a ``shard_alive`` mask degrades dead shards gracefully (closure
+    replicas keep recall from collapsing — measured in tests).
+
+All ops below are *global* jittable functions over a stacked state whose
+leaves carry a leading (n_shards,) axis sharded P('model').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import lire
+from repro.core.clustering import balanced_kmeans
+from repro.core.index import build_state
+from repro.core.types import IndexState, LireConfig, make_empty_state
+from repro.core.distance import MASK_DISTANCE
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stacked-state helpers
+# ---------------------------------------------------------------------------
+
+def stack_states(states: list[IndexState]) -> IndexState:
+    """Stack per-shard states along a new leading axis (P('model'))."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *states)
+
+
+def unstack_state(stacked: IndexState, i: int) -> IndexState:
+    return jax.tree_util.tree_map(lambda x: x[i], stacked)
+
+
+def state_pspecs(stacked: IndexState) -> Any:
+    """P('model', None, ...) for every leaf of the stacked state."""
+    return jax.tree_util.tree_map(
+        lambda x: P("model", *([None] * (x.ndim - 1))), stacked
+    )
+
+
+def _squeeze(tree):
+    return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+
+def _expand(tree):
+    return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# ---------------------------------------------------------------------------
+# Distributed search
+# ---------------------------------------------------------------------------
+
+def _flat_axis_index(axes):
+    """Flattened linear index over one or more mesh axes (row-major)."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def make_search_step(
+    mesh: Mesh, cfg: LireConfig, *, k: int, nprobe: int | None = None,
+    shard_axes: tuple[str, ...] = ("model",), probe_chunk: int = 0,
+    gprobe: int = 0,
+):
+    """Returns a jitted ``search(state_stacked, queries, shard_alive[,
+    group_index_stacked]) -> (dists (Q, k), global_vids (Q, k))``.
+
+    queries are sharded over the data axes; the per-shard local top-k is
+    merged with one all_gather over 'model' (the tournament merge).
+    ``gprobe > 0`` switches navigation to the two-level group router (the
+    step then takes a stacked GroupIndex as 4th argument).
+    """
+    da = tuple(a for a in mesh.axis_names if a not in shard_axes)
+    nprobe_ = nprobe or cfg.nprobe
+    n_shard_vecs = cfg.num_vectors_cap
+
+    def local(state_stacked, queries, shard_alive, *rest):
+        state = _squeeze(state_stacked)
+        my = _flat_axis_index(shard_axes)
+        if gprobe > 0:
+            from repro.core.grouping import search_grouped
+
+            gidx = _squeeze(rest[0])
+            d, v = search_grouped(
+                state, gidx, queries, k=k, nprobe=nprobe_, gprobe=gprobe,
+                probe_chunk=probe_chunk,
+            )
+        else:
+            d, v = lire.search(
+                state, queries, k=k, nprobe=nprobe_, probe_chunk=probe_chunk
+            )
+        # globalize vids: handle = shard * N_shard + slot
+        gv = jnp.where(v >= 0, my * n_shard_vecs + v, -1)
+        alive = shard_alive[my]
+        d = jnp.where(alive, d, MASK_DISTANCE)
+        gv = jnp.where(alive, gv, -1)
+        # tournament merge over the shard axes
+        all_d = jax.lax.all_gather(d, shard_axes, tiled=False)   # (M, Q, k)
+        all_v = jax.lax.all_gather(gv, shard_axes, tiled=False)
+        all_d = all_d.reshape(-1, *d.shape)
+        all_v = all_v.reshape(-1, *gv.shape)
+        m, q, kk = all_d.shape
+        all_d = all_d.transpose(1, 0, 2).reshape(q, m * kk)
+        all_v = all_v.transpose(1, 0, 2).reshape(q, m * kk)
+        neg, sel = jax.lax.top_k(-all_d, k)
+        out_d = -neg
+        out_v = jnp.take_along_axis(all_v, sel, axis=1)
+        out_v = jnp.where(out_d < MASK_DISTANCE / 2, out_v, -1)
+        return out_d, out_v
+
+    qspec = P(da, None) if da else P(None, None)
+    in_specs = [state_pspecs_for(cfg, shard_axes), qspec, P(None)]
+    if gprobe > 0:
+        ax = shard_axes if len(shard_axes) > 1 else shard_axes[0]
+        in_specs.append(
+            jax.tree_util.tree_map(lambda _: P(ax), GroupIndexSpec())
+        )
+    sm = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(qspec, qspec),
+        check_vma=False,
+    )
+    return jax.jit(sm)
+
+
+class GroupIndexSpec:
+    """Pytree stand-in with the GroupIndex structure (4 array leaves)."""
+
+    def __new__(cls):
+        from repro.core.grouping import GroupIndex
+
+        z = jnp.zeros(())
+        return GroupIndex(group_centroids=z, group_sqn=z, members=z,
+                          member_valid=z)
+
+
+def state_pspecs_for(
+    cfg: LireConfig, shard_axes: tuple[str, ...] = ("model",)
+) -> Any:
+    """Leaf pspecs from an abstract empty state (avoids materializing)."""
+    abstract = jax.eval_shape(lambda: make_empty_state(cfg))
+    ax = shard_axes if len(shard_axes) > 1 else shard_axes[0]
+    return jax.tree_util.tree_map(
+        lambda x: P(ax, *([None] * x.ndim)), abstract
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distributed insert / delete
+# ---------------------------------------------------------------------------
+
+def make_insert_step(
+    mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",)
+):
+    """Returns jitted ``insert(state_stacked, vecs (B, d)) ->
+    (state, handles (B,))``.
+
+    The update batch is REPLICATED over data rows (read-replica design);
+    ownership = shard with the globally nearest centroid, computed by one
+    all_gather of per-shard best distances.  Each shard allocates local
+    slots for its vectors and appends; handles are psum-combined.
+    """
+    n_shard_vecs = cfg.num_vectors_cap
+
+    def local(state_stacked, vecs):
+        state = _squeeze(state_stacked)
+        my = _flat_axis_index(shard_axes)
+        b = vecs.shape[0]
+
+        # my best distance per vector
+        d, _ = lire.navigate(state, vecs, 1)  # (B, 1)
+        all_d = jax.lax.all_gather(d[:, 0], shard_axes, tiled=False)
+        all_d = all_d.reshape(-1, b)                   # (M, B)
+        owner = jnp.argmin(all_d, axis=0)              # (B,)
+        mine = owner == my
+
+        # local slot allocation for owned vectors
+        order = jnp.cumsum(mine.astype(jnp.int32)) - 1
+        slots = jnp.where(mine, state.next_vid + order, -1)
+        cap_ok = slots < cfg.num_vectors_cap
+        mine = mine & cap_ok
+        n_new = jnp.sum(mine)
+        state = state.replace(next_vid=state.next_vid + n_new)
+
+        state, _ = lire.insert_batch(state, vecs, jnp.maximum(slots, 0), mine)
+
+        # combine handles across shards (exactly one shard owns each vector)
+        handle_part = jnp.where(mine, my * n_shard_vecs + slots, 0)
+        handles = jax.lax.psum(handle_part, shard_axes)
+        handles = jnp.where(
+            jax.lax.psum(mine.astype(jnp.int32), shard_axes) > 0, handles, -1
+        )
+        return _expand(state), handles
+
+    sm = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(state_pspecs_for(cfg, shard_axes), P(None, None)),
+        out_specs=(state_pspecs_for(cfg, shard_axes), P(None)),
+        check_vma=False,
+    )
+    return jax.jit(sm, donate_argnums=(0,))
+
+
+def make_delete_step(
+    mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",)
+):
+    """jitted ``delete(state_stacked, handles (B,)) -> state``."""
+    n_shard_vecs = cfg.num_vectors_cap
+
+    def local(state_stacked, handles):
+        state = _squeeze(state_stacked)
+        my = _flat_axis_index(shard_axes)
+        owner = handles // n_shard_vecs
+        slot = handles % n_shard_vecs
+        mine = (owner == my) & (handles >= 0)
+        state = lire.delete_batch(state, slot, mine)
+        return _expand(state)
+
+    sm = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(state_pspecs_for(cfg, shard_axes), P(None)),
+        out_specs=state_pspecs_for(cfg, shard_axes),
+        check_vma=False,
+    )
+    return jax.jit(sm, donate_argnums=(0,))
+
+
+def make_maintenance_step(
+    mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",)
+):
+    """jitted ``maintain(state_stacked) -> (state, any_did_work)``.
+
+    Every shard runs one LIRE maintenance step on its own postings —
+    rebalancing is embarrassingly parallel across shards because the
+    reassign neighborhood is shard-local by the centroid-space partition.
+    """
+
+    def local(state_stacked):
+        state = _squeeze(state_stacked)
+        state, did = lire.maintenance_step(state)
+        any_did = jax.lax.pmax(did.astype(jnp.int32), shard_axes)
+        return _expand(state), any_did
+
+    sm = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(state_pspecs_for(cfg, shard_axes),),
+        out_specs=(state_pspecs_for(cfg, shard_axes), P()),
+        check_vma=False,
+    )
+    return jax.jit(sm, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Sharded build (host, offline) + elastic re-sharding
+# ---------------------------------------------------------------------------
+
+def partition_vectors(
+    vectors: np.ndarray, n_shards: int, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Centroid-space partition: balanced k-means into n_shards groups.
+    Returns (assignment (n,), shard_centroids (n_shards, d))."""
+    if n_shards == 1:
+        return (
+            np.zeros(len(vectors), np.int32),
+            vectors.mean(axis=0, keepdims=True).astype(np.float32),
+        )
+    cen, assign = balanced_kmeans(
+        jax.random.PRNGKey(seed),
+        jnp.asarray(vectors, jnp.float32),
+        jnp.ones(len(vectors), bool),
+        k=n_shards, iters=12, balance_weight=2.0,
+    )
+    return np.asarray(assign), np.asarray(cen)
+
+
+def build_sharded_state(
+    cfg: LireConfig, vectors: np.ndarray, n_shards: int, *, seed: int = 0
+) -> tuple[IndexState, np.ndarray]:
+    """Offline build: partition by centroid space, SPANN-build each shard,
+    stack.  Returns (stacked_state, global_vid_of_input (n,)) where
+    handles follow the (shard, slot) scheme."""
+    assign, _ = partition_vectors(vectors, n_shards, seed)
+    states, handles = [], np.full(len(vectors), -1, np.int64)
+    for s in range(n_shards):
+        idx = np.where(assign == s)[0]
+        if len(idx) == 0:
+            st = make_empty_state(cfg, seed=seed + s)
+        else:
+            st = build_state(cfg, vectors[idx], seed=seed + s)
+            st = st.replace(next_vid=jnp.asarray(len(idx), jnp.int32))
+            handles[idx] = s * cfg.num_vectors_cap + np.arange(len(idx))
+        states.append(st)
+    return stack_states(states), handles
+
+
+def gather_live_vectors(
+    stacked: IndexState, n_shards: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Extract all live vectors (+ global handles) from a stacked state —
+    the elastic re-sharding path reads a snapshot through this."""
+    from repro.storage import versionmap as vm
+
+    out_v, out_h = [], []
+    for s in range(n_shards):
+        st = unstack_state(stacked, s)
+        vids = np.asarray(st.pool.block_vid).reshape(-1)
+        vers = np.asarray(st.pool.block_ver).reshape(-1)
+        vecs = np.asarray(st.pool.blocks).reshape(-1, st.pool.dim)
+        stale = np.asarray(
+            vm.is_stale(st.versions, jnp.asarray(vids), jnp.asarray(vers))
+        )
+        live = (vids >= 0) & ~stale
+        # dedup replicas: keep first occurrence of each vid
+        vids_live = vids[live]
+        vecs_live = vecs[live]
+        _, first = np.unique(vids_live, return_index=True)
+        out_v.append(vecs_live[first])
+        out_h.append(s * st.cfg.num_vectors_cap + vids_live[first])
+    return np.concatenate(out_v), np.concatenate(out_h)
+
+
+def reshard(
+    cfg: LireConfig, stacked: IndexState, old_shards: int, new_shards: int,
+    *, seed: int = 0,
+) -> tuple[IndexState, np.ndarray]:
+    """Elastic scaling: rebuild the partition for a different shard count
+    from the live contents (snapshot-driven re-shard)."""
+    vecs, _ = gather_live_vectors(stacked, old_shards)
+    return build_sharded_state(cfg, vecs, new_shards, seed=seed)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``l2_topk``      — fused squared-L2 distance + per-tile k-min reduction for
+                     centroid navigation (the SPTAG-graph replacement).
+* ``posting_scan`` — paged posting scan with block-table indirection (the
+                     ParallelGET + distance scan fused, paged-attention style).
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper with padding/masking), and ``ref.py`` (pure-jnp
+oracle).  Kernels target TPU; tests validate them in ``interpret=True`` mode
+on CPU against the oracles across shape/dtype sweeps.
+"""

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the l2_topk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.0e38)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def l2_topk_ref(
+    queries: jax.Array,
+    centroids: jax.Array,
+    valid: jax.Array,
+    *,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact masked top-k smallest distances: ``(dists (Q,k), idx (Q,k))``."""
+    q = queries.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)
+    csq = jnp.sum(c * c, axis=1)
+    d = qsq - 2.0 * (q @ c.T) + csq[None, :]
+    d = jnp.maximum(d, 0.0)
+    d = jnp.where(valid[None, :], d, BIG)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

@@ -1,0 +1,2 @@
+from repro.kernels.posting_scan.ops import scan_posting_blocks, scan_unique_blocks  # noqa: F401
+from repro.kernels.posting_scan.ref import scan_posting_blocks_ref, scan_unique_blocks_ref  # noqa: F401

@@ -1,0 +1,57 @@
+"""Public wrappers for the posting-scan kernels.
+
+These integrate the BlockPool with the Pallas kernels: build the block
+table from posting ids, clamp absent pages to page 0, and mask distances of
+invalid/stale slots to +BIG for the downstream top-k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.posting_scan import kernel as K
+
+BIG = jnp.float32(3.0e38)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scan_posting_blocks(
+    queries: jax.Array,       # (Q, d)
+    posting_blocks: jax.Array,  # (P_cap, MB) i32 block table rows
+    pids: jax.Array,          # (Q, nprobe) probed postings (-1 = none)
+    blocks: jax.Array,        # (B, BS, d)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query paged scan.  Returns ``(dists (Q, nprobe*MB*BS), flat_slot
+    (Q, nprobe*MB*BS) bool valid-page mask)`` — caller applies vid/version
+    masks and top-k."""
+    q_n = queries.shape[0]
+    bs = blocks.shape[1]
+    table = posting_blocks[jnp.maximum(pids, 0)]        # (Q, nprobe, MB)
+    table = jnp.where(pids[..., None] >= 0, table, -1)
+    flat = table.reshape(q_n, -1)                       # (Q, NB)
+    page_ok = flat >= 0
+    d = K.scan_per_query(
+        jnp.maximum(flat, 0), queries, blocks, interpret=interpret
+    )                                                   # (Q, NB, BS)
+    d = jnp.where(page_ok[:, :, None], d, BIG)
+    return d.reshape(q_n, -1), jnp.repeat(page_ok, bs, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scan_unique_blocks(
+    queries: jax.Array,      # (Q, d)
+    unique_blocks: jax.Array,  # (NB,) i32, -1 = padding
+    blocks: jax.Array,       # (B, BS, d)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batch-dedup scan.  Returns dists (NB, Q, BS) with padded pages = BIG."""
+    ok = unique_blocks >= 0
+    d = K.scan_batched(
+        jnp.maximum(unique_blocks, 0), queries, blocks, interpret=interpret
+    )
+    return jnp.where(ok[:, None, None], d, BIG)

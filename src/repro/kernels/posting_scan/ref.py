@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the posting_scan kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_posting_blocks_ref(
+    block_table: jax.Array, queries: jax.Array, blocks: jax.Array
+) -> jax.Array:
+    """(Q, NB, BS) distances — per-query page scan."""
+    gathered = blocks[block_table]                 # (Q, NB, BS, d)
+    q = queries.astype(jnp.float32)[:, None, None, :]
+    diff = gathered.astype(jnp.float32) - q
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def scan_unique_blocks_ref(
+    unique_blocks: jax.Array, queries: jax.Array, blocks: jax.Array
+) -> jax.Array:
+    """(NB, Q, BS) distances — batched unique-page scan."""
+    gathered = blocks[unique_blocks].astype(jnp.float32)  # (NB, BS, d)
+    q = queries.astype(jnp.float32)
+    diff = gathered[:, None, :, :] - q[None, :, None, :]
+    return jnp.sum(diff * diff, axis=-1)

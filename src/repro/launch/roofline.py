@@ -1,0 +1,103 @@
+"""Roofline accounting from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), in seconds:
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` on the partitioned module reports PER-DEVICE flops and
+bytes, so per-device values are divided by per-chip peaks (equivalent to the
+global formula).  collective_bytes is parsed from the partitioned HLO text —
+we sum the RESULT shape bytes of every collective op (local, per-device
+view).
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e hardware constants (assignment).
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind from partitioned HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result shapes appear between '=' and the op name
+        for kind in _COLLECTIVES:
+            # match ` = <shape or tuple> <kind>(` — start instruction only
+            marker = f" {kind}("
+            if marker not in stripped or " = " not in stripped:
+                continue
+            lhs = stripped.split(marker)[0]
+            rhs = lhs.split(" = ")
+            if len(rhs) != 2:
+                continue
+            shapes = _SHAPE_RE.findall(rhs[1])
+            nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+            out[kind] += nbytes
+            out["total"] += nbytes
+            break
+    return out
+
+
+def roofline_terms(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> dict[str, float]:
+    compute = flops_per_device / PEAK_FLOPS_BF16
+    memory = bytes_per_device / HBM_BW
+    coll = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    bound = max(compute, memory, coll)
+    terms["roofline_fraction_compute"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cell, *, tokens: int | None = None) -> float | None:
+    """6·N·D (dense) / 6·N_active·D (MoE) model FLOPs for LM cells; None
+    for families without a standard counting rule."""
+    if cell.family == "lm":
+        from repro.configs.common import LM_SHAPES
+
+        sh = LM_SHAPES[cell.shape]
+        cfg = cell.model_cfg
+        n = cfg.n_active_params if cfg.moe else cfg.n_params
+        if cell.kind == "train":
+            d = sh["seq"] * sh["batch"]
+            return 6.0 * n * d
+        if cell.kind == "prefill":
+            d = sh["seq"] * sh["batch"]
+            return 2.0 * n * d
+        # decode: one token per sequence
+        return 2.0 * n * sh["batch"]
+    return None

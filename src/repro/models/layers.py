@@ -1,0 +1,297 @@
+"""Shared neural-net layers (pure JAX, functional params-as-dicts).
+
+Conventions:
+  * params are nested dicts of arrays; init fns take an rng key and return
+    the dict; forward fns take (params, inputs, ...).
+  * compute dtype is configurable (bf16 default for LMs); accumulation and
+    softmax/norm statistics are always f32.
+  * attention is chunked (online-softmax over KV chunks, lax.scan) so the
+    32k-prefill cells compile with bounded memory — the pure-JAX flash
+    pattern.  TPU deployments would swap in a Pallas flash kernel; the scan
+    form has the same HBM traffic shape, which is what the roofline reads.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Apply RoPE.  x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (online-softmax) attention — the pure-JAX flash pattern
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: Array,  # (B, Sq, H, D)
+    k: Array,  # (B, Skv, KH, D)
+    v: Array,  # (B, Skv, KH, D)
+    *,
+    causal: bool,
+    q_offset: Array | int = 0,
+    kv_chunk: int = 1024,
+    kv_valid_len: Array | None = None,
+) -> Array:
+    """GQA attention with online softmax over KV chunks.
+
+    ``q_offset`` shifts the query positions (decode: q_offset = cache length).
+    ``kv_valid_len`` masks KV positions >= len (ragged caches).
+    Memory: O(B * Sq * H * D + chunk scores), never O(Sq * Skv).
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    kv_chunk = min(kv_chunk, skv)
+    pad = (-skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = skv
+        skv = skv + pad
+    nc = skv // kv_chunk
+    scale = d ** -0.5
+
+    qr = (q.astype(jnp.float32) * scale).reshape(b, sq, kh, g, d)
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)  # (sq,)
+
+    ks = k.reshape(b, nc, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nc, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, ci = inp  # (B, C, KH, D) x2, chunk index
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)  # (C,)
+        s = jnp.einsum(
+            "bqkgd,bckd->bkgqc", qr, kc.astype(jnp.float32),
+        )  # (B, KH, G, Sq, C)
+        mask = jnp.ones((sq, kv_chunk), bool)
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if kv_valid_len is not None:
+            mask = mask & (kv_pos[None, :] < kv_valid_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    # Nested remat: without it the scan saves every chunk's f32 score tile
+    # for the backward pass — i.e. the full attention matrix (the exact
+    # thing flash attention exists to avoid).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (ks, vs, jnp.arange(nc))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KH, G, Sq, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def full_attention_ref(q, k, v, *, causal, q_offset=0, kv_valid_len=None):
+    """Naive reference attention (oracle for chunked_attention tests)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    qr = (q.astype(jnp.float32) * scale).reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qr, k.astype(jnp.float32))
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+    kv_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    if kv_valid_len is not None:
+        mask = mask & (kv_pos[None, :] < kv_valid_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE (capacity-based dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    gate = jax.nn.silu(x @ params["wi_gate"])
+    up = x @ params["wi_up"]
+    return (gate * up) @ params["wo"]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype) -> dict:
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    return {
+        "router": dense_init(k0, d_model, n_experts, jnp.float32),
+        "wi_gate": (
+            jax.random.normal(k1, (n_experts, d_model, d_ff), jnp.float32) * scale
+        ).astype(dtype),
+        "wi_up": (
+            jax.random.normal(k2, (n_experts, d_model, d_ff), jnp.float32) * scale
+        ).astype(dtype),
+        "wo": (
+            jax.random.normal(k3, (n_experts, d_ff, d_model), jnp.float32)
+            / math.sqrt(d_ff)
+        ).astype(dtype),
+    }
+
+
+def moe(
+    params: dict,
+    x: Array,  # (T, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[Array, Array]:
+    """Top-k token-choice MoE with per-expert capacity (GShard-style).
+
+    Dispatch is sort-free: per-(expert, slot) buffers are built with a
+    stable intra-expert rank (cumsum over the token axis) + scatter; tokens
+    over capacity are dropped (standard).  Shards cleanly: tokens over
+    ('pod','data'), experts over 'model'.
+
+    Returns (out (T, d), aux_loss scalar).
+    """
+    t, d = x.shape
+    e = params["router"].shape[1]
+    logits = (x.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(1, int(capacity_factor * t * top_k / e))
+    # (T*K,) flattened assignments, token-major so ranks are stable.
+    flat_e = gate_idx.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*K, E)
+    rank = jnp.cumsum(onehot, axis=0) - 1  # rank within expert
+    my_rank = jnp.sum(rank * onehot, axis=-1)  # (T*K,)
+    keep = my_rank < capacity
+    slot = flat_e * capacity + jnp.minimum(my_rank, capacity - 1)
+    slot = jnp.where(keep, slot, e * capacity)  # overflow -> scratch row
+
+    token_of = jnp.repeat(jnp.arange(t), top_k)
+    # Dispatch via "scatter ids, gather payload": the data-dependent
+    # scatter moves 4-byte token ids; the d-wide rows then move through ONE
+    # gather.  GSPMD realizes sharded scatters as full-buffer all-reduces,
+    # so scattering payload directly costs an (E*C, d) all-reduce per layer
+    # (measured: 34s collective term at phi3.5/train_4k); scattering ids
+    # shrinks that to (E*C,) i32.  (Sharding-constraint variants on the
+    # payload buffer fare even worse — "involuntary full rematerialization",
+    # 166s.  See EXPERIMENTS.md §Perf iteration log.)
+    buf_tok = jnp.full((e * capacity + 1,), t, jnp.int32)
+    buf_tok = buf_tok.at[slot].set(token_of, mode="drop")
+    x_aug = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    buf = x_aug[buf_tok[:-1]].reshape(e, capacity, d)
+
+    # Expert computation: grouped einsum, E-sharded.
+    gate_h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+    )
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", gate_h * up_h, params["wo"])
+
+    # Combine back: gather each kept (token, k) slot's output, weight, sum.
+    out_flat = out_e.reshape(e * capacity, d)
+    safe_slot = jnp.minimum(slot, e * capacity - 1)
+    per_k = out_flat[safe_slot] * jnp.where(keep, 1.0, 0.0)[:, None].astype(x.dtype)
+    per_k = per_k * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.sum(per_k.reshape(t, top_k, d), axis=1)
+    return out, aux
+
+
+def moe_ref(params: dict, x: Array, *, top_k: int) -> Array:
+    """Naive per-token loop MoE oracle (no capacity drops)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    out = jnp.zeros_like(x)
+    for ki in range(top_k):
+        e_idx = gate_idx[:, ki]
+        wg = params["wi_gate"][e_idx]  # (T, d, f)
+        wu = params["wi_up"][e_idx]
+        wo = params["wo"][e_idx]
+        h = jax.nn.silu(jnp.einsum("td,tdf->tf", x, wg)) * jnp.einsum(
+            "td,tdf->tf", x, wu
+        )
+        out = out + jnp.einsum("tf,tfd->td", h, wo) * gate_vals[:, ki : ki + 1].astype(x.dtype)
+    return out

@@ -1,0 +1,410 @@
+"""Recsys model zoo: EmbeddingBag + DeepFM, two-tower retrieval, BERT4Rec,
+MIND — pure JAX.
+
+JAX has no native ``nn.EmbeddingBag``; the assignment makes it part of the
+system: :func:`bag_lookup` (fixed-size bags, -1 padded) and
+:func:`embedding_bag_ragged` (flat ids + segment ids → segment_sum) implement
+sum/mean bags via ``jnp.take`` + ``jax.ops.segment_sum``.
+
+The embedding tables are the sharding story (rows over the 'model' axis);
+interaction layers are tiny MLPs (see repro/distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+def bag_lookup(
+    table: Array, ids: Array, *, combiner: str = "sum"
+) -> Array:
+    """Fixed-size bags: ``ids (..., L)`` with -1 padding → ``(..., dim)``."""
+    safe = jnp.maximum(ids, 0)
+    emb = jnp.take(table, safe, axis=0)            # (..., L, dim)
+    mask = (ids >= 0).astype(emb.dtype)[..., None]
+    emb = emb * mask
+    if combiner == "sum":
+        return jnp.sum(emb, axis=-2)
+    if combiner == "mean":
+        denom = jnp.maximum(jnp.sum(mask, axis=-2), 1.0)
+        return jnp.sum(emb, axis=-2) / denom
+    raise ValueError(combiner)
+
+
+def embedding_bag_ragged(
+    table: Array,
+    flat_ids: Array,      # (T,) i32, -1 padding
+    segment_ids: Array,   # (T,) i32 bag index per id
+    n_segments: int,
+    *,
+    combiner: str = "sum",
+) -> Array:
+    """Ragged bags via take + segment_sum (the torch EmbeddingBag analogue)."""
+    safe = jnp.maximum(flat_ids, 0)
+    emb = jnp.take(table, safe, axis=0)
+    valid = (flat_ids >= 0)
+    emb = emb * valid[:, None].astype(emb.dtype)
+    seg = jnp.where(valid, segment_ids, n_segments)  # scratch row
+    out = jax.ops.segment_sum(emb, seg, num_segments=n_segments + 1)[:-1]
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            valid.astype(emb.dtype), seg, num_segments=n_segments + 1
+        )[:-1]
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _mlp_init(key, dims: Sequence[int], dtype) -> list[dict]:
+    layers = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        layers.append({
+            "w": L.dense_init(sub, dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return layers
+
+
+def _mlp_apply(layers: list[dict], x: Array, *, final_act: bool = False) -> Array:
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"] + lp["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _bce(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# DeepFM (arXiv:1703.04247)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_fields: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    mlp_dims: tuple[int, ...] = (400, 400, 400)
+    dtype: str = "float32"
+
+
+def deepfm_init(key: Array, cfg: DeepFMConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    rows = cfg.n_fields * cfg.vocab_per_field
+    return {
+        "embed": L.embed_init(k1, rows, cfg.embed_dim, dt),
+        "linear": L.embed_init(k2, rows, 1, dt),
+        "bias": jnp.zeros((), dt),
+        "mlp": _mlp_init(
+            k3,
+            [cfg.n_fields * cfg.embed_dim, *cfg.mlp_dims, 1],
+            dt,
+        ),
+    }
+
+
+def deepfm_forward(params: dict, batch: dict, cfg: DeepFMConfig) -> Array:
+    """batch: fields (B, n_fields) per-field categorical ids → logits (B,)."""
+    ids = batch["fields"]
+    offsets = jnp.arange(cfg.n_fields, dtype=ids.dtype) * cfg.vocab_per_field
+    flat = jnp.clip(ids, 0, cfg.vocab_per_field - 1) + offsets[None, :]
+    v = jnp.take(params["embed"], flat, axis=0)        # (B, F, dim)
+    first = jnp.take(params["linear"], flat, axis=0)[..., 0].sum(-1)  # (B,)
+    s = jnp.sum(v, axis=1)
+    fm = 0.5 * jnp.sum(s * s - jnp.sum(v * v, axis=1), axis=-1)       # (B,)
+    deep = _mlp_apply(params["mlp"], v.reshape(v.shape[0], -1))[:, 0]
+    return params["bias"] + first + fm + deep
+
+
+def deepfm_loss(params: dict, batch: dict, cfg: DeepFMConfig):
+    logits = deepfm_forward(params, batch, cfg)
+    loss = _bce(logits, batch["labels"])
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube RecSys'19-style, sampled softmax + logQ)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_items: int = 10_000_000
+    n_user_fields: int = 8
+    user_vocab_per_field: int = 100_000
+    embed_dim: int = 256
+    tower_dims: tuple[int, ...] = (1024, 512, 256)
+    temperature: float = 0.05
+    dtype: str = "float32"
+    serve_dtype: str | None = None  # §Perf iter 2: bf16 serving path
+
+
+def twotower_init(key: Array, cfg: TwoTowerConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    user_rows = cfg.n_user_fields * cfg.user_vocab_per_field
+    return {
+        "user_embed": L.embed_init(k1, user_rows, cfg.embed_dim, dt),
+        "item_embed": L.embed_init(k2, cfg.n_items, cfg.embed_dim, dt),
+        "user_mlp": _mlp_init(
+            k3, [cfg.n_user_fields * cfg.embed_dim, *cfg.tower_dims], dt
+        ),
+        "item_mlp": _mlp_init(k4, [cfg.embed_dim, *cfg.tower_dims], dt),
+    }
+
+
+def user_tower(params: dict, user_fields: Array, cfg: TwoTowerConfig) -> Array:
+    offsets = jnp.arange(cfg.n_user_fields, dtype=user_fields.dtype) * (
+        cfg.user_vocab_per_field
+    )
+    flat = jnp.clip(user_fields, 0, cfg.user_vocab_per_field - 1) + offsets[None, :]
+    v = jnp.take(params["user_embed"], flat, axis=0)
+    u = _mlp_apply(params["user_mlp"], v.reshape(v.shape[0], -1))
+    return u / jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-6)
+
+
+def item_tower(params: dict, item_ids: Array, cfg: TwoTowerConfig) -> Array:
+    v = jnp.take(params["item_embed"], jnp.clip(item_ids, 0, cfg.n_items - 1), axis=0)
+    i = _mlp_apply(params["item_mlp"], v)
+    return i / jnp.linalg.norm(i, axis=-1, keepdims=True).clip(1e-6)
+
+
+def twotower_loss(params: dict, batch: dict, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction.
+
+    batch: user_fields (B, Fu), item_ids (B,), item_logq (B,) — log sampling
+    probability of each in-batch negative.
+    """
+    u = user_tower(params, batch["user_fields"], cfg)   # (B, D)
+    i = item_tower(params, batch["item_ids"], cfg)      # (B, D)
+    logits = (u @ i.T).astype(jnp.float32) / cfg.temperature
+    logits = logits - batch["item_logq"][None, :]       # logQ correction
+    b = logits.shape[0]
+    labels = jnp.arange(b)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = logits[jnp.arange(b), labels]
+    loss = jnp.mean(logz - gold)
+    return loss, {"softmax": loss}
+
+
+def twotower_score_pairs(params: dict, batch: dict, cfg: TwoTowerConfig) -> Array:
+    u = user_tower(params, batch["user_fields"], cfg)
+    i = item_tower(params, batch["item_ids"], cfg)
+    return jnp.sum(u * i, axis=-1)
+
+
+def twotower_retrieval(params: dict, batch: dict, cfg: TwoTowerConfig) -> Array:
+    """One query vs n_candidates item ids → scores (Q, C).  The brute-force
+    path; the SPFresh-index path serves the same query in
+    repro/serve/retrieval.py."""
+    u = user_tower(params, batch["user_fields"], cfg)       # (Q, D)
+    c = item_tower(params, batch["candidate_ids"], cfg)     # (C, D)
+    return jax.lax.dot_general(
+        u, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690) — bidirectional encoder over item sequences
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    d_ff: int = 256
+    seq_len: int = 200
+    dtype: str = "float32"
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items  # vocab row n_items = [MASK]
+
+
+def bert4rec_init(key: Array, cfg: Bert4RecConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k3, ka, kb = jax.random.split(k3, 3)
+        d = cfg.embed_dim
+        blocks.append({
+            "ln1": jnp.ones((d,), dt),
+            "ln2": jnp.ones((d,), dt),
+            "wq": L.dense_init(ka, d, d, dt),
+            "wk": L.dense_init(jax.random.fold_in(ka, 1), d, d, dt),
+            "wv": L.dense_init(jax.random.fold_in(ka, 2), d, d, dt),
+            "wo": L.dense_init(jax.random.fold_in(ka, 3), d, d, dt),
+            "mlp": L.init_mlp(kb, d, cfg.d_ff, dt),
+        })
+    return {
+        "item_embed": L.embed_init(k1, cfg.n_items + 1, cfg.embed_dim, dt),
+        "pos_embed": L.embed_init(k2, cfg.seq_len, cfg.embed_dim, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.embed_dim,), dt),
+    }
+
+
+def bert4rec_encode(params: dict, items: Array, cfg: Bert4RecConfig) -> Array:
+    """items (B, S) with -1 padding → hidden (B, S, d).  Bidirectional."""
+    b, s = items.shape
+    safe = jnp.clip(items, 0, cfg.n_items)
+    x = params["item_embed"][safe] + params["pos_embed"][None, :s]
+    pad = (items < 0)
+    x = jnp.where(pad[..., None], 0.0, x)
+    h = cfg.embed_dim // cfg.n_heads
+
+    def block(x, blk):
+        y = L.rms_norm(x, blk["ln1"])
+        q = (y @ blk["wq"]).reshape(b, s, cfg.n_heads, h)
+        k = (y @ blk["wk"]).reshape(b, s, cfg.n_heads, h)
+        v = (y @ blk["wv"]).reshape(b, s, cfg.n_heads, h)
+        # padded positions masked by zeroing their keys' contribution via
+        # valid-length trick is wrong for mid-sequence pads; use additive mask.
+        s_logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                              k.astype(jnp.float32)) / (h ** 0.5)
+        s_logits = jnp.where(pad[:, None, None, :], -1e30, s_logits)
+        p = jax.nn.softmax(s_logits, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+        x = x + att.reshape(b, s, -1) @ blk["wo"]
+        x = x + L.mlp(blk["mlp"], L.rms_norm(x, blk["ln2"]))
+        return x
+
+    for blk in params["blocks"]:
+        x = block(x, blk)
+    return L.rms_norm(x, params["final_norm"])
+
+
+def bert4rec_loss(params: dict, batch: dict, cfg: Bert4RecConfig):
+    """Masked-item prediction.  batch: items (B,S) with mask_id at the
+    masked slots, mask_pos (B, M) positions, mask_label (B, M) with -1
+    ignore.  Scoring ONLY the masked positions keeps the logits buffer at
+    (B·M, V) instead of (B·S, V) — at the train_batch cell that is the
+    difference between 3 GB and 660 GB per device (EXPERIMENTS.md)."""
+    hidden = bert4rec_encode(params, batch["items"], cfg)  # (B, S, d)
+    mask_pos = batch["mask_pos"]        # (B, M)
+    labels = batch["mask_label"]        # (B, M)
+    picked = jnp.take_along_axis(
+        hidden, jnp.maximum(mask_pos, 0)[..., None], axis=1
+    )  # (B, M, d)
+    logits = jax.lax.dot_general(
+        picked, params["item_embed"][: cfg.n_items],
+        (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (B, M, V) — tied output embedding
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce}
+
+
+def bert4rec_score(params: dict, batch: dict, cfg: Bert4RecConfig) -> Array:
+    """Next-item scores from the last position: (B, V)."""
+    hidden = bert4rec_encode(params, batch["items"], cfg)[:, -1]
+    return jax.lax.dot_general(
+        hidden, params["item_embed"][: cfg.n_items],
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MIND (arXiv:1904.08030) — multi-interest capsule routing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    label_pow: float = 2.0
+    dtype: str = "float32"
+
+
+def mind_init(key: Array, cfg: MINDConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "item_embed": L.embed_init(k1, cfg.n_items, cfg.embed_dim, dt),
+        "bilinear": L.dense_init(k2, cfg.embed_dim, cfg.embed_dim, dt),
+        # fixed (untrained) routing-logit init, per the paper's B2I setup
+        "routing_init": (
+            jax.random.normal(k3, (cfg.n_interests, cfg.seq_len), jnp.float32)
+        ),
+    }
+
+
+def _squash(x: Array) -> Array:
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params: dict, items: Array, cfg: MINDConfig) -> Array:
+    """Behavior sequence (B, S) → K interest capsules (B, K, d)."""
+    valid = (items >= 0)
+    e = params["item_embed"][jnp.clip(items, 0, cfg.n_items - 1)]
+    e = jnp.where(valid[..., None], e, 0.0)
+    u = e @ params["bilinear"]                      # (B, S, d)
+    b_logits = jnp.broadcast_to(
+        params["routing_init"][None], (items.shape[0], cfg.n_interests, cfg.seq_len)
+    )
+
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(
+            jnp.where(valid[:, None, :], b_logits, -1e30), axis=1
+        )  # softmax over interests per behavior
+        z = jnp.einsum("bks,bsd->bkd", w.astype(u.dtype), u)
+        caps = _squash(z.astype(jnp.float32)).astype(u.dtype)  # (B, K, d)
+        b_logits = b_logits + jnp.einsum(
+            "bkd,bsd->bks", caps.astype(jnp.float32), u.astype(jnp.float32)
+        )
+    return caps
+
+
+def mind_loss(params: dict, batch: dict, cfg: MINDConfig):
+    """Label-aware attention + in-batch sampled softmax.
+
+    batch: items (B, S), target (B,) target item id.
+    """
+    caps = mind_interests(params, batch["items"], cfg)       # (B, K, d)
+    t = params["item_embed"][jnp.clip(batch["target"], 0, cfg.n_items - 1)]
+    att = jnp.einsum("bkd,bd->bk", caps.astype(jnp.float32), t.astype(jnp.float32))
+    att = jax.nn.softmax(cfg.label_pow * att, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att.astype(caps.dtype), caps)  # (B, d)
+    logits = (user @ t.T).astype(jnp.float32)                # in-batch sampled softmax
+    b = logits.shape[0]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = logits[jnp.arange(b), jnp.arange(b)]
+    loss = jnp.mean(logz - gold)
+    return loss, {"softmax": loss}
+
+
+def mind_serve(params: dict, batch: dict, cfg: MINDConfig) -> Array:
+    """Interest capsules for retrieval: (B, K, d) — each is an ANN query."""
+    return mind_interests(params, batch["items"], cfg)

@@ -1,0 +1,297 @@
+"""Decoder-only GQA transformer LM (dense + MoE) — scan-over-layers, remat.
+
+Covers the five assigned LM architectures (granite-20b, deepseek-7b,
+qwen1.5-110b w/ QKV bias, granite-moe-1b-a400m 32e top-8, phi3.5-moe 16e
+top-2).  Three entry points per model:
+
+  * ``loss_fn``     — next-token CE (+ MoE aux) for ``train_step``
+  * ``prefill``     — prompt pass producing the KV cache + last-pos logits
+  * ``decode_step`` — one-token decode against a KV cache
+
+Layers are stacked (leading L axis) and scanned; each layer body is
+``jax.checkpoint``-ed (remat) so 32k-prefill activations stay bounded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import act_constraint
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    vocab: int = 32000
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    moe: bool = False
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    rope_theta: float = 10000.0
+    dtype: str = "bfloat16"
+    kv_chunk: int = 1024
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+    # scan-over-layers unroll factor.  The production configs fully unroll
+    # (scan_unroll = n_layers) so cost_analysis / collective parsing see
+    # every layer (a lax.scan body is counted ONCE by XLA's analysis).
+    scan_unroll: int = 1
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head tables padded to a multiple of 256 so the vocab
+        dim shards over any production mesh axis (e.g. granite's 49155).
+        Logit columns >= vocab are masked to -inf in the loss/serving."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-FLOPs accounting)."""
+        d, hd = self.d_model, self.hd
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.moe:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab_padded * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Activated params per token (MoE: top_k experts only)."""
+        if not self.moe:
+            return self.n_params
+        d, hd = self.d_model, self.hd
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        ffn = self.moe_top_k * 3 * d * self.d_ff + d * self.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab_padded * d + d
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _init_layer(key: Array, cfg: LMConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": L.dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": L.dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": L.dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": L.dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    if cfg.moe:
+        p["moe"] = L.init_moe(ks[4], d, cfg.d_ff, cfg.n_experts, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[4], d, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key: Array, cfg: LMConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.embed_init(k_embed, cfg.vocab_padded, cfg.d_model, dt),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(k_head, cfg.d_model, cfg.vocab_padded, dt),
+    }
+
+
+def param_specs(cfg: LMConfig) -> Any:
+    """Abstract params (no allocation) — for .lower() in the dry-run."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train/prefill/decode)
+# ---------------------------------------------------------------------------
+
+def _qkv(lp: dict, h: Array, cfg: LMConfig):
+    b, s, _ = h.shape
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _ffn(lp: dict, x2: Array, cfg: LMConfig):
+    if cfg.moe:
+        b, s, d = x2.shape
+        y, aux = L.moe(
+            lp["moe"], x2.reshape(b * s, d), top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+        return y.reshape(b, s, d), aux
+    return L.mlp(lp["mlp"], x2), jnp.zeros((), jnp.float32)
+
+
+def _layer_train(x: Array, lp: dict, cfg: LMConfig, positions: Array):
+    h = L.rms_norm(x, lp["ln1"])
+    q, k, v = _qkv(lp, h, cfg)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    att = L.chunked_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+    b, s, _, _ = att.shape
+    x = x + att.reshape(b, s, -1) @ lp["wo"]
+    y, aux = _ffn(lp, L.rms_norm(x, lp["ln2"]), cfg)
+    # residual stream: batch over data axes, d_model over model (keeps the
+    # remat-saved per-layer activations sharded — 42 GB/device otherwise).
+    out = act_constraint(x + y, None, "model")
+    return out, aux, k, v
+
+
+# ---------------------------------------------------------------------------
+# Train loss
+# ---------------------------------------------------------------------------
+
+def _mask_pad_vocab(logits: Array, cfg: LMConfig) -> Array:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab, logits, jnp.float32(-1e30))
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> tuple[Array, dict]:
+    """Next-token cross entropy.  batch: tokens (B,S), labels (B,S) with
+    -1 = ignore."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    b, s = tokens.shape
+    x = act_constraint(params["embed"][tokens], None, "model")
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, _, _ = _layer_train(x, lp, cfg, positions)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jax.lax.dot_general(
+        x, params["lm_head"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (B, S, V) f32
+    logits = act_constraint(logits, None, "model")
+    logits = _mask_pad_vocab(logits, cfg)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + cfg.aux_loss_weight * aux / cfg.n_layers
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, tokens: Array, cfg: LMConfig):
+    """Prompt pass.  Returns (last-position logits (B, V), cache dict with
+    k/v stacked (L, B, S, KH, D))."""
+    b, s = tokens.shape
+    x = act_constraint(params["embed"][tokens], None, "model")
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x = carry
+        x, _, k, v = _layer_train(x, lp, cfg, positions)
+        # cache layout: batch over data axes, sequence over model
+        k = act_constraint(k, "model", None, None)
+        v = act_constraint(v, "model", None, None)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                               unroll=cfg.scan_unroll)
+    x = L.rms_norm(x[:, -1:], params["final_norm"])
+    logits = jax.lax.dot_general(
+        x, params["lm_head"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    return _mask_pad_vocab(logits, cfg), {"k": ks, "v": vs}
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(params: dict, cache: dict, tokens: Array, pos: Array,
+                cfg: LMConfig):
+    """One decode step at position ``pos`` (scalar i32): attends to
+    cache[:pos] plus the new token; returns (logits (B,V), new cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]  # (B, 1, d)
+    positions = jnp.broadcast_to(jnp.asarray(pos), (1,))
+
+    def body(x, inp):
+        lp, kc, vc = inp
+        h = L.rms_norm(x, lp["ln1"])
+        q, k_new, v_new = _qkv(lp, h, cfg)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k_new = L.rope(k_new, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), pos, axis=1)
+        kc = act_constraint(kc, "model", None, None)
+        vc = act_constraint(vc, "model", None, None)
+        # decode uses single-chunk attention (plain softmax) so a
+        # sequence-sharded cache becomes classic sequence-parallel decode:
+        # partial scores per shard + all-reduce'd softmax stats.
+        att = L.chunked_attention(
+            q, kc, vc, causal=False, q_offset=pos,
+            kv_chunk=kc.shape[1], kv_valid_len=pos + 1,
+        )
+        x = x + att.reshape(b, 1, -1) @ lp["wo"]
+        y, _ = _ffn(lp, L.rms_norm(x, lp["ln2"]), cfg)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]),
+                               unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jax.lax.dot_general(
+        x, params["lm_head"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    return _mask_pad_vocab(logits, cfg), {"k": ks, "v": vs}

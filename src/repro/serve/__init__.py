@@ -1,0 +1,2 @@
+"""Serving layer: batched search/update engine over the SPFresh index +
+the two-tower retrieval integration (the paper technique as a feature)."""

@@ -1,0 +1,84 @@
+"""Serving engine: the paper's online loop (§5.2/§5.3) as a host driver.
+
+Search / insert / delete requests are micro-batched; the background Local
+Rebuilder is interleaved at a configurable fg:bg ratio (the paper's 2:1
+feed-forward pipeline, Fig. 12).  The latency budget is a candidate budget
+(nprobe), the jit-world analogue of the paper's 10 ms hard cut.
+
+Metrics: per-request latency percentiles, throughput, rebalancing stats —
+everything Fig. 7/9 plots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import lire
+from repro.core.index import SPFreshIndex
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    search_k: int = 10
+    nprobe: int | None = None
+    fg_bg_ratio: int = 2        # foreground batches per background step (2:1)
+    maintain_budget: int = 8    # max rebuild steps per background slot
+
+
+class ServeEngine:
+    def __init__(self, index: SPFreshIndex, cfg: EngineConfig | None = None):
+        self.index = index
+        self.cfg = cfg or EngineConfig()
+        self.search_lat: list[float] = []
+        self.insert_lat: list[float] = []
+        self._fg_since_bg = 0
+
+    # ------------------------------------------------------------------
+    def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        t0 = time.time()
+        d, v = self.index.search(
+            queries, self.cfg.search_k, nprobe=self.cfg.nprobe
+        )
+        self.search_lat.append(time.time() - t0)
+        return d, v
+
+    def insert(self, vecs: np.ndarray, vids: np.ndarray) -> None:
+        t0 = time.time()
+        self.index.insert(vecs, vids)
+        self.insert_lat.append(time.time() - t0)
+        self._tick_background()
+
+    def delete(self, vids: np.ndarray) -> None:
+        self.index.delete(vids)
+        self._tick_background()
+
+    def _tick_background(self) -> None:
+        """Feed-forward pipeline: every fg_bg_ratio foreground batches, give
+        the Local Rebuilder one slot of maintain_budget steps."""
+        self._fg_since_bg += 1
+        if self._fg_since_bg >= self.cfg.fg_bg_ratio:
+            self._fg_since_bg = 0
+            self.index.maintain(max_steps=self.cfg.maintain_budget)
+
+    def drain(self) -> int:
+        return self.index.maintain()
+
+    # ------------------------------------------------------------------
+    def latency_percentiles(self, which: str = "search") -> dict:
+        lat = self.search_lat if which == "search" else self.insert_lat
+        if not lat:
+            return {}
+        arr = np.asarray(lat) * 1e3
+        return {
+            "p50_ms": float(np.percentile(arr, 50)),
+            "p90_ms": float(np.percentile(arr, 90)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "p999_ms": float(np.percentile(arr, 99.9)),
+            "mean_ms": float(arr.mean()),
+            "n": len(arr),
+        }
+
+    def stats(self) -> dict:
+        return self.index.stats()

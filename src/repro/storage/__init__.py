@@ -1,0 +1,11 @@
+"""Storage engine: paged block pool (Block Controller analogue), version map,
+write-ahead log, and snapshot/restore (crash recovery, paper §4.3-4.4)."""
+from repro.storage.blockpool import BlockPool, make_block_pool  # noqa: F401
+from repro.storage.versionmap import (  # noqa: F401
+    DELETED_BIT,
+    VERSION_MASK,
+    bump_version,
+    is_deleted,
+    is_stale,
+    mark_deleted,
+)

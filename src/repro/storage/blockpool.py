@@ -1,0 +1,354 @@
+"""Paged block pool — the TPU-native analogue of SPFresh's Block Controller.
+
+Paper §4.3: postings live on raw SSD blocks; an in-memory *Block Mapping*
+maps posting id → block offsets; a *Free Block Pool* recycles blocks; APPEND
+touches only the posting's tail block; PUT bulk-writes a posting.
+
+Here the "SSD" is a fixed-capacity HBM array ``blocks[B_cap, BS, d]`` and the
+block mapping is ``posting_blocks[P_cap, MB]`` (int32 block ids, -1 unused).
+GET is a block-table gather (the same indirection as paged-attention KV);
+APPEND is a dynamic-update of a single (block, slot); the free pool is an
+int32 stack.  Everything is functional: each op returns a new pool pytree.
+
+Blocks carry payload + metadata per slot, mirroring the paper's on-disk tuple
+``<vector id, version number, raw vector>``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import field, pytree_dataclass
+
+Array = jax.Array
+
+
+@pytree_dataclass
+class BlockPool:
+    # --- static geometry ---
+    block_size: int = field(static=True)           # BS vectors per block
+    max_blocks_per_posting: int = field(static=True)  # MB
+    # --- device state ---
+    blocks: Array        # (B_cap, BS, d) payload
+    block_vid: Array     # (B_cap, BS) i32 vector ids, -1 empty
+    block_ver: Array     # (B_cap, BS) u8 version written with the data
+    posting_blocks: Array  # (P_cap, MB) i32 block ids, -1 unused
+    posting_len: Array     # (P_cap,) i32 vectors in posting
+    free_stack: Array      # (B_cap,) i32 free block ids (top at index free_top-1)
+    free_top: Array        # () i32 number of free blocks
+
+    @property
+    def posting_capacity(self) -> int:
+        return self.block_size * self.max_blocks_per_posting
+
+    @property
+    def num_postings_cap(self) -> int:
+        return self.posting_blocks.shape[0]
+
+    @property
+    def num_blocks_cap(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.blocks.shape[-1]
+
+
+def make_block_pool(
+    *,
+    num_blocks: int,
+    block_size: int,
+    dim: int,
+    num_postings_cap: int,
+    max_blocks_per_posting: int,
+    dtype=jnp.float32,
+) -> BlockPool:
+    """Fresh, empty pool: every block free, every posting empty."""
+    return BlockPool(
+        block_size=block_size,
+        max_blocks_per_posting=max_blocks_per_posting,
+        blocks=jnp.zeros((num_blocks, block_size, dim), dtype),
+        block_vid=jnp.full((num_blocks, block_size), -1, jnp.int32),
+        block_ver=jnp.zeros((num_blocks, block_size), jnp.uint8),
+        posting_blocks=jnp.full(
+            (num_postings_cap, max_blocks_per_posting), -1, jnp.int32
+        ),
+        posting_len=jnp.zeros((num_postings_cap,), jnp.int32),
+        free_stack=jnp.arange(num_blocks, dtype=jnp.int32),
+        free_top=jnp.asarray(num_blocks, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block allocation
+# ---------------------------------------------------------------------------
+
+def _alloc_block(pool: BlockPool) -> tuple[BlockPool, Array]:
+    """Pop a free block; returns (pool, block_id) with block_id = -1 on OOM."""
+    has = pool.free_top > 0
+    top = jnp.maximum(pool.free_top - 1, 0)
+    bid = jnp.where(has, pool.free_stack[top], -1)
+    pool = pool.replace(free_top=jnp.where(has, top, pool.free_top))
+    return pool, bid
+
+
+def _free_block(pool: BlockPool, bid: Array) -> BlockPool:
+    """Push a block back (no-op for bid < 0). Clears slot metadata."""
+    do = bid >= 0
+    safe = jnp.maximum(bid, 0)
+    free_stack = jnp.where(
+        do,
+        pool.free_stack.at[pool.free_top].set(bid.astype(jnp.int32)),
+        pool.free_stack,
+    )
+    block_vid = jnp.where(
+        do, pool.block_vid.at[safe].set(-1), pool.block_vid
+    )
+    return pool.replace(
+        free_stack=free_stack,
+        free_top=jnp.where(do, pool.free_top + 1, pool.free_top),
+        block_vid=block_vid,
+    )
+
+
+# ---------------------------------------------------------------------------
+# APPEND — tail-block read-modify-write (paper §4.3)
+# ---------------------------------------------------------------------------
+
+def append_one(
+    pool: BlockPool, pid: Array, vec: Array, vid: Array, ver: Array, enable: Array
+) -> tuple[BlockPool, Array]:
+    """Append one vector to posting ``pid``. Returns (pool, ok).
+
+    ok=False when the posting is at capacity or the pool is out of blocks;
+    the caller (Updater) counts drops — in production the shard would spill
+    to a sibling replica, here we surface it as a statistic.
+    """
+    length = pool.posting_len[pid]
+    slot = jnp.remainder(length, pool.block_size)
+    blk_idx = length // pool.block_size
+    need_new = (slot == 0)
+    full = blk_idx >= pool.max_blocks_per_posting
+    can = enable & (~full)
+
+    # Allocate only when needed; otherwise keep pool untouched.
+    def with_alloc(pool):
+        pool2, bid = _alloc_block(pool)
+        return pool2, bid
+
+    def no_alloc(pool):
+        safe_idx = jnp.minimum(blk_idx, pool.max_blocks_per_posting - 1)
+        return pool, pool.posting_blocks[pid, safe_idx]
+
+    pool, bid = jax.lax.cond(can & need_new, with_alloc, no_alloc, pool)
+    ok = can & (bid >= 0)
+    safe_bid = jnp.maximum(bid, 0)
+    safe_idx = jnp.minimum(blk_idx, pool.max_blocks_per_posting - 1)
+
+    posting_blocks = jnp.where(
+        ok & need_new,
+        pool.posting_blocks.at[pid, safe_idx].set(bid.astype(jnp.int32)),
+        pool.posting_blocks,
+    )
+    blocks = jnp.where(
+        ok,
+        pool.blocks.at[safe_bid, slot].set(vec.astype(pool.blocks.dtype)),
+        pool.blocks,
+    )
+    block_vid = jnp.where(
+        ok, pool.block_vid.at[safe_bid, slot].set(vid.astype(jnp.int32)),
+        pool.block_vid,
+    )
+    block_ver = jnp.where(
+        ok, pool.block_ver.at[safe_bid, slot].set(ver.astype(jnp.uint8)),
+        pool.block_ver,
+    )
+    posting_len = jnp.where(
+        ok, pool.posting_len.at[pid].add(1), pool.posting_len
+    )
+    return (
+        pool.replace(
+            blocks=blocks,
+            block_vid=block_vid,
+            block_ver=block_ver,
+            posting_blocks=posting_blocks,
+            posting_len=posting_len,
+        ),
+        ok,
+    )
+
+
+@jax.jit
+def append_batch(
+    pool: BlockPool,
+    pids: Array,
+    vecs: Array,
+    vids: Array,
+    vers: Array,
+    enable: Array,
+) -> tuple[BlockPool, Array]:
+    """Sequential batched append (appends can collide on a posting's tail).
+
+    ``lax.scan`` over the batch; each step is O(1) state surgery, mirroring
+    the paper's per-request APPEND path.  Returns (pool, ok_mask).
+    """
+
+    def step(pool, args):
+        pid, vec, vid, ver, en = args
+        pool, ok = append_one(pool, pid, vec, vid, ver, en)
+        return pool, ok
+
+    pool, oks = jax.lax.scan(step, pool, (pids, vecs, vids, vers, enable))
+    return pool, oks
+
+
+# ---------------------------------------------------------------------------
+# GET — block-table gather (ParallelGET is vmap of this)
+# ---------------------------------------------------------------------------
+
+def gather_posting(
+    pool: BlockPool, pid: Array
+) -> tuple[Array, Array, Array, Array]:
+    """Read a whole posting into fixed-capacity buffers.
+
+    Returns ``(vecs (MB*BS, d), vids (MB*BS,), vers (MB*BS,), valid (MB*BS,))``.
+    Slots past ``posting_len`` are masked invalid.
+    """
+    bids = pool.posting_blocks[pid]  # (MB,)
+    safe = jnp.maximum(bids, 0)
+    vecs = pool.blocks[safe]         # (MB, BS, d)
+    vids = pool.block_vid[safe]
+    vers = pool.block_ver[safe]
+    cap = pool.posting_capacity
+    d = pool.dim
+    vecs = vecs.reshape(cap, d)
+    vids = vids.reshape(cap)
+    vers = vers.reshape(cap)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    valid = (idx < pool.posting_len[pid]) & (vids >= 0)
+    return vecs, vids, vers, valid
+
+
+def parallel_get(
+    pool: BlockPool, pids: Array
+) -> tuple[Array, Array, Array, Array]:
+    """Paper's ParallelGET: batched posting fetch, ``pids (m,)`` →
+    ``(m, MB*BS, ...)`` buffers."""
+    return jax.vmap(lambda p: gather_posting(pool, p))(pids)
+
+
+def gather_posting_ids(
+    pool: BlockPool, pid: Array
+) -> tuple[Array, Array, Array]:
+    """Metadata-only posting read: ``(vids, vers, valid)`` without payload.
+
+    Used by the reassign NPA re-check (does a live replica already exist in
+    the target posting?) where fetching vector payloads would be wasted HBM
+    traffic.
+    """
+    bids = pool.posting_blocks[pid]
+    safe = jnp.maximum(bids, 0)
+    vids = pool.block_vid[safe].reshape(-1)
+    vers = pool.block_ver[safe].reshape(-1)
+    idx = jnp.arange(pool.posting_capacity, dtype=jnp.int32)
+    valid = (idx < pool.posting_len[pid]) & (vids >= 0)
+    return vids, vers, valid
+
+
+# ---------------------------------------------------------------------------
+# PUT / DELETE — bulk posting rewrite and free
+# ---------------------------------------------------------------------------
+
+def free_posting(pool: BlockPool, pid: Array, enable: Array) -> BlockPool:
+    """Release all blocks of ``pid`` to the free pool and empty it."""
+    bids = pool.posting_blocks[pid]  # (MB,)
+
+    def step(pool, bid):
+        pool = jax.lax.cond(
+            enable & (bid >= 0), lambda p: _free_block(p, bid), lambda p: p, pool
+        )
+        return pool, ()
+
+    pool, _ = jax.lax.scan(step, pool, bids)
+    posting_blocks = jnp.where(
+        enable, pool.posting_blocks.at[pid].set(-1), pool.posting_blocks
+    )
+    posting_len = jnp.where(
+        enable, pool.posting_len.at[pid].set(0), pool.posting_len
+    )
+    return pool.replace(posting_blocks=posting_blocks, posting_len=posting_len)
+
+
+def put_posting(
+    pool: BlockPool,
+    pid: Array,
+    vecs: Array,
+    vids: Array,
+    vers: Array,
+    n: Array,
+    enable: Array,
+) -> tuple[BlockPool, Array]:
+    """Bulk-write a posting (paper PUT): free old blocks, allocate
+    ``ceil(n/BS)`` fresh ones, write payload, set length.
+
+    ``vecs (cap, d)`` etc. are fixed-capacity buffers; only the first ``n``
+    entries are meaningful.  Returns (pool, ok).
+    """
+    cap = vecs.shape[0]
+    assert cap == pool.posting_capacity, (cap, pool.posting_capacity)
+    pool = free_posting(pool, pid, enable)
+    n_blocks_needed = (n + pool.block_size - 1) // pool.block_size
+    have = pool.free_top >= n_blocks_needed
+    ok = enable & have
+
+    bs = pool.block_size
+    vecs = vecs.reshape(pool.max_blocks_per_posting, bs, -1)
+    vids = vids.reshape(pool.max_blocks_per_posting, bs)
+    vers = vers.reshape(pool.max_blocks_per_posting, bs)
+
+    def step(carry, i):
+        pool = carry
+
+        def write(pool):
+            pool2, bid = _alloc_block(pool)
+            safe = jnp.maximum(bid, 0)
+            slot_idx = jnp.arange(bs, dtype=jnp.int32)
+            in_range = (i * bs + slot_idx) < n
+            blocks = pool2.blocks.at[safe].set(
+                jnp.where(
+                    in_range[:, None],
+                    vecs[i].astype(pool2.blocks.dtype),
+                    pool2.blocks[safe],
+                )
+            )
+            block_vid = pool2.block_vid.at[safe].set(
+                jnp.where(in_range, vids[i], -1)
+            )
+            block_ver = pool2.block_ver.at[safe].set(
+                jnp.where(in_range, vers[i], 0)
+            )
+            posting_blocks = pool2.posting_blocks.at[pid, i].set(bid)
+            return pool2.replace(
+                blocks=blocks,
+                block_vid=block_vid,
+                block_ver=block_ver,
+                posting_blocks=posting_blocks,
+            )
+
+        pool = jax.lax.cond(ok & (i < n_blocks_needed), write, lambda p: p, pool)
+        return pool, ()
+
+    pool, _ = jax.lax.scan(
+        step, pool, jnp.arange(pool.max_blocks_per_posting, dtype=jnp.int32)
+    )
+    posting_len = jnp.where(
+        ok, pool.posting_len.at[pid].set(n.astype(jnp.int32)), pool.posting_len
+    )
+    return pool.replace(posting_len=posting_len), ok
+
+
+def used_blocks(pool: BlockPool) -> Array:
+    """Number of allocated blocks (for resource accounting, paper Fig. 7d)."""
+    return pool.num_blocks_cap - pool.free_top

@@ -1,0 +1,78 @@
+"""Version map — paper §4.2.1.
+
+One byte per vector id: low 7 bits = reassign version (wraps mod 128), high
+bit = deletion label.  A stored replica is *stale* when its written version
+differs from the map's current version, or the vector is deleted.  Reassign
+bumps the version and appends a fresh replica; stale replicas are filtered at
+search time and garbage-collected during splits.
+
+The paper's CAS-on-version concurrency control degenerates to functional
+updates here (each jitted step owns the state), but the version semantics —
+defer/batch deletes, cheap invalidation of all old replicas — are identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+VERSION_MASK = jnp.uint8(0x7F)
+DELETED_BIT = jnp.uint8(0x80)
+
+# The version array reserves its LAST slot as a scratch target: disabled rows
+# in a batched update scatter there.  Routing disabled rows to a live index
+# (e.g. clip-to-0) is a correctness hazard — XLA scatter with duplicate
+# indices has unspecified order, so a disabled row's stale write could
+# clobber a real update to vid 0.
+
+
+def scratch_index(versions: Array) -> int:
+    return versions.shape[0] - 1
+
+
+def _targets(versions: Array, vids: Array, enable: Array | None) -> Array:
+    scratch = scratch_index(versions)
+    safe = jnp.clip(vids, 0, scratch - 1)
+    if enable is None:
+        return jnp.where(vids >= 0, safe, scratch)
+    return jnp.where(enable & (vids >= 0), safe, scratch)
+
+
+def current_version(versions: Array, vids: Array) -> Array:
+    """Low-7-bit current version for each vid."""
+    return versions[jnp.clip(vids, 0, scratch_index(versions) - 1)] & VERSION_MASK
+
+
+def bump_version(versions: Array, vids: Array, enable: Array | None = None) -> Array:
+    """Increment the 7-bit reassign version (mod 128), preserving the
+    deletion bit.  Disabled rows write to the scratch slot."""
+    idx = _targets(versions, vids, enable)
+    cur = versions[idx]
+    new = (cur & DELETED_BIT) | ((cur + 1) & VERSION_MASK)
+    return versions.at[idx].set(new)
+
+
+def mark_deleted(versions: Array, vids: Array, enable: Array | None = None) -> Array:
+    idx = _targets(versions, vids, enable)
+    return versions.at[idx].set(versions[idx] | DELETED_BIT)
+
+
+def clear(versions: Array, vids: Array, enable: Array | None = None) -> Array:
+    """Reset a vid's byte (used when a deleted id slot is recycled)."""
+    idx = _targets(versions, vids, enable)
+    return versions.at[idx].set(jnp.zeros_like(versions[idx]))
+
+
+def is_deleted(versions: Array, vids: Array) -> Array:
+    return (versions[vids] & DELETED_BIT) != 0
+
+
+def is_stale(versions: Array, vids: Array, stored_ver: Array) -> Array:
+    """True when a stored replica must be ignored (filtered at search)."""
+    safe = jnp.maximum(vids, 0)
+    cur = versions[safe]
+    stale = ((cur & VERSION_MASK) != (stored_ver & VERSION_MASK)) | (
+        (cur & DELETED_BIT) != 0
+    )
+    return stale | (vids < 0)

@@ -1,0 +1,106 @@
+"""Write-ahead log — paper §4.4 crash recovery (WAL half).
+
+All update requests between two snapshots are appended to the WAL; recovery
+replays the WAL on top of the latest snapshot.  Records are length-prefixed
+msgpack blobs with numpy payloads, fsync'd per batch (the paper's durability
+point is the SSD write; ours is the fsync).
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+from dataclasses import dataclass
+from typing import Iterator
+
+import msgpack
+import numpy as np
+
+_MAGIC = b"SPFW"
+_HEADER = struct.Struct("<4sI")  # magic, payload length
+
+
+@dataclass
+class WalRecord:
+    op: str                      # "insert" | "delete"
+    payload: dict[str, np.ndarray]
+    seqno: int
+
+
+def _encode(rec: WalRecord) -> bytes:
+    arrays = {}
+    for k, v in rec.payload.items():
+        buf = io.BytesIO()
+        np.save(buf, np.asarray(v), allow_pickle=False)
+        arrays[k] = buf.getvalue()
+    body = msgpack.packb(
+        {"op": rec.op, "seqno": rec.seqno, "arrays": arrays},
+        use_bin_type=True,
+    )
+    return _HEADER.pack(_MAGIC, len(body)) + body
+
+
+def _decode(body: bytes) -> WalRecord:
+    obj = msgpack.unpackb(body, raw=False)
+    payload = {
+        k: np.load(io.BytesIO(v), allow_pickle=False)
+        for k, v in obj["arrays"].items()
+    }
+    return WalRecord(op=obj["op"], payload=payload, seqno=obj["seqno"])
+
+
+class WriteAheadLog:
+    """Append-only log; one per index shard."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._fh = open(path, "ab")
+        self._seqno = self._scan_last_seqno()
+
+    def _scan_last_seqno(self) -> int:
+        last = -1
+        for rec in iter_wal(self.path):
+            last = rec.seqno
+        return last
+
+    @property
+    def next_seqno(self) -> int:
+        return self._seqno + 1
+
+    def append(self, op: str, payload: dict[str, np.ndarray]) -> int:
+        self._seqno += 1
+        rec = WalRecord(op=op, payload=payload, seqno=self._seqno)
+        self._fh.write(_encode(rec))
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        return self._seqno
+
+    def truncate(self) -> None:
+        """Called after a successful snapshot: the log restarts empty."""
+        self._fh.close()
+        self._fh = open(self.path, "wb")
+        self._fh.flush()
+
+    def close(self) -> None:
+        self._fh.close()
+
+
+def iter_wal(path: str, after_seqno: int = -1) -> Iterator[WalRecord]:
+    """Replay iterator.  Tolerates a torn tail record (crash mid-append)."""
+    if not os.path.exists(path):
+        return
+    with open(path, "rb") as fh:
+        while True:
+            head = fh.read(_HEADER.size)
+            if len(head) < _HEADER.size:
+                return
+            magic, length = _HEADER.unpack(head)
+            if magic != _MAGIC:
+                return  # corrupt tail
+            body = fh.read(length)
+            if len(body) < length:
+                return  # torn write
+            rec = _decode(body)
+            if rec.seqno > after_seqno:
+                yield rec

@@ -1,0 +1,8 @@
+"""Training substrate: in-house AdamW, schedules, trainer with
+checkpoint/restart."""
+from repro.train.optimizer import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    make_train_step,
+)

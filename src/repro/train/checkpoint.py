@@ -1,0 +1,44 @@
+"""Training checkpoint store: atomic snapshots of (params, opt_state, step)
+with retention — reuses the index snapshot machinery (storage/snapshot.py).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+from repro.storage.snapshot import load_snapshot, save_snapshot, snapshot_exists
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointStore:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and snapshot_exists(os.path.join(self.root, name)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, state: Any, extra: dict | None = None) -> None:
+        save_snapshot(self._path(step), state, step=step, extra=extra)
+        for old in self.steps()[: -self.keep]:
+            import shutil
+
+            shutil.rmtree(self._path(old), ignore_errors=True)
+
+    def restore_latest(self, template: Any) -> tuple[Any, int, dict] | None:
+        steps = self.steps()
+        if not steps:
+            return None
+        state, manifest = load_snapshot(self._path(steps[-1]), template)
+        return state, manifest["step"], manifest.get("extra", {})

@@ -1,0 +1,2 @@
+"""Small shared utilities (pytree dataclasses, logging, timing)."""
+from repro.utils.tree import pytree_dataclass, field  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pytree dataclass helper.
+
+We do not depend on flax/chex; this registers a plain ``dataclasses.dataclass``
+as a JAX pytree.  Fields marked ``static=True`` become aux data (hashable,
+compared by equality, trigger recompilation when changed) — used for shapes,
+dtypes and protocol hyperparameters that must be compile-time constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def field(*, static: bool = False, **kwargs) -> Any:
+    """Dataclass field; ``static=True`` marks it as pytree aux data."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata["static"] = static
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: type[_T]) -> type[_T]:
+    """Decorator: make ``cls`` a frozen dataclass registered as a pytree."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = dataclasses.fields(cls)
+    data_names = [f.name for f in fields if not f.metadata.get("static", False)]
+    static_names = [f.name for f in fields if f.metadata.get("static", False)]
+
+    def flatten(obj):
+        data = tuple(getattr(obj, n) for n in data_names)
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return data, aux
+
+    def flatten_with_keys(obj):
+        data = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in data_names
+        )
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return data, aux
+
+    def unflatten(aux, data):
+        kwargs = dict(zip(data_names, data))
+        kwargs.update(dict(zip(static_names, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_with_keys(
+        cls, flatten_with_keys, unflatten, flatten
+    )
+
+    def replace(self, **updates):
+        return dataclasses.replace(self, **updates)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls

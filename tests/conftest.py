@@ -1,0 +1,24 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets 512 itself, in its own
+# process). Keep XLA quiet and deterministic on CPU.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered(rng, n, d, n_clusters=8, spread=0.05):
+    """Clustered synthetic vectors (unit-ish scale)."""
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, size=n)
+    x = centers[assign] + spread * rng.normal(size=(n, d)).astype(np.float32)
+    return x.astype(np.float32)

@@ -1,0 +1,128 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage import blockpool as bp
+
+
+def make_pool(**kw):
+    args = dict(
+        num_blocks=32, block_size=4, dim=8, num_postings_cap=8,
+        max_blocks_per_posting=4,
+    )
+    args.update(kw)
+    return bp.make_block_pool(**args)
+
+
+def _append(pool, pid, vec, vid, ver=0, enable=True):
+    return bp.append_one(
+        pool,
+        jnp.asarray(pid, jnp.int32),
+        jnp.asarray(vec, jnp.float32),
+        jnp.asarray(vid, jnp.int32),
+        jnp.asarray(ver, jnp.uint8),
+        jnp.asarray(enable),
+    )
+
+
+def test_append_and_gather_roundtrip(rng):
+    pool = make_pool()
+    vecs = rng.normal(size=(6, 8)).astype(np.float32)
+    for i in range(6):
+        pool, ok = _append(pool, 2, vecs[i], 100 + i)
+        assert bool(ok)
+    out_vecs, out_vids, out_vers, valid = bp.gather_posting(pool, jnp.asarray(2))
+    valid = np.asarray(valid)
+    assert valid.sum() == 6
+    np.testing.assert_allclose(np.asarray(out_vecs)[valid], vecs, rtol=1e-6)
+    assert set(np.asarray(out_vids)[valid].tolist()) == {100 + i for i in range(6)}
+
+
+def test_append_allocates_blocks_lazily(rng):
+    pool = make_pool()
+    start_free = int(pool.free_top)
+    pool, _ = _append(pool, 0, np.zeros(8), 1)
+    assert int(pool.free_top) == start_free - 1
+    # 3 more appends fill the block; no new allocation
+    for i in range(3):
+        pool, _ = _append(pool, 0, np.zeros(8), 2 + i)
+    assert int(pool.free_top) == start_free - 1
+    pool, _ = _append(pool, 0, np.zeros(8), 9)
+    assert int(pool.free_top) == start_free - 2
+
+
+def test_append_posting_capacity_drop(rng):
+    pool = make_pool()
+    for i in range(16):  # capacity = 4*4
+        pool, ok = _append(pool, 1, np.zeros(8), i)
+        assert bool(ok)
+    pool, ok = _append(pool, 1, np.zeros(8), 99)
+    assert not bool(ok)
+    assert int(pool.posting_len[1]) == 16
+
+
+def test_pool_oom_returns_not_ok(rng):
+    pool = make_pool(num_blocks=1)
+    pool, ok = _append(pool, 0, np.zeros(8), 0)
+    assert bool(ok)
+    pool, ok = _append(pool, 1, np.zeros(8), 1)  # needs a second block
+    assert not bool(ok)
+
+
+def test_put_and_free_posting(rng):
+    pool = make_pool()
+    cap = pool.posting_capacity
+    vecs = rng.normal(size=(cap, 8)).astype(np.float32)
+    vids = np.arange(cap, dtype=np.int32)
+    vers = np.zeros(cap, np.uint8)
+    pool, ok = bp.put_posting(
+        pool, jnp.asarray(3), jnp.asarray(vecs), jnp.asarray(vids),
+        jnp.asarray(vers), jnp.asarray(10), jnp.asarray(True),
+    )
+    assert bool(ok)
+    assert int(pool.posting_len[3]) == 10
+    out_vecs, out_vids, _, valid = bp.gather_posting(pool, jnp.asarray(3))
+    assert np.asarray(valid).sum() == 10
+    np.testing.assert_allclose(
+        np.asarray(out_vecs)[np.asarray(valid)], vecs[:10], rtol=1e-6
+    )
+    used_before = int(bp.used_blocks(pool))
+    pool = bp.free_posting(pool, jnp.asarray(3), jnp.asarray(True))
+    assert int(pool.posting_len[3]) == 0
+    assert int(bp.used_blocks(pool)) == used_before - 3  # ceil(10/4) freed
+
+
+def test_put_overwrites_and_releases_old_blocks(rng):
+    pool = make_pool()
+    cap = pool.posting_capacity
+    buf = lambda: (
+        jnp.asarray(rng.normal(size=(cap, 8)).astype(np.float32)),
+        jnp.asarray(np.arange(cap, dtype=np.int32)),
+        jnp.asarray(np.zeros(cap, np.uint8)),
+    )
+    v, i, r = buf()
+    pool, _ = bp.put_posting(pool, jnp.asarray(0), v, i, r, jnp.asarray(16), jnp.asarray(True))
+    used = int(bp.used_blocks(pool))
+    v, i, r = buf()
+    pool, _ = bp.put_posting(pool, jnp.asarray(0), v, i, r, jnp.asarray(4), jnp.asarray(True))
+    assert int(bp.used_blocks(pool)) == used - 3  # 4 blocks -> 1 block
+
+
+def test_append_batch_sequential_collisions(rng):
+    pool = make_pool()
+    n = 10
+    pids = jnp.zeros(n, jnp.int32)
+    vecs = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    vids = jnp.arange(n, dtype=jnp.int32)
+    vers = jnp.zeros(n, jnp.uint8)
+    enable = jnp.ones(n, bool)
+    pool, oks = bp.append_batch(pool, pids, vecs, vids, vers, enable)
+    assert np.asarray(oks).all()
+    assert int(pool.posting_len[0]) == n
+
+
+def test_disabled_append_is_noop(rng):
+    pool = make_pool()
+    pool2, ok = _append(pool, 0, np.ones(8), 5, enable=False)
+    assert not bool(ok)
+    assert int(pool2.posting_len[0]) == 0
+    assert int(pool2.free_top) == int(pool.free_top)

@@ -1,0 +1,85 @@
+"""Data substrate: workload generators behave per paper §5.1."""
+import numpy as np
+
+from repro.data.vectors import (
+    UpdateWorkload,
+    make_shifting_stream,
+    make_sift_like,
+    make_spacev_like,
+)
+
+
+def test_workload_epoch_semantics():
+    wl = UpdateWorkload.spacev(n=1000, dim=8, rate=0.01, seed=0)
+    live0 = set(wl.live_ids().tolist())
+    assert len(live0) == 1000
+    del_vids, ins_vecs, ins_vids = wl.epoch()
+    assert len(del_vids) == 10 and len(ins_vids) == 10  # 1% each
+    live1 = set(wl.live_ids().tolist())
+    assert live1 == (live0 - set(del_vids.tolist())) | set(ins_vids.tolist())
+    assert len(live1) == 1000
+    # inserted ids are fresh
+    assert not (set(ins_vids.tolist()) & live0)
+
+
+def test_workload_queries_have_valid_gt():
+    wl = UpdateWorkload.sift(n=500, dim=8, seed=1)
+    wl.epoch()
+    q, gt = wl.queries(16)
+    assert q.shape == (16, 8) and gt.shape == (16, 10)
+    live = set(wl.live_ids().tolist())
+    assert set(gt.reshape(-1).tolist()).issubset(live)
+
+
+def test_skew_vs_uniform_distributions():
+    """SPACEV-like data must be measurably more cluster-skewed than
+    SIFT-like (the paper's central data property)."""
+    from repro.core.clustering import hierarchical_balanced_kmeans
+
+    uni = make_sift_like(3000, 8, seed=2)
+    skew = make_spacev_like(3000, 8, seed=2)
+
+    def cluster_mass_cv(x):
+        _, assign = hierarchical_balanced_kmeans(x, max_posting_size=3000,
+                                                 branch=8, seed=0)
+        # one-level split: measure geometric imbalance instead via
+        # distance-to-mean spread of 8-means masses
+        import jax
+        import jax.numpy as jnp
+        from repro.core.clustering import balanced_kmeans
+
+        _, a = balanced_kmeans(
+            jax.random.PRNGKey(0), jnp.asarray(x), jnp.ones(len(x), bool),
+            k=8, balance_weight=0.0,
+        )
+        counts = np.bincount(np.asarray(a), minlength=8)
+        return counts.std() / counts.mean()
+
+    assert cluster_mass_cv(skew) > cluster_mass_cv(uni)
+
+
+def test_shifting_stream_is_hot():
+    """The shift stream is denser (hot regions) than a uniform stream —
+    measured as median 10-NN distance over a sample."""
+
+    def density(x, sample=200):
+        rng = np.random.default_rng(0)
+        sel = rng.integers(0, len(x), sample)
+        d = ((x[sel][:, None, :] - x[None]) ** 2).sum(-1)
+        knn = np.sort(d, axis=1)[:, 10]  # 10th NN (0th is self)
+        return float(np.median(knn))
+
+    hot = density(make_shifting_stream(2000, 8, seed=3, hot_fraction=0.8))
+    uni = density(make_sift_like(2000, 8, seed=3))
+    assert hot < uni * 0.5, (hot, uni)
+
+
+def test_deterministic_replay():
+    a = UpdateWorkload.spacev(n=300, dim=8, seed=5)
+    b = UpdateWorkload.spacev(n=300, dim=8, seed=5)
+    for _ in range(3):
+        da, ia, va = a.epoch()
+        db, ib, vb = b.epoch()
+        np.testing.assert_array_equal(da, db)
+        np.testing.assert_array_equal(va, vb)
+        np.testing.assert_allclose(ia, ib)

@@ -1,0 +1,52 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distance import (
+    MASK_DISTANCE,
+    masked_topk,
+    pairwise_sql2,
+    sql2,
+    squared_norms,
+)
+
+
+@pytest.mark.parametrize("m,n,d", [(4, 7, 16), (1, 1, 8), (32, 64, 128)])
+def test_pairwise_matches_naive(rng, m, n, d):
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    got = np.asarray(pairwise_sql2(jnp.asarray(q), jnp.asarray(x)))
+    want = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_uses_cached_norms(rng):
+    q = rng.normal(size=(3, 8)).astype(np.float32)
+    x = rng.normal(size=(5, 8)).astype(np.float32)
+    sqn = squared_norms(jnp.asarray(x))
+    a = pairwise_sql2(jnp.asarray(q), jnp.asarray(x))
+    b = pairwise_sql2(jnp.asarray(q), jnp.asarray(x), sqn)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_sql2_broadcast(rng):
+    a = rng.normal(size=(4, 8)).astype(np.float32)
+    b = rng.normal(size=(4, 8)).astype(np.float32)
+    got = np.asarray(sql2(jnp.asarray(a), jnp.asarray(b)))
+    want = ((a - b) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_masked_topk_excludes_invalid(rng):
+    d = jnp.asarray([[3.0, 1.0, 2.0, 0.5]])
+    valid = jnp.asarray([[True, True, True, False]])
+    dist, idx = masked_topk(d, valid, 2)
+    assert idx.tolist() == [[1, 2]]
+    np.testing.assert_allclose(np.asarray(dist), [[1.0, 2.0]])
+
+
+def test_masked_topk_fewer_than_k():
+    d = jnp.asarray([[1.0, 2.0]])
+    valid = jnp.asarray([[True, False]])
+    dist, idx = masked_topk(d, valid, 2)
+    assert float(dist[0, 1]) >= float(MASK_DISTANCE) / 2

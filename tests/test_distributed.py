@@ -1,0 +1,22 @@
+"""Sharded-index behaviour on an 8-device fake mesh (subprocess so the
+main test process keeps one device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_index_suite():
+    script = os.path.join(os.path.dirname(__file__), "distributed_script.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "ALL_DISTRIBUTED_PASS" in proc.stdout

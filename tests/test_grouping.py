@@ -1,0 +1,68 @@
+"""Two-level centroid routing: exactness at full gprobe, recall at small
+gprobe, graceful staleness after splits."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lire
+from repro.core.grouping import build_group_index, navigate_grouped, search_grouped
+from repro.core.index import SPFreshIndex
+from tests.conftest import make_clustered
+from tests.test_lire import brute_force_knn, small_cfg
+
+
+def test_grouped_exact_when_probing_all_groups(rng):
+    base = make_clustered(rng, 1200, 16, n_clusters=10)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    gidx = build_group_index(idx.state, n_groups=8, capacity=64)
+    q = jnp.asarray(base[:16])
+    d0, p0 = lire.navigate(idx.state, q, 8)
+    d1, p1 = navigate_grouped(idx.state, gidx, q, nprobe=8, gprobe=8)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4,
+                               atol=1e-4)
+    # pids may differ on exact distance ties; check distances only + overlap
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 8
+        for a, b in zip(np.asarray(p0), np.asarray(p1))
+    ])
+    assert overlap > 0.9
+
+
+def test_grouped_search_recall_small_gprobe(rng):
+    base = make_clustered(rng, 1500, 16, n_clusters=12)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    gidx = build_group_index(idx.state, n_groups=16, capacity=32)
+    queries = base[rng.integers(0, len(base), 32)] + 0.01 * rng.normal(
+        size=(32, 16)
+    ).astype(np.float32)
+    gt = brute_force_knn(base, np.arange(len(base)), queries, 10)
+    _, got = search_grouped(
+        idx.state, gidx, jnp.asarray(queries), k=10, nprobe=8, gprobe=6
+    )
+    got = np.asarray(got)
+    hits = sum(
+        len(set(a.tolist()) & set(b.tolist())) for a, b in zip(gt, got)
+    )
+    recall = hits / 320
+    assert recall > 0.85, f"grouped recall {recall}"
+
+
+def test_grouped_staleness_degrades_gracefully(rng):
+    """Splits between group refreshes leave new centroids unrouted —
+    recall dips but queries keep working; a refresh restores it."""
+    base = make_clustered(rng, 1000, 16, n_clusters=8)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    gidx = build_group_index(idx.state, n_groups=16, capacity=32)
+    extra = (base[0][None, :] + 0.02 * rng.normal(size=(200, 16))).astype(np.float32)
+    ids = np.arange(5000, 5200, dtype=np.int32)
+    idx.insert(extra, ids)
+    idx.maintain()
+    q = jnp.asarray(extra[:16])
+    _, got_stale = search_grouped(idx.state, gidx, q, k=5, nprobe=8, gprobe=6)
+    # no crash; results well-formed
+    assert np.asarray(got_stale).shape == (16, 5)
+    # refresh restores fresh-vector recall
+    gidx2 = build_group_index(idx.state, n_groups=16, capacity=64)
+    _, got = search_grouped(idx.state, gidx2, q, k=5, nprobe=8, gprobe=6)
+    got = np.asarray(got)
+    found = sum(int(ids[i]) in got[i].tolist() for i in range(16))
+    assert found >= 14, f"{found}/16 after refresh"

@@ -1,0 +1,39 @@
+"""End-to-end: the Pallas l2_topk kernel drives the real index search
+(interpret mode) and matches the XLA navigation path."""
+import dataclasses
+
+import numpy as np
+
+from repro.core.index import SPFreshIndex, build_state
+from tests.conftest import make_clustered
+from tests.test_lire import small_cfg
+
+
+def test_search_with_pallas_navigation_matches(rng):
+    base = make_clustered(rng, 600, 16, n_clusters=6)
+    cfg = small_cfg()
+    state = build_state(cfg, base)
+    idx_xla = SPFreshIndex(state)
+    idx_pl = SPFreshIndex(
+        state.replace(cfg=dataclasses.replace(cfg, use_pallas_nav=True))
+    )
+    queries = base[:24] + 0.01 * rng.normal(size=(24, 16)).astype(np.float32)
+    d0, v0 = idx_xla.search(queries, 10)
+    d1, v1 = idx_pl.search(queries, 10)
+    np.testing.assert_allclose(d0, d1, rtol=1e-3, atol=1e-3)
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 10 for a, b in zip(v0, v1)
+    ])
+    assert overlap > 0.95, overlap
+
+
+def test_insert_with_pallas_routing(rng):
+    base = make_clustered(rng, 400, 16, n_clusters=4)
+    cfg = dataclasses.replace(small_cfg(), use_pallas_nav=True)
+    idx = SPFreshIndex.build(cfg, base)
+    new = make_clustered(rng, 20, 16, n_clusters=2)
+    ids = np.arange(2000, 2020, dtype=np.int32)
+    idx.insert(new, ids)
+    _, got = idx.search(new, 5)
+    found = sum(int(ids[i]) in got[i].tolist() for i in range(20))
+    assert found >= 18, found

@@ -1,0 +1,74 @@
+"""l2_topk Pallas kernel vs pure-jnp oracle (interpret mode, shape/dtype sweep)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.l2_topk.ops import l2_topk
+from repro.kernels.l2_topk.ref import l2_topk_ref
+
+
+def _check(rng, q_n, p_n, d, k, dtype, n_invalid=0):
+    q = rng.normal(size=(q_n, d)).astype(np.float32)
+    c = rng.normal(size=(p_n, d)).astype(np.float32)
+    valid = np.ones(p_n, bool)
+    if n_invalid:
+        valid[rng.choice(p_n, size=n_invalid, replace=False)] = False
+    qj = jnp.asarray(q, dtype)
+    cj = jnp.asarray(c, dtype)
+    got_d, got_i = l2_topk(
+        qj, cj, jnp.asarray(valid), k=k, block_q=8, block_p=128, interpret=True
+    )
+    want_d, want_i = l2_topk_ref(qj, cj, jnp.asarray(valid), k=k)
+    got_d, got_i = np.asarray(got_d), np.asarray(got_i)
+    want_d, want_i = np.asarray(want_d), np.asarray(want_i)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    # Distances must match (sorted ascending) — tie-tolerant on indices.
+    np.testing.assert_allclose(got_d, np.maximum(want_d, 0), rtol=tol, atol=tol)
+    n_valid = valid.sum()
+    for r in range(q_n):
+        kk = min(k, n_valid)
+        assert (np.asarray(got_i[r][:kk]) >= 0).all()
+        # indices agree as sets up to distance ties
+        gs, ws = set(got_i[r][:kk].tolist()), set(want_i[r][:kk].tolist())
+        if gs != ws:
+            diff = gs.symmetric_difference(ws)
+            dd = np.sort(
+                ((q[r] - c[list(diff)]) ** 2).sum(-1)
+            )
+            assert np.allclose(dd, dd[0], rtol=tol, atol=tol), (
+                f"row {r}: index mismatch not explained by ties"
+            )
+
+
+@pytest.mark.parametrize("q_n,p_n,d,k", [
+    (4, 128, 16, 4),
+    (8, 256, 32, 8),
+    (16, 512, 128, 16),
+    (3, 300, 100, 8),     # unaligned shapes exercise padding
+    (1, 128, 64, 1),
+])
+def test_l2_topk_f32(rng, q_n, p_n, d, k):
+    _check(rng, q_n, p_n, d, k, jnp.float32)
+
+
+@pytest.mark.parametrize("q_n,p_n,d,k", [(8, 256, 64, 8)])
+def test_l2_topk_bf16(rng, q_n, p_n, d, k):
+    _check(rng, q_n, p_n, d, k, jnp.bfloat16)
+
+
+def test_l2_topk_invalid_centroids(rng):
+    _check(rng, 4, 128, 16, 8, jnp.float32, n_invalid=100)
+
+
+def test_l2_topk_fewer_valid_than_k(rng):
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    c = rng.normal(size=(128, 8)).astype(np.float32)
+    valid = np.zeros(128, bool)
+    valid[:3] = True
+    d, i = l2_topk(
+        jnp.asarray(q), jnp.asarray(c), jnp.asarray(valid), k=8,
+        block_q=8, block_p=128, interpret=True,
+    )
+    i = np.asarray(i)
+    assert (i[:, 3:] == -1).all()
+    assert set(i[:, :3].reshape(-1).tolist()).issubset({0, 1, 2})

@@ -1,0 +1,93 @@
+"""posting_scan Pallas kernels vs pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.posting_scan.kernel import scan_batched, scan_per_query
+from repro.kernels.posting_scan.ops import BIG, scan_posting_blocks, scan_unique_blocks
+from repro.kernels.posting_scan.ref import (
+    scan_posting_blocks_ref,
+    scan_unique_blocks_ref,
+)
+
+
+@pytest.mark.parametrize("q_n,n_blocks,bs,d,nb,dtype", [
+    (4, 32, 8, 16, 6, jnp.float32),
+    (8, 64, 16, 128, 4, jnp.float32),
+    (2, 16, 8, 32, 3, jnp.bfloat16),
+    (1, 8, 4, 8, 1, jnp.float32),
+])
+def test_scan_per_query_matches_ref(rng, q_n, n_blocks, bs, d, nb, dtype):
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), dtype)
+    queries = jnp.asarray(rng.normal(size=(q_n, d)), dtype)
+    table = jnp.asarray(rng.integers(0, n_blocks, size=(q_n, nb)), jnp.int32)
+    got = scan_per_query(table, queries, blocks, interpret=True)
+    want = scan_posting_blocks_ref(table, queries, blocks)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("q_n,n_blocks,bs,d,nb,dtype", [
+    (4, 32, 8, 16, 6, jnp.float32),
+    (8, 64, 16, 128, 12, jnp.float32),
+    (2, 16, 8, 32, 3, jnp.bfloat16),
+])
+def test_scan_batched_matches_ref(rng, q_n, n_blocks, bs, d, nb, dtype):
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), dtype)
+    queries = jnp.asarray(rng.normal(size=(q_n, d)), dtype)
+    ids = jnp.asarray(
+        rng.choice(n_blocks, size=nb, replace=False), jnp.int32
+    )
+    got = scan_batched(ids, queries, blocks, interpret=True)
+    want = scan_unique_blocks_ref(ids, queries, blocks)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_scan_posting_blocks_masks_absent_pages(rng):
+    n_blocks, bs, d = 16, 4, 8
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(2, d)), jnp.float32)
+    posting_blocks = jnp.asarray(
+        [[0, 1, -1, -1], [2, -1, -1, -1], [3, 4, 5, -1]], jnp.int32
+    )
+    pids = jnp.asarray([[0, 2], [1, -1]], jnp.int32)
+    dists, page_ok = scan_posting_blocks(
+        queries, posting_blocks, pids, blocks, interpret=True
+    )
+    dists = np.asarray(dists).reshape(2, 2, 4, bs)
+    # query 0, posting 0 has pages {0,1}; pages 2,3 masked
+    assert (dists[0, 0, 2:] >= BIG / 2).all()
+    assert (dists[0, 0, :2] < BIG / 2).all()
+    # query 1 probed only posting 1 (page 2); second probe fully masked
+    assert (dists[1, 1] >= BIG / 2).all()
+    ok = np.asarray(page_ok).reshape(2, 2, 4, bs)
+    assert ok[0, 0, :2].all() and not ok[0, 0, 2:].any()
+
+
+def test_scan_unique_blocks_padding(rng):
+    blocks = jnp.asarray(rng.normal(size=(8, 4, 8)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    ids = jnp.asarray([2, 5, -1, -1], jnp.int32)
+    d = np.asarray(scan_unique_blocks(queries, ids, blocks, interpret=True))
+    assert (d[2:] >= BIG / 2).all()
+    want = np.asarray(scan_unique_blocks_ref(ids[:2], queries, blocks))
+    np.testing.assert_allclose(d[:2], want, rtol=1e-4)
+
+
+def test_scan_consistency_between_variants(rng):
+    """Both schedules must produce identical distances for shared pages."""
+    n_blocks, bs, d, q_n = 32, 8, 16, 4
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(q_n, d)), jnp.float32)
+    table = jnp.asarray(rng.integers(0, n_blocks, size=(q_n, 5)), jnp.int32)
+    per_q = np.asarray(scan_per_query(table, queries, blocks, interpret=True))
+    uniq = jnp.asarray(np.unique(np.asarray(table)), jnp.int32)
+    batched = np.asarray(scan_batched(uniq, queries, blocks, interpret=True))
+    uniq_np = np.asarray(uniq)
+    for q in range(q_n):
+        for j, b in enumerate(np.asarray(table)[q]):
+            bi = int(np.where(uniq_np == b)[0][0])
+            np.testing.assert_allclose(
+                per_q[q, j], batched[bi, q], rtol=1e-5, atol=1e-5
+            )

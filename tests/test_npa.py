@@ -1,0 +1,80 @@
+"""NPA necessary conditions (paper Eq. 1/2) — checked against brute force.
+
+The key property: the conditions are *necessary*, i.e. every vector whose
+true nearest posting changes because of the split MUST be flagged.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.npa import split_neighbor_candidates, split_old_posting_candidates
+
+
+def _dist(a, b):
+    return ((a - b) ** 2).sum(-1)
+
+
+def test_eq1_flags_every_true_violation(rng):
+    d = 8
+    old = rng.normal(size=(d,)).astype(np.float32)
+    new = (old[None, :] + 0.3 * rng.normal(size=(2, d))).astype(np.float32)
+    other = rng.normal(size=(20, d)).astype(np.float32)  # other centroids
+    v = (old[None, :] + 0.6 * rng.normal(size=(500, d))).astype(np.float32)
+
+    flagged = np.asarray(
+        split_old_posting_candidates(jnp.asarray(v), jnp.asarray(old), jnp.asarray(new))
+    )
+    # Brute force: v was NPA-assigned to old (assume it was). After split its
+    # home is one of new; a violation = some *other* centroid is closer than
+    # both new ones.
+    d_new = np.stack([_dist(v, c) for c in new], axis=1).min(1)
+    d_other = np.stack([_dist(v, c) for c in other], axis=1).min(1)
+    violated = d_other < d_new
+    # Necessary condition: violated ⇒ flagged, *for vectors where old was
+    # their previous nearest* (NPA precondition of the proof).
+    d_old = _dist(v, old)
+    npa_ok = d_old <= d_other  # old centroid was nearest before
+    mask = violated & npa_ok
+    assert (flagged[mask]).all(), "Eq1 missed a true NPA violation"
+
+
+def test_eq1_rules_out_safe_vectors(rng):
+    # If v is strictly closer to a new centroid than to the old one, Eq. 1
+    # says no check is needed.
+    d = 4
+    old = np.zeros(d, np.float32)
+    new = np.stack([np.ones(d), -np.ones(d)]).astype(np.float32)
+    v = np.asarray([[1.0, 1.0, 1.0, 1.0]], np.float32)  # on top of new[0]
+    flagged = np.asarray(
+        split_old_posting_candidates(jnp.asarray(v), jnp.asarray(old), jnp.asarray(new))
+    )
+    assert not flagged[0]
+
+
+def test_eq2_flags_neighbors_that_gain_a_closer_centroid(rng):
+    d = 8
+    old = rng.normal(size=(d,)).astype(np.float32)
+    new = (old[None, :] + 0.5 * rng.normal(size=(2, d))).astype(np.float32)
+    b = (old + 1.2 * rng.normal(size=(d,))).astype(np.float32)  # neighbor centroid
+    v = (b[None, :] + 0.5 * rng.normal(size=(500, d))).astype(np.float32)
+
+    flagged = np.asarray(
+        split_neighbor_candidates(jnp.asarray(v), jnp.asarray(old), jnp.asarray(new))
+    )
+    d_new = np.stack([_dist(v, c) for c in new], axis=1).min(1)
+    d_b = _dist(v, b)
+    # True violation: a new centroid is now closer than v's current centroid,
+    # and v complied with NPA before (d_b <= d_old).
+    d_old = _dist(v, old)
+    violated = (d_new < d_b) & (d_b <= d_old)
+    assert flagged[violated].all(), "Eq2 missed a true violation"
+
+
+def test_eq2_no_flag_when_new_centroids_farther(rng):
+    d = 4
+    old = np.zeros(d, np.float32)
+    new = np.stack([10 * np.ones(d), -10 * np.ones(d)]).astype(np.float32)
+    v = np.asarray([[0.1, 0.0, 0.0, 0.0]], np.float32)
+    flagged = np.asarray(
+        split_neighbor_candidates(jnp.asarray(v), jnp.asarray(old), jnp.asarray(new))
+    )
+    assert not flagged[0]

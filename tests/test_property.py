@@ -1,0 +1,197 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lire
+from repro.core.index import SPFreshIndex
+from repro.core.types import LireConfig
+from repro.storage import blockpool as bp
+from repro.storage import versionmap as vm
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Version map
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(["bump", "delete", "clear"]),
+                  st.integers(0, 6)),
+        max_size=30,
+    )
+)
+def test_versionmap_model(ops):
+    """The uint8 bit-twiddling matches a reference dict model."""
+    versions = jnp.zeros(8, jnp.uint8)  # 7 usable + scratch
+    model = {i: {"ver": 0, "del": False} for i in range(7)}
+    for op, vid in ops:
+        ids = jnp.asarray([vid])
+        if op == "bump":
+            versions = vm.bump_version(versions, ids)
+            model[vid]["ver"] = (model[vid]["ver"] + 1) % 128
+        elif op == "delete":
+            versions = vm.mark_deleted(versions, ids)
+            model[vid]["del"] = True
+        else:
+            versions = vm.clear(versions, ids)
+            model[vid] = {"ver": 0, "del": False}
+    for i in range(7):
+        assert int(versions[i] & vm.VERSION_MASK) == model[i]["ver"]
+        assert bool(versions[i] & vm.DELETED_BIT) == model[i]["del"]
+        stale = vm.is_stale(
+            versions, jnp.asarray([i]),
+            jnp.asarray([model[i]["ver"]], jnp.uint8),
+        )
+        assert bool(stale[0]) == model[i]["del"]
+
+
+# ---------------------------------------------------------------------------
+# Block pool
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    appends=st.lists(st.integers(0, 3), min_size=1, max_size=60),
+)
+def test_blockpool_append_accounting(appends):
+    """posting_len == successful appends; gather returns exactly those vids;
+    used_blocks == Σ ceil(len/BS)."""
+    pool = bp.make_block_pool(
+        num_blocks=32, block_size=4, dim=4, num_postings_cap=4,
+        max_blocks_per_posting=4,
+    )
+    model = {p: [] for p in range(4)}
+    for i, pid in enumerate(appends):
+        pool, ok = bp.append_one(
+            pool, jnp.asarray(pid), jnp.full((4,), float(i)),
+            jnp.asarray(i), jnp.asarray(0, jnp.uint8), jnp.asarray(True),
+        )
+        if bool(ok):
+            model[pid].append(i)
+    total_blocks = 0
+    for pid in range(4):
+        assert int(pool.posting_len[pid]) == len(model[pid])
+        _, vids, _, valid = bp.gather_posting(pool, jnp.asarray(pid))
+        got = set(np.asarray(vids)[np.asarray(valid)].tolist())
+        assert got == set(model[pid])
+        total_blocks += -(-len(model[pid]) // 4) if model[pid] else 0
+    assert int(bp.used_blocks(pool)) == total_blocks
+
+
+@settings(**SETTINGS)
+@given(
+    n1=st.integers(0, 16), n2=st.integers(0, 16),
+)
+def test_blockpool_put_free_conservation(n1, n2):
+    """PUT twice then free: the free pool returns to its initial size."""
+    pool = bp.make_block_pool(
+        num_blocks=16, block_size=4, dim=2, num_postings_cap=2,
+        max_blocks_per_posting=4,
+    )
+    start_free = int(pool.free_top)
+    cap = pool.posting_capacity
+    buf = jnp.zeros((cap, 2))
+    vids = jnp.arange(cap, dtype=jnp.int32)
+    vers = jnp.zeros(cap, jnp.uint8)
+    pool, ok1 = bp.put_posting(pool, jnp.asarray(0), buf, vids, vers,
+                               jnp.asarray(n1), jnp.asarray(True))
+    pool, ok2 = bp.put_posting(pool, jnp.asarray(0), buf, vids, vers,
+                               jnp.asarray(n2), jnp.asarray(True))
+    pool = bp.free_posting(pool, jnp.asarray(0), jnp.asarray(True))
+    assert int(pool.free_top) == start_free
+    assert int(pool.posting_len[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Search / dedup
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    dists=st.lists(st.floats(0, 100, allow_nan=False), min_size=8, max_size=8),
+    vids=st.lists(st.integers(0, 3), min_size=8, max_size=8),
+)
+def test_dedup_topk_no_duplicates_and_sorted(dists, vids):
+    d = jnp.asarray(dists, jnp.float32)
+    v = jnp.asarray(vids, jnp.int32)
+    live = jnp.ones(8, bool)
+    top_d, top_v = lire._dedup_topk_1d(d, v, live, 4)
+    top_d, top_v = np.asarray(top_d), np.asarray(top_v)
+    real = top_v[top_v >= 0]
+    assert len(real) == len(set(real.tolist())), "duplicate vid survived"
+    fin = top_d[top_v >= 0]
+    assert (np.diff(fin) >= -1e-6).all(), "not sorted"
+    # each returned vid's distance == its minimum input distance
+    for dd, vv in zip(top_d, top_v):
+        if vv >= 0:
+            want = min(ds for ds, vs in zip(dists, vids) if vs == vv)
+            assert abs(dd - want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# LIRE end-to-end invariants under random op sequences
+# ---------------------------------------------------------------------------
+
+def _small_cfg():
+    return LireConfig(
+        dim=8, block_size=4, max_blocks_per_posting=8, num_blocks=1024,
+        num_postings_cap=128, num_vectors_cap=2048, split_limit=24,
+        merge_limit=4, reassign_range=4, reassign_budget=64,
+        replica_count=2, nprobe=8,
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_lire_invariants_random_ops(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    base = rng.normal(size=(300, 8)).astype(np.float32)
+    idx = SPFreshIndex.build(_small_cfg(), base)
+    live = set(range(300))
+    next_vid = 300
+    for _ in range(data.draw(st.integers(1, 4))):
+        op = data.draw(st.sampled_from(["insert", "delete", "maintain"]))
+        if op == "insert":
+            k = data.draw(st.integers(1, 40))
+            vecs = rng.normal(size=(k, 8)).astype(np.float32)
+            vids = np.arange(next_vid, next_vid + k, dtype=np.int32)
+            idx.insert(vecs, vids)
+            live |= set(vids.tolist())
+            next_vid += k
+        elif op == "delete" and live:
+            k = min(data.draw(st.integers(1, 20)), len(live))
+            victims = rng.choice(sorted(live), size=k, replace=False)
+            idx.delete(victims.astype(np.int32))
+            live -= set(int(v) for v in victims)
+        else:
+            idx.maintain(max_steps=16)
+    idx.maintain()
+
+    state = idx.state
+    cfg = state.cfg
+    lens = np.asarray(state.pool.posting_len)
+    valid = np.asarray(state.centroid_valid)
+    # 1. no posting over hard capacity; post-maintenance none over the limit
+    assert (lens[valid] <= cfg.posting_capacity).all()
+    assert (lens[valid] <= cfg.split_limit).all()
+    # 2. block accounting: used + free == total
+    used = int(bp.used_blocks(state.pool))
+    blocks_by_len = int(
+        sum(-(-int(l) // cfg.block_size) for l in lens[valid] if l > 0)
+    )
+    assert used == blocks_by_len
+    # 3. pid accounting
+    assert int(state.n_postings) == cfg.num_postings_cap - int(state.pid_free_top)
+    # 4. deleted vids never surface
+    if live and len(live) > 10:
+        some = rng.choice(sorted(live), size=8, replace=False)
+        all_data = np.concatenate([base, rng.normal(size=(next_vid - 300, 8))]).astype(np.float32)
+        _, got = idx.search(all_data[some], 5)
+        dead = set(range(next_vid)) - live
+        leaked = set(got.reshape(-1).tolist()) & dead
+        assert not leaked, f"deleted vids leaked: {leaked}"

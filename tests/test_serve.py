@@ -1,0 +1,54 @@
+"""Serve engine + indexed retrieval integration."""
+import jax
+import numpy as np
+
+from repro.core.index import SPFreshIndex
+from repro.core.types import LireConfig
+from repro.data.vectors import make_sift_like, make_shifting_stream
+from repro.models import recsys as R
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.retrieval import IndexedRetriever
+from tests.test_lire import small_cfg
+
+
+def test_engine_pipeline_keeps_postings_bounded(rng):
+    base = make_sift_like(2000, 16, seed=5)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    eng = ServeEngine(idx, EngineConfig(fg_bg_ratio=2, maintain_budget=8))
+    inserts = make_shifting_stream(600, 16, seed=6)
+    ids = np.arange(5000, 5600, dtype=np.int32)
+    for s in range(0, 600, 100):
+        eng.insert(inserts[s:s + 100], ids[s:s + 100])
+    eng.drain()
+    lens = np.asarray(idx.state.pool.posting_len)
+    valid = np.asarray(idx.state.centroid_valid)
+    assert (lens[valid] <= idx.state.cfg.split_limit).all()
+    lat = eng.latency_percentiles("insert")
+    assert lat["n"] == 6
+
+
+def test_indexed_retriever_matches_bruteforce(rng):
+    model_cfg = R.TwoTowerConfig(
+        n_items=2000, n_user_fields=4, user_vocab_per_field=100,
+        embed_dim=16, tower_dims=(32, 8),
+    )
+    params = R.twotower_init(jax.random.PRNGKey(0), model_cfg)
+    index_cfg = LireConfig(
+        dim=8, block_size=8, max_blocks_per_posting=8, num_blocks=4096,
+        num_postings_cap=512, num_vectors_cap=16384, split_limit=48,
+        merge_limit=6, reassign_range=8, replica_count=2, nprobe=16,
+    )
+    retr = IndexedRetriever(params, model_cfg, index_cfg)
+    retr.build_corpus(np.arange(1500))
+    users = rng.integers(0, 100, size=(8, 4)).astype(np.int32)
+    _, ids_ann = retr.retrieve(users, k=10)
+    _, ids_bf = retr.retrieve_bruteforce(users, k=10)
+    hits = sum(
+        len(set(a.tolist()) & set(b.tolist()))
+        for a, b in zip(ids_ann, ids_bf)
+    )
+    assert hits / 80 > 0.8, f"ANN retrieval recall {hits / 80}"
+    # churn: fresh items retrievable without rebuild
+    retr.add_items(np.arange(1500, 1600))
+    _, ids2 = retr.retrieve(users, k=10)
+    assert np.isfinite(ids2.astype(float)).all()

@@ -1,0 +1,59 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage import versionmap as vm
+
+
+def test_bump_and_stale():
+    versions = jnp.zeros(8, jnp.uint8)
+    vids = jnp.asarray([1, 2])
+    stored = jnp.zeros(2, jnp.uint8)
+    assert not np.asarray(vm.is_stale(versions, vids, stored)).any()
+    versions = vm.bump_version(versions, jnp.asarray([1]))
+    stale = np.asarray(vm.is_stale(versions, vids, stored))
+    assert stale.tolist() == [True, False]
+
+
+def test_version_wraps_mod_128():
+    versions = jnp.full(2, 127, jnp.uint8)  # index 1 = scratch
+    versions = vm.bump_version(versions, jnp.asarray([0]))
+    assert int(versions[0] & vm.VERSION_MASK) == 0
+    assert int(versions[0] & vm.DELETED_BIT) == 0
+
+
+def test_bump_preserves_delete_bit():
+    versions = jnp.zeros(4, jnp.uint8)
+    versions = vm.mark_deleted(versions, jnp.asarray([2]))
+    versions = vm.bump_version(versions, jnp.asarray([2]))
+    assert bool(vm.is_deleted(versions, jnp.asarray([2]))[0])
+
+
+def test_deleted_is_stale():
+    versions = jnp.zeros(4, jnp.uint8)  # index 3 = scratch; usable vids 0..2
+    versions = vm.mark_deleted(versions, jnp.asarray([2]))
+    stale = vm.is_stale(versions, jnp.asarray([2]), jnp.asarray([0], jnp.uint8))
+    assert bool(stale[0])
+
+
+def test_scratch_slot_protects_real_vids():
+    """Disabled rows must not race with enabled writes to the same vid."""
+    versions = jnp.zeros(4, jnp.uint8)
+    vids = jnp.asarray([0, 0, 0, 0])
+    enable = jnp.asarray([True, False, False, False])
+    versions = vm.mark_deleted(versions, vids, enable)
+    assert bool(vm.is_deleted(versions, jnp.asarray([0]))[0])
+
+
+def test_negative_vid_is_stale():
+    versions = jnp.zeros(4, jnp.uint8)
+    stale = vm.is_stale(versions, jnp.asarray([-1]), jnp.asarray([0], jnp.uint8))
+    assert bool(stale[0])
+
+
+def test_enable_mask():
+    versions = jnp.zeros(4, jnp.uint8)
+    versions = vm.bump_version(
+        versions, jnp.asarray([0, 1]), jnp.asarray([True, False])
+    )
+    assert int(versions[0] & vm.VERSION_MASK) == 1
+    assert int(versions[1] & vm.VERSION_MASK) == 0

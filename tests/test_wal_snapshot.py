@@ -1,0 +1,85 @@
+"""Crash recovery (paper §4.4): snapshot + WAL replay."""
+import os
+
+import numpy as np
+
+from repro.core.index import SPFreshIndex
+from repro.core.types import LireConfig
+from repro.storage.wal import WriteAheadLog, iter_wal
+from tests.conftest import make_clustered
+from tests.test_lire import small_cfg
+
+
+def test_wal_roundtrip(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    wal.append("insert", {"vecs": np.ones((2, 4), np.float32), "vids": np.asarray([1, 2])})
+    wal.append("delete", {"vids": np.asarray([7])})
+    wal.close()
+    recs = list(iter_wal(path))
+    assert [r.op for r in recs] == ["insert", "delete"]
+    np.testing.assert_array_equal(recs[0].payload["vids"], [1, 2])
+    assert recs[0].seqno == 0 and recs[1].seqno == 1
+
+
+def test_wal_tolerates_torn_tail(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    wal.append("delete", {"vids": np.asarray([1])})
+    wal.close()
+    with open(path, "ab") as fh:
+        fh.write(b"SPFW\x99\x00\x00\x00partial")  # torn record
+    recs = list(iter_wal(path))
+    assert len(recs) == 1
+
+
+def test_snapshot_then_wal_replay_recovers(tmp_path, rng):
+    cfg = small_cfg()
+    base = make_clustered(rng, 500, 16, n_clusters=4)
+    wal_path = str(tmp_path / "wal.log")
+    snap_path = str(tmp_path / "snap")
+
+    idx = SPFreshIndex.build(cfg, base, wal_path=wal_path)
+    idx.snapshot(snap_path)
+
+    # Updates after the snapshot — these live only in the WAL.
+    extra = make_clustered(rng, 60, 16, n_clusters=2)
+    ids = np.arange(6000, 6060, dtype=np.int32)
+    idx.insert(extra, ids)
+    idx.delete(np.asarray([3, 4], np.int32))
+    want_d, want_v = idx.search(extra[:8], 5)
+
+    # "Crash": rebuild from snapshot + WAL.
+    rec = SPFreshIndex.restore(snap_path, cfg, wal_path=wal_path)
+    got_d, got_v = rec.search(extra[:8], 5)
+    np.testing.assert_array_equal(want_v, got_v)
+    np.testing.assert_allclose(want_d, got_d, rtol=1e-5)
+    # Deleted stay deleted.
+    _, got = rec.search(base[3:4], 5)
+    assert 3 not in got[0].tolist()
+
+
+def test_snapshot_truncates_wal(tmp_path, rng):
+    cfg = small_cfg()
+    base = make_clustered(rng, 300, 16)
+    wal_path = str(tmp_path / "wal.log")
+    idx = SPFreshIndex.build(cfg, base, wal_path=wal_path)
+    idx.insert(base[:4], np.arange(1000, 1004, dtype=np.int32))
+    assert os.path.getsize(wal_path) > 0
+    idx.snapshot(str(tmp_path / "snap"))
+    assert len(list(iter_wal(wal_path))) == 0
+
+
+def test_restore_without_snapshot_replays_full_wal(tmp_path, rng):
+    cfg = small_cfg()
+    wal_path = str(tmp_path / "wal.log")
+    # Start from an EMPTY index: build 0 postings is degenerate; instead use
+    # a small build then log inserts.
+    base = make_clustered(rng, 200, 16)
+    idx = SPFreshIndex.build(cfg, base, wal_path=wal_path)
+    extra = make_clustered(rng, 20, 16)
+    idx.insert(extra, np.arange(7000, 7020, dtype=np.int32))
+    # No snapshot: restoring from scratch replays the WAL over the template —
+    # only the WAL'd updates come back (build state is not in the WAL).
+    rec = SPFreshIndex.restore(str(tmp_path / "nosnap"), cfg, wal_path=wal_path)
+    assert rec._wal_applied == idx._wal_applied

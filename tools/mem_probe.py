@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+import dataclasses
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.granite_20b import CONFIG
+from repro.distributed import sharding as sr
+from repro.models import transformer as tf
+from repro.train.optimizer import adamw_init
+from repro.launch.mesh import make_production_mesh
+
+n_layers = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+kind = sys.argv[2] if len(sys.argv) > 2 else "train"
+cfg = dataclasses.replace(CONFIG, n_layers=n_layers, scan_unroll=n_layers)
+mesh = make_production_mesh(multi_pod=False)
+
+def to_sh(tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+with jax.set_mesh(mesh):
+    if kind == "train":
+        from repro.train.optimizer import make_train_step
+        from repro.configs.common import OPT
+        step = make_train_step(lambda p, b: tf.loss_fn(p, b, cfg), OPT)
+        p = tf.param_specs(cfg)
+        o = jax.eval_shape(adamw_init, p)
+        b = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+        ps = sr.lm_param_specs(cfg)
+        ins = to_sh((ps, sr.opt_state_specs(ps), sr.lm_batch_specs("train")))
+        lowered = jax.jit(step, in_shardings=ins).lower(p, o, b)
+    else:
+        p = tf.param_specs(cfg)
+        cache = jax.eval_shape(lambda: tf.init_cache(cfg, 128, 32768))
+        ins = to_sh((sr.lm_param_specs(cfg), sr.lm_cache_specs(False), P(("data",)), P()))
+        outs = to_sh((P(("data",), "model"), sr.lm_cache_specs(False)))
+        lowered = jax.jit(
+            lambda pp, cc, tt, po: tf.decode_step(pp, cc, tt, po, cfg),
+            in_shardings=ins, out_shardings=outs,
+        ).lower(p, cache, jax.ShapeDtypeStruct((128,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    print("temp GB:", ma.temp_size_in_bytes / 1e9,
+          "arg GB:", ma.argument_size_in_bytes / 1e9)
+    # find the biggest buffers via buffer assignment dump in HLO text
+    txt = compiled.as_text()
+    import re
+    sizes = {}
+    for m in re.finditer(r"(bf16|f32)\[([0-9,]+)\]", txt):
+        dims = [int(x) for x in m.group(2).split(",")]
+        nbytes = (2 if m.group(1) == "bf16" else 4)
+        for d in dims:
+            nbytes *= d
+        key = f"{m.group(1)}[{m.group(2)}]"
+        sizes[key] = (nbytes, sizes.get(key, (0, 0))[1] + 1)
+    top = sorted(sizes.items(), key=lambda kv: -kv[1][0])[:12]
+    for k, (nb, cnt) in top:
+        print(f"  {k:48s} {nb/1e9:8.2f} GB x{cnt}")
