@@ -1,10 +1,14 @@
-"""Paper Fig. 12: foreground/background resource balance.
+"""Paper Fig. 12: foreground/background resource balance, measured on the
+batched serving pipeline.
 
 The paper tunes fg:bg *threads* (2:1 optimum).  The jit-world analogue is
-the engine's fg:bg *slot ratio* (foreground insert batches per background
-maintenance slot).  We sweep the ratio and report insert throughput and the
-rebuild backlog (oversized postings left waiting) — the pipeline is
-balanced when throughput is maximal with ~zero steady-state backlog.
+the engine's MaintenancePolicy: RatioPolicy interleaves one fixed-budget
+rebuilder slot every N foreground update batches (the feed-forward
+pipeline); BacklogPolicy fires slots reactively when oversized postings
+exist.  We run a mixed search+insert stream through the ServeEngine under
+each policy and report per-op latency percentiles, insert throughput,
+queue depth, padding waste, maintenance throughput, and the steady-state
+rebuild backlog — balanced means max throughput with ~zero backlog.
 """
 from __future__ import annotations
 
@@ -16,6 +20,24 @@ from benchmarks.common import bench_cfg
 from repro.core.index import SPFreshIndex
 from repro.data.vectors import make_shifting_stream, make_sift_like
 from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.policy import BacklogPolicy, RatioPolicy
+
+
+def _drive(engine: ServeEngine, inserts, queries, n_base: int,
+           chunk: int = 256, q_chunk: int = 64) -> float:
+    """Mixed stream: alternate one insert chunk and one search chunk
+    through the async pipeline; returns the wall time."""
+    ids = np.arange(n_base, n_base + len(inserts)).astype(np.int32)
+    qi = 0
+    t0 = time.perf_counter()
+    for s in range(0, len(inserts), chunk):
+        engine.submit_insert(inserts[s:s + chunk], ids[s:s + chunk])
+        q = queries[qi:qi + q_chunk]
+        qi = (qi + q_chunk) % max(len(queries) - q_chunk, 1)
+        engine.submit_search(q)
+        engine.pump()
+    engine.pump()
+    return time.perf_counter() - t0
 
 
 def run(quick: bool = True) -> list[str]:
@@ -23,28 +45,37 @@ def run(quick: bool = True) -> list[str]:
     n_ins = 2000 if quick else 20000
     base = make_sift_like(n_base, 16, seed=31)
     inserts = make_shifting_stream(n_ins, 16, seed=32)
+    queries = make_sift_like(512, 16, seed=33)
+    policies = (
+        ("off", lambda: RatioPolicy(ratio=0)),
+        ("ratio_8to1", lambda: RatioPolicy(ratio=8, budget=4)),
+        ("ratio_2to1", lambda: RatioPolicy(ratio=2, budget=8)),
+        ("ratio_1to1", lambda: RatioPolicy(ratio=1, budget=16)),
+        ("backlog_t1", lambda: BacklogPolicy(threshold=1, budget=16)),
+    )
     out = []
-    for ratio, budget in ((0, 0), (8, 4), (4, 8), (2, 8), (1, 16)):
+    for label, make_policy in policies:
         idx = SPFreshIndex.build(bench_cfg(num_blocks=16384), base)
         eng = ServeEngine(
-            idx,
-            EngineConfig(fg_bg_ratio=max(ratio, 10**9) if ratio == 0 else ratio,
-                         maintain_budget=budget),
+            idx, EngineConfig(search_k=10, max_batch=256),
+            policy=make_policy(),
         )
-        t0 = time.perf_counter()
-        ids = np.arange(n_base, n_base + n_ins).astype(np.int32)
-        chunk = 256
-        for s in range(0, n_ins, chunk):
-            eng.insert(inserts[s:s + chunk], ids[s:s + chunk])
-        wall = time.perf_counter() - t0
-        lens = np.asarray(idx.state.pool.posting_len)
-        valid = np.asarray(idx.state.centroid_valid)
-        backlog = int(((lens > idx.state.cfg.split_limit) & valid).sum())
-        label = "off" if ratio == 0 else f"{ratio}to1"
+        wall = _drive(eng, inserts, queries, n_base)
+        rep = eng.report()
+        ins, srch, qacc, maint = (
+            rep["insert"], rep["search"], rep["queue"], rep["maintenance"]
+        )
         out.append(
             f"pipeline/{label},{wall / n_ins * 1e6:.1f},"
-            f"insert_qps={n_ins / wall:.0f};backlog={backlog};"
-            f"splits={idx.stats()['n_splits']}"
+            f"insert_qps={n_ins / wall:.0f};"
+            f"ins_p50={ins['p50_ms']:.1f};ins_p99={ins['p99_ms']:.1f};"
+            f"srch_p50={srch['p50_ms']:.1f};srch_p99={srch['p99_ms']:.1f};"
+            f"depth_avg={qacc['depth_rows_avg']:.0f};"
+            f"depth_max={qacc['depth_rows_max']};"
+            f"pad_waste={qacc['padding_waste_frac']:.3f};"
+            f"maint_sps={maint['steps_per_s']:.1f};"
+            f"maint_steps={maint['steps']};"
+            f"backlog={rep['backlog']};splits={idx.stats()['n_splits']}"
         )
     return out
 

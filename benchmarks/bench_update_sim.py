@@ -1,6 +1,7 @@
 """Paper Fig. 7: real-world update simulation (workload A = SPACEV-like
-skew, workload B = SIFT-like uniform).  N epochs of 1% delete + 1% insert;
-per-epoch tail latency, recall, resource accounting, protocol stats."""
+skew, workload B = SIFT-like uniform).  N epochs of 1% delete + 1% insert
+driven through the batched serving pipeline; per-epoch tail latency,
+recall, resource accounting, protocol stats, pipeline metrics."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,6 +10,7 @@ from benchmarks.common import bench_cfg, posting_stats, recall_at, timed_search
 from repro.core.index import SPFreshIndex
 from repro.data.vectors import UpdateWorkload
 from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.policy import RatioPolicy
 
 
 def simulate(workload: UpdateWorkload, *, spfresh: bool, epochs: int) -> dict:
@@ -18,15 +20,20 @@ def simulate(workload: UpdateWorkload, *, spfresh: bool, epochs: int) -> dict:
     )
     vecs, ids = workload.live_vectors()
     idx = SPFreshIndex.build(cfg, vecs)
-    engine = ServeEngine(idx, EngineConfig(fg_bg_ratio=2, maintain_budget=16))
+    engine = ServeEngine(
+        idx, EngineConfig(search_k=10, max_batch=256),
+        policy=RatioPolicy(ratio=2, budget=16),
+    )
 
     series = []
     for _ in range(epochs):
         del_vids, ins_vecs, ins_vids = workload.epoch()
-        engine.delete(del_vids.astype(np.int32))
+        engine.submit_delete(del_vids.astype(np.int32))
         if spfresh:
-            engine.insert(ins_vecs, ins_vids.astype(np.int32))
+            engine.submit_insert(ins_vecs, ins_vids.astype(np.int32))
+            engine.pump()
         else:
+            engine.pump()
             idx.insert(ins_vecs, ins_vids.astype(np.int32), max_retries=0)
         queries, gt = workload.queries(64)
         r = recall_at(idx, queries, gt)
@@ -40,7 +47,7 @@ def simulate(workload: UpdateWorkload, *, spfresh: bool, epochs: int) -> dict:
     if spfresh:
         engine.drain()
     stats = idx.stats()
-    return {"series": series, "stats": stats}
+    return {"series": series, "stats": stats, "report": engine.report()}
 
 
 def run(quick: bool = True) -> list[str]:
@@ -55,6 +62,7 @@ def run(quick: bool = True) -> list[str]:
             s = res["series"]
             first, last = s[0], s[-1]
             st = res["stats"]
+            rep = res["report"]
             reassign_frac = st["n_reassigned"] / max(st["n_reassign_checked"], 1)
             out.append(
                 f"update_sim/{wl_name}/{sys_name},"
@@ -64,7 +72,9 @@ def run(quick: bool = True) -> list[str]:
                 f"scan_p99_last={last['scan_p99']:.0f};"
                 f"splits={st['n_splits']};merges={st['n_merges']};"
                 f"reassigned={st['n_reassigned']};"
-                f"reassign_frac={reassign_frac:.4f}"
+                f"reassign_frac={reassign_frac:.4f};"
+                f"maint_sps={rep['maintenance']['steps_per_s']:.1f};"
+                f"pad_waste={rep['queue']['padding_waste_frac']:.3f}"
             )
     return out
 

@@ -28,6 +28,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow); default quick")
+    ap.add_argument("--dry", action="store_true",
+                    help="import smoke: load every bench module, run nothing")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
@@ -41,6 +43,10 @@ def main() -> None:
             import importlib
 
             mod = importlib.import_module(module)
+            if args.dry:
+                assert callable(getattr(mod, "run")), f"{module}.run missing"
+                print(f"# {name} dry ok", flush=True)
+                continue
             for line in mod.run(quick=not args.full):
                 print(line, flush=True)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)

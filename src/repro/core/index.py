@@ -16,6 +16,7 @@ ops in shard_map (see `repro.distributed.sharded_index`).
 """
 from __future__ import annotations
 
+import functools
 import math
 import os
 
@@ -155,6 +156,65 @@ def build_state(
     )
 
 
+# ---------------------------------------------------------------------------
+# Batched jit entry points (the serving pipeline's hot path)
+#
+# The ServeEngine feeds fixed-shape padded micro-batches straight into these
+# cached executables — no host-side chunking loop, one dispatch per batch.
+# Update steps donate the index state so XLA can mutate the (large) block
+# pool in place instead of copying it every batch.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def search_step(k: int, nprobe: int | None, probe_chunk: int = 0):
+    """jitted ``(state, queries (B, d)) -> (dists (B, k), vids (B, k))``."""
+    return jax.jit(
+        functools.partial(
+            lire.search, k=k, nprobe=nprobe, probe_chunk=probe_chunk
+        )
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def insert_step():
+    """jitted, state-donating ``(state, vecs, vids, valid) -> (state, landed)``."""
+
+    def f(state, vecs, vids, valid):
+        return lire.insert_batch(state, vecs, vids, valid)
+
+    return jax.jit(f, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def delete_step():
+    """jitted, state-donating ``(state, vids, valid) -> state``."""
+
+    def f(state, vids, valid):
+        return lire.delete_batch(state, vids, valid)
+
+    return jax.jit(f, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def fused_maintenance_step(budget: int):
+    """jitted, state-donating fused rebuilder slot: ``budget`` maintenance
+    steps in ONE executable (a lax.scan), returning ``(state, n_did_work)``.
+
+    Constant work regardless of how many steps find a job — the TPU idiom
+    for the paper's background job queue; the host pays one dispatch per
+    slot instead of one per step."""
+
+    def f(state):
+        def body(s, _):
+            s, did = lire.maintenance_step(s)
+            return s, did.astype(jnp.int32)
+
+        state, dids = jax.lax.scan(body, state, None, length=budget)
+        return state, jnp.sum(dids)
+
+    return jax.jit(f, donate_argnums=(0,))
+
+
 def _pad_to(x: np.ndarray, size: int, fill=0) -> np.ndarray:
     pad = size - x.shape[0]
     if pad <= 0:
@@ -262,6 +322,43 @@ class SPFreshIndex:
         d = np.concatenate(out_d)[:nq]
         v = np.concatenate(out_v)[:nq]
         return d, v
+
+    # ------------------- Batched pipeline entry points -----------------
+    # Fixed-shape, one-dispatch variants driven by the ServeEngine; the
+    # caller (the RequestQueue) owns padding and bucket discipline.
+
+    def search_padded(
+        self, queries: np.ndarray, k: int, *, nprobe: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        d, v = search_step(k, nprobe)(self.state, jnp.asarray(queries))
+        return np.asarray(d), np.asarray(v)
+
+    def insert_padded(
+        self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray,
+    ) -> np.ndarray:
+        """One donated-state insert dispatch; returns the landed mask."""
+        self.state, landed = insert_step()(
+            self.state, jnp.asarray(vecs), jnp.asarray(vids),
+            jnp.asarray(valid),
+        )
+        return np.asarray(landed)
+
+    def delete_padded(self, vids: np.ndarray, valid: np.ndarray) -> None:
+        self.state = delete_step()(
+            self.state, jnp.asarray(vids), jnp.asarray(valid)
+        )
+
+    def maintain_fused(self, budget: int) -> int:
+        """One fused rebuilder slot (``budget`` steps, one dispatch);
+        returns how many steps found work."""
+        self.state, did = fused_maintenance_step(budget)(self.state)
+        return int(did)
+
+    def backlog(self) -> int:
+        """Rebuild backlog: postings currently over the split limit."""
+        lens = np.asarray(self.state.pool.posting_len)
+        valid = np.asarray(self.state.centroid_valid)
+        return int(((lens > self.state.cfg.split_limit) & valid).sum())
 
     # ------------------------- Crash recovery --------------------------
     def snapshot(self, path: str) -> None:

@@ -81,8 +81,9 @@ class LireStats:
 
     @staticmethod
     def zeros() -> "LireStats":
-        z = jnp.zeros((), jnp.int32)
-        return LireStats(*([z] * 11))
+        # Distinct buffers per counter: donated update steps (serve pipeline)
+        # reject pytrees whose leaves alias the same buffer.
+        return LireStats(*(jnp.zeros((), jnp.int32) for _ in range(11)))
 
 
 @pytree_dataclass

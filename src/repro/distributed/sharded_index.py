@@ -37,6 +37,20 @@ from repro.core.distance import MASK_DISTANCE
 Array = jax.Array
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (new API vs experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
 # ---------------------------------------------------------------------------
 # Stacked-state helpers
 # ---------------------------------------------------------------------------
@@ -73,11 +87,18 @@ def _data_axes(mesh: Mesh):
 # Distributed search
 # ---------------------------------------------------------------------------
 
+def _axis_size(a):
+    """jax.lax.axis_size compat (older jax: psum of ones)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)
+
+
 def _flat_axis_index(axes):
     """Flattened linear index over one or more mesh axes (row-major)."""
     idx = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -139,12 +160,8 @@ def make_search_step(
         in_specs.append(
             jax.tree_util.tree_map(lambda _: P(ax), GroupIndexSpec())
         )
-    sm = jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=tuple(in_specs),
-        out_specs=(qspec, qspec),
-        check_vma=False,
+    sm = _shard_map(
+        local, mesh=mesh, in_specs=tuple(in_specs), out_specs=(qspec, qspec)
     )
     return jax.jit(sm)
 
@@ -178,17 +195,19 @@ def state_pspecs_for(
 def make_insert_step(
     mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",)
 ):
-    """Returns jitted ``insert(state_stacked, vecs (B, d)) ->
+    """Returns jitted ``insert(state_stacked, vecs (B, d), valid (B,)) ->
     (state, handles (B,))``.
 
     The update batch is REPLICATED over data rows (read-replica design);
     ownership = shard with the globally nearest centroid, computed by one
     all_gather of per-shard best distances.  Each shard allocates local
     slots for its vectors and appends; handles are psum-combined.
+    ``valid`` masks out padding rows (the serving pipeline pads batches
+    to fixed bucket shapes); invalid rows get handle -1.
     """
     n_shard_vecs = cfg.num_vectors_cap
 
-    def local(state_stacked, vecs):
+    def local(state_stacked, vecs, valid):
         state = _squeeze(state_stacked)
         my = _flat_axis_index(shard_axes)
         b = vecs.shape[0]
@@ -198,7 +217,7 @@ def make_insert_step(
         all_d = jax.lax.all_gather(d[:, 0], shard_axes, tiled=False)
         all_d = all_d.reshape(-1, b)                   # (M, B)
         owner = jnp.argmin(all_d, axis=0)              # (B,)
-        mine = owner == my
+        mine = (owner == my) & valid
 
         # local slot allocation for owned vectors
         order = jnp.cumsum(mine.astype(jnp.int32)) - 1
@@ -208,22 +227,25 @@ def make_insert_step(
         n_new = jnp.sum(mine)
         state = state.replace(next_vid=state.next_vid + n_new)
 
-        state, _ = lire.insert_batch(state, vecs, jnp.maximum(slots, 0), mine)
+        state, landed = lire.insert_batch(
+            state, vecs, jnp.maximum(slots, 0), mine
+        )
+        # a dropped primary append (posting at hard capacity) must NOT get
+        # a handle — the engine's backpressure/retry path keys off -1
+        ok = mine & landed
 
         # combine handles across shards (exactly one shard owns each vector)
-        handle_part = jnp.where(mine, my * n_shard_vecs + slots, 0)
+        handle_part = jnp.where(ok, my * n_shard_vecs + slots, 0)
         handles = jax.lax.psum(handle_part, shard_axes)
         handles = jnp.where(
-            jax.lax.psum(mine.astype(jnp.int32), shard_axes) > 0, handles, -1
+            jax.lax.psum(ok.astype(jnp.int32), shard_axes) > 0, handles, -1
         )
         return _expand(state), handles
 
-    sm = jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(state_pspecs_for(cfg, shard_axes), P(None, None)),
+    sm = _shard_map(
+        local, mesh=mesh,
+        in_specs=(state_pspecs_for(cfg, shard_axes), P(None, None), P(None)),
         out_specs=(state_pspecs_for(cfg, shard_axes), P(None)),
-        check_vma=False,
     )
     return jax.jit(sm, donate_argnums=(0,))
 
@@ -243,38 +265,43 @@ def make_delete_step(
         state = lire.delete_batch(state, slot, mine)
         return _expand(state)
 
-    sm = jax.shard_map(
-        local,
-        mesh=mesh,
+    sm = _shard_map(
+        local, mesh=mesh,
         in_specs=(state_pspecs_for(cfg, shard_axes), P(None)),
         out_specs=state_pspecs_for(cfg, shard_axes),
-        check_vma=False,
     )
     return jax.jit(sm, donate_argnums=(0,))
 
 
 def make_maintenance_step(
-    mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",)
+    mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",),
+    budget: int = 1,
 ):
-    """jitted ``maintain(state_stacked) -> (state, any_did_work)``.
+    """jitted ``maintain(state_stacked) -> (state, n_did_work)``.
 
-    Every shard runs one LIRE maintenance step on its own postings —
-    rebalancing is embarrassingly parallel across shards because the
-    reassign neighborhood is shard-local by the centroid-space partition.
+    Every shard runs ``budget`` LIRE maintenance steps on its own postings
+    (fused into one executable via lax.scan, mirroring
+    ``core.index.fused_maintenance_step``) — rebalancing is embarrassingly
+    parallel across shards because the reassign neighborhood is
+    shard-local by the centroid-space partition.  ``n_did_work`` is the
+    max-over-shards count of steps that found a job.
     """
 
     def local(state_stacked):
         state = _squeeze(state_stacked)
-        state, did = lire.maintenance_step(state)
-        any_did = jax.lax.pmax(did.astype(jnp.int32), shard_axes)
+
+        def body(s, _):
+            s, did = lire.maintenance_step(s)
+            return s, did.astype(jnp.int32)
+
+        state, dids = jax.lax.scan(body, state, None, length=budget)
+        any_did = jax.lax.pmax(jnp.sum(dids), shard_axes)
         return _expand(state), any_did
 
-    sm = jax.shard_map(
-        local,
-        mesh=mesh,
+    sm = _shard_map(
+        local, mesh=mesh,
         in_specs=(state_pspecs_for(cfg, shard_axes),),
         out_specs=(state_pspecs_for(cfg, shard_axes), P()),
-        check_vma=False,
     )
     return jax.jit(sm, donate_argnums=(0,))
 
@@ -356,3 +383,144 @@ def reshard(
     from the live contents (snapshot-driven re-shard)."""
     vecs, _ = gather_live_vectors(stacked, old_shards)
     return build_sharded_state(cfg, vecs, new_shards, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# ShardedIndex — the stateful handle the serving pipeline drives
+# ---------------------------------------------------------------------------
+
+class ShardedIndex:
+    """Stacked sharded state + its jitted shard_map steps, behind the
+    ServeEngine backend protocol (`repro.serve.engine.IndexBackend`).
+
+    The engine feeds the same padded micro-batches it feeds a single-host
+    index; every op here is one dispatch of a cached shard_map executable,
+    with the stacked state donated on updates.  Search/insert/delete use
+    global (shard, slot) handles; ``shard_alive`` degrades dead shards.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: LireConfig,
+        stacked: IndexState,
+        n_shards: int,
+        *,
+        shard_axes: tuple[str, ...] = ("model",),
+        probe_chunk: int = 0,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.stacked = stacked
+        self.n_shards = n_shards
+        self.shard_axes = shard_axes
+        self.probe_chunk = probe_chunk
+        self.shard_alive = jnp.ones((n_shards,), bool)
+        self._search_steps: dict[tuple, Any] = {}
+        self._maintain_steps: dict[int, Any] = {}
+        self._insert_step = make_insert_step(mesh, cfg, shard_axes=shard_axes)
+        self._delete_step = make_delete_step(mesh, cfg, shard_axes=shard_axes)
+
+    @classmethod
+    def build(
+        cls,
+        mesh: Mesh,
+        cfg: LireConfig,
+        vectors: np.ndarray,
+        n_shards: int,
+        *,
+        seed: int = 0,
+        shard_axes: tuple[str, ...] = ("model",),
+        probe_chunk: int = 0,
+    ) -> tuple["ShardedIndex", np.ndarray]:
+        """Offline sharded build; returns (index, handles of the inputs)."""
+        stacked, handles = build_sharded_state(cfg, vectors, n_shards, seed=seed)
+        idx = cls(mesh, cfg, stacked, n_shards, shard_axes=shard_axes,
+                  probe_chunk=probe_chunk)
+        return idx, handles
+
+    def set_alive(self, alive: np.ndarray) -> None:
+        self.shard_alive = jnp.asarray(alive, bool)
+
+    # --------------------------- backend ops ---------------------------
+    def search(
+        self, queries: np.ndarray, k: int, nprobe: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        key = (k, nprobe)
+        step = self._search_steps.get(key)
+        if step is None:
+            step = make_search_step(
+                self.mesh, self.cfg, k=k, nprobe=nprobe,
+                shard_axes=self.shard_axes, probe_chunk=self.probe_chunk,
+            )
+            self._search_steps[key] = step
+        d, v = step(self.stacked, jnp.asarray(queries), self.shard_alive)
+        return np.asarray(d), np.asarray(v)
+
+    def insert(
+        self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Caller vids are ignored: the sharded index owns id assignment
+        (global handle = shard * N_cap + slot).  Returns (handles, landed)."""
+        self.stacked, handles = self._insert_step(
+            self.stacked, jnp.asarray(vecs), jnp.asarray(valid)
+        )
+        handles = np.asarray(handles)
+        return handles, handles >= 0
+
+    def delete(self, vids: np.ndarray, valid: np.ndarray) -> None:
+        handles = np.where(np.asarray(valid), np.asarray(vids), -1)
+        self.stacked = self._delete_step(
+            self.stacked, jnp.asarray(handles, jnp.int32)
+        )
+
+    def log_update(self, op: str, payload: dict) -> None:
+        """No durable WAL on the sharded backend (yet) — updates are
+        deterministically replicated; crash recovery is snapshot-only."""
+
+    def maintain(self, budget: int) -> int:
+        """One fused maintenance slot: ``budget`` steps, ONE dispatch
+        (cached per budget).  Returns how many steps found work."""
+        step = self._maintain_steps.get(budget)
+        if step is None:
+            step = make_maintenance_step(
+                self.mesh, self.cfg, shard_axes=self.shard_axes, budget=budget
+            )
+            self._maintain_steps[budget] = step
+        self.stacked, did = step(self.stacked)
+        return int(did)
+
+    def drain(self) -> int:
+        total = 0
+        # convergence bound: at most ~2*P_cap useful steps (§3.4)
+        for _ in range(2 * self.cfg.num_postings_cap // 16 + 1):
+            did = self.maintain(16)
+            total += did
+            if did == 0:
+                break
+        return total
+
+    def backlog(self) -> int:
+        lens = np.asarray(self.stacked.pool.posting_len)      # (M, P)
+        valid = np.asarray(self.stacked.centroid_valid)       # (M, P)
+        return int(((lens > self.cfg.split_limit) & valid).sum())
+
+    def stats(self) -> dict:
+        s = self.stacked.stats
+        out = {
+            k: int(np.asarray(getattr(s, k)).sum())
+            for k in (
+                "n_inserts", "n_deletes", "n_appends", "n_append_drops",
+                "n_splits", "n_gc_writebacks", "n_merges",
+                "n_reassign_checked", "n_reassign_candidates",
+                "n_reassigned", "n_reassign_overflow",
+            )
+        }
+        valid = np.asarray(self.stacked.centroid_valid)
+        out["n_postings"] = int(valid.sum())
+        out["n_shards"] = self.n_shards
+        out["used_blocks"] = int(
+            self.n_shards * self.stacked.pool.num_blocks_cap
+            - np.asarray(self.stacked.pool.free_top).sum()
+        )
+        return out

@@ -25,6 +25,30 @@ def data_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+def current_mesh():
+    """The ambient (abstract) mesh, across jax versions.
+
+    Newer jax: ``jax.sharding.get_abstract_mesh()`` (set via
+    ``jax.set_mesh``).  Older jax: the physical mesh installed by the
+    ``with mesh:`` context.  Returns None when no mesh is active.
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        am = get_am()
+        return am if am.axis_names else None
+    from jax._src import mesh as mesh_lib
+
+    pm = mesh_lib.thread_resources.env.physical_mesh
+    return pm if pm.axis_names else None
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` on newer jax, ``with mesh:`` on older."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # Mesh is itself a context manager on older jax
+
+
 def _axes_size(am, entry) -> int:
     if entry is None:
         return 1
@@ -54,8 +78,8 @@ def act_constraint(x, *tail):
     replicated.  No-op when tracing without a mesh context (CPU smoke
     tests) — the dry-run sets the mesh via ``jax.set_mesh``.
     """
-    am = jax.sharding.get_abstract_mesh()
-    if not am.axis_names or "model" not in am.axis_names:
+    am = current_mesh()
+    if am is None or "model" not in am.axis_names:
         return x
     da = tuple(a for a in am.axis_names if a != "model")
     return _guarded_constraint(x, am, (da if da else None, *tail))
@@ -64,8 +88,8 @@ def act_constraint(x, *tail):
 def act_constraint_leading(x, lead, *tail):
     """Like :func:`act_constraint` but dim 0 shards over ``lead`` (e.g.
     'model' for expert-parallel buffers) and dim 1 over the data axes."""
-    am = jax.sharding.get_abstract_mesh()
-    if not am.axis_names or "model" not in am.axis_names:
+    am = current_mesh()
+    if am is None or "model" not in am.axis_names:
         return x
     da = tuple(a for a in am.axis_names if a != "model")
     return _guarded_constraint(x, am, (lead, da if da else None, *tail))
@@ -75,8 +99,8 @@ def act_constraint_flat2d(x):
     """Rows of a 2D buffer sharded over ('model', data-axes) flattened —
     the flat form of an (E over model, C over data) expert buffer, placed
     BEFORE the split-dim reshape so GSPMD treats the reshape as free."""
-    am = jax.sharding.get_abstract_mesh()
-    if not am.axis_names or "model" not in am.axis_names:
+    am = current_mesh()
+    if am is None or "model" not in am.axis_names:
         return x
     da = tuple(a for a in am.axis_names if a != "model")
     return _guarded_constraint(x, am, (("model", *da), None))

@@ -1,14 +1,41 @@
 """Serving launcher: stand up a SPFresh index and run a mixed
-search/update stream through the ServeEngine (the paper's §5.2 loop).
+search/update stream through the batched ServeEngine pipeline (the
+paper's §5.2 loop).  The same engine drives a single-host index or an
+N-shard mesh (fake CPU devices) — the tentpole claim, runnable:
 
     PYTHONPATH=src python -m repro.launch.serve --n 8000 --epochs 10 \
-        --dataset spacev --rate 0.01
+        --dataset spacev --rate 0.01 --policy ratio --ratio 2
+    PYTHONPATH=src python -m repro.launch.serve --n 4000 --shards 4
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
+
+
+def _make_policy(args):
+    from repro.serve.policy import BacklogPolicy, RatioPolicy
+
+    if args.policy == "backlog":
+        return BacklogPolicy(threshold=args.threshold, budget=args.budget)
+    return RatioPolicy(ratio=args.ratio, budget=args.budget)
+
+
+def _print_report(engine) -> None:
+    rep = engine.report()
+    q, m = rep["queue"], rep["maintenance"]
+    print(f"policy={m['policy']} maint_slots={m['slots']} "
+          f"maint_steps={m['steps']} maint_sps={m['steps_per_s']:.1f}")
+    print(f"queue: batches={q['batches']} rows={q['rows']} "
+          f"pad_waste={q['padding_waste_frac']:.3f} "
+          f"depth_avg={q['depth_rows_avg']:.0f} depth_max={q['depth_rows_max']}")
+    for op in ("search", "insert", "delete"):
+        p = rep[op]
+        if p:
+            print(f"{op}: p50={p['p50_ms']:.1f}ms p99={p['p99_ms']:.1f}ms "
+                  f"n={p['n']}")
 
 
 def main() -> None:
@@ -20,7 +47,23 @@ def main() -> None:
     ap.add_argument("--dataset", choices=["spacev", "sift"], default="spacev")
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--snapshot", default=None)
+    ap.add_argument("--policy", choices=["ratio", "backlog"], default="ratio")
+    ap.add_argument("--ratio", type=int, default=2,
+                    help="fg update batches per bg slot (0 disables)")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="rebuild steps per bg slot")
+    ap.add_argument("--threshold", type=int, default=1,
+                    help="BacklogPolicy firing threshold")
+    ap.add_argument("--shards", type=int, default=1,
+                    help=">1: serve an N-shard mesh on fake CPU devices")
     args = ap.parse_args()
+
+    if args.shards > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.shards} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
     from repro.core import LireConfig, SPFreshIndex
     from repro.data import UpdateWorkload
@@ -34,8 +77,48 @@ def main() -> None:
         num_vectors_cap=4 * args.n, split_limit=48, merge_limit=6,
         reassign_range=8, replica_count=2, nprobe=args.nprobe,
     )
+    ecfg = EngineConfig(search_k=10, nprobe=args.nprobe)
     vecs, _ = wl.live_vectors()
-    engine = ServeEngine(SPFreshIndex.build(cfg, vecs), EngineConfig())
+
+    if args.shards > 1:
+        import jax
+
+        from repro.distributed.sharded_index import ShardedIndex
+
+        mesh = jax.make_mesh((args.shards,), ("model",))
+        backend, handles = ShardedIndex.build(mesh, cfg, vecs, args.shards)
+        engine = ServeEngine(backend, ecfg, policy=_make_policy(args))
+        # workload vid -> global (shard, slot) handle, kept current so
+        # epoch deletes translate into sharded deletes
+        _, base_ids = wl.live_vectors()
+        vid2h = dict(zip(base_ids.tolist(), handles.tolist()))
+        print(f"serving {args.n} vectors over {args.shards} shards")
+        print("epoch  p99_ms postings splits deletes")
+        for epoch in range(args.epochs):
+            dv, iv, ii = wl.epoch()
+            dh = [vid2h.pop(int(v)) for v in dv if int(v) in vid2h]
+            engine.delete(np.asarray(dh, np.int32))
+            # sharded index assigns its own handles; vids are placeholders
+            t = engine.submit_insert(iv, np.full(len(iv), -1, np.int32))
+            new_h, landed = t.result()
+            vid2h.update(
+                (int(v), int(h))
+                for v, h, ok in zip(ii, new_h, landed) if ok
+            )
+            q, _gt = wl.queries(64)
+            engine.search(q)
+            lat = engine.latency_percentiles("search")
+            st = engine.stats()
+            print(f"{epoch:5d} {lat.get('p99_ms', 0):7.1f} "
+                  f"{st['n_postings']:8d} {st['n_splits']:6d} "
+                  f"{len(dh):7d}")
+        engine.drain()
+        _print_report(engine)
+        return
+
+    engine = ServeEngine(
+        SPFreshIndex.build(cfg, vecs), ecfg, policy=_make_policy(args)
+    )
     print("epoch recall@10 p99_ms postings splits reassigned")
     for epoch in range(args.epochs):
         dv, iv, ii = wl.epoch()
@@ -51,6 +134,7 @@ def main() -> None:
               f"{lat.get('p99_ms', 0):6.1f} {st['n_postings']:8d} "
               f"{st['n_splits']:6d} {st['n_reassigned']:10d}")
     engine.drain()
+    _print_report(engine)
     if args.snapshot:
         engine.index.snapshot(args.snapshot)
         print(f"snapshot written to {args.snapshot}")

@@ -1,2 +1,15 @@
-"""Serving layer: batched search/update engine over the SPFresh index +
-the two-tower retrieval integration (the paper technique as a feature)."""
+"""Serving layer: the batched async pipeline over the SPFresh index.
+
+``RequestQueue`` micro-batches requests into padded fixed-shape buckets,
+``ServeEngine`` dispatches them into cached jit steps (single-host or
+sharded backends), and ``MaintenancePolicy`` schedules the background
+Local Rebuilder.  ``IndexedRetriever`` is the two-tower retrieval
+integration (the paper technique as a framework feature).
+"""
+from repro.serve.engine import (  # noqa: F401
+    EngineConfig, IndexBackend, LocalBackend, ServeEngine,
+)
+from repro.serve.policy import (  # noqa: F401
+    BacklogPolicy, MaintenancePolicy, RatioPolicy,
+)
+from repro.serve.queue import RequestQueue, Ticket, default_buckets  # noqa: F401

@@ -1,73 +1,150 @@
-"""Serving engine: the paper's online loop (§5.2/§5.3) as a host driver.
+"""Serving engine: the paper's online loop (§5.2/§5.3) as a batched
+async pipeline.
 
-Search / insert / delete requests are micro-batched; the background Local
-Rebuilder is interleaved at a configurable fg:bg ratio (the paper's 2:1
-feed-forward pipeline, Fig. 12).  The latency budget is a candidate budget
-(nprobe), the jit-world analogue of the paper's 10 ms hard cut.
+Requests enter through a :class:`~repro.serve.queue.RequestQueue` that
+micro-batches them into fixed-shape padded buckets (so the jit compile
+cache stays warm); each micro-batch is ONE dispatch into a cached,
+state-donating executable — `core.index.search_step` /
+`insert_step` / `delete_step` for a single-host index, or the
+shard_map'd steps of `distributed.sharded_index.ShardedIndex` for an
+N-shard mesh.  The same engine serves both: backends implement the
+small protocol below.
 
-Metrics: per-request latency percentiles, throughput, rebalancing stats —
-everything Fig. 7/9 plots.
+Background maintenance (the Local Rebuilder) is scheduled by a
+pluggable :class:`~repro.serve.policy.MaintenancePolicy` — the paper's
+2:1 feed-forward pipeline (Fig. 12) is ``RatioPolicy(2)``; a reactive
+``BacklogPolicy`` fires only when oversized postings actually exist.
+
+Metrics: per-op latency percentiles, queue depth, padding waste, and
+maintenance throughput — everything Fig. 7/9/12 plot, per policy.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Protocol
 
 import numpy as np
 
-from repro.core import lire
 from repro.core.index import SPFreshIndex
+from repro.serve.policy import BacklogPolicy, MaintenancePolicy, RatioPolicy
+from repro.serve.queue import (
+    DELETE, INSERT, SEARCH, MicroBatch, RequestQueue, Ticket, default_buckets,
+)
 
+
+# ---------------------------------------------------------------------------
+# Backend protocol + the single-host backend
+# ---------------------------------------------------------------------------
+
+class IndexBackend(Protocol):
+    """What the engine needs from an index: fixed-shape batched ops."""
+
+    def search(self, queries: np.ndarray, k: int, nprobe: int | None
+               ) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def insert(self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def delete(self, vids: np.ndarray, valid: np.ndarray) -> None: ...
+
+    def log_update(self, op: str, payload: dict) -> None: ...
+
+    def maintain(self, budget: int) -> int: ...
+
+    def drain(self) -> int: ...
+
+    def backlog(self) -> int: ...
+
+    def stats(self) -> dict: ...
+
+
+class LocalBackend:
+    """Single-host SPFreshIndex behind the batched entry points."""
+
+    def __init__(self, index: SPFreshIndex):
+        self.index = index
+
+    def search(self, queries, k, nprobe):
+        return self.index.search_padded(queries, k, nprobe=nprobe)
+
+    def insert(self, vecs, vids, valid):
+        landed = self.index.insert_padded(vecs, vids, valid)
+        return np.asarray(vids), landed
+
+    def delete(self, vids, valid):
+        self.index.delete_padded(vids, valid)
+
+    def log_update(self, op, payload):
+        """WAL-log a pipeline update batch (crash recovery, §4.4): the
+        padded jit entry points bypass SPFreshIndex.insert/delete, so the
+        engine logs here — once per batch, before the first dispatch."""
+        if self.index.wal is not None:
+            self.index._wal_applied = self.index.wal.append(op, payload)
+
+    def maintain(self, budget):
+        return self.index.maintain_fused(budget)
+
+    def drain(self):
+        return self.index.maintain()
+
+    def backlog(self):
+        return self.index.backlog()
+
+    def stats(self):
+        return self.index.stats()
+
+
+# ---------------------------------------------------------------------------
+# Config + metrics
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class EngineConfig:
     search_k: int = 10
     nprobe: int | None = None
-    fg_bg_ratio: int = 2        # foreground batches per background step (2:1)
-    maintain_budget: int = 8    # max rebuild steps per background slot
+    # --- micro-batching ---
+    max_batch: int = 256         # largest bucket (rows per dispatch)
+    min_bucket: int = 8          # smallest bucket
+    # --- maintenance scheduling (used when no policy object is given) ---
+    policy: str = "ratio"        # "ratio" | "backlog"
+    fg_bg_ratio: int = 2         # foreground update batches per bg slot (2:1)
+    maintain_budget: int = 8     # rebuild steps per background slot
+    backlog_threshold: int = 1   # BacklogPolicy firing threshold
+    # --- insert backpressure ---
+    max_insert_retries: int = 4
+
+    def buckets(self) -> tuple[int, ...]:
+        return default_buckets(self.min_bucket, self.max_batch)
+
+    def make_policy(self) -> MaintenancePolicy:
+        if self.policy == "backlog":
+            return BacklogPolicy(self.backlog_threshold, self.maintain_budget)
+        return RatioPolicy(self.fg_bg_ratio, self.maintain_budget)
 
 
-class ServeEngine:
-    def __init__(self, index: SPFreshIndex, cfg: EngineConfig | None = None):
-        self.index = index
-        self.cfg = cfg or EngineConfig()
-        self.search_lat: list[float] = []
-        self.insert_lat: list[float] = []
-        self._fg_since_bg = 0
+class ServeMetrics:
+    """Aggregated pipeline observability (read via ``ServeEngine.report``)."""
 
-    # ------------------------------------------------------------------
-    def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        t0 = time.time()
-        d, v = self.index.search(
-            queries, self.cfg.search_k, nprobe=self.cfg.nprobe
-        )
-        self.search_lat.append(time.time() - t0)
-        return d, v
+    def __init__(self):
+        self.lat: dict[str, list[float]] = {SEARCH: [], INSERT: [], DELETE: []}
+        self.maint_slots = 0
+        self.maint_steps = 0
+        self.maint_time_s = 0.0
+        self.insert_retries = 0
+        self.insert_dropped = 0
 
-    def insert(self, vecs: np.ndarray, vids: np.ndarray) -> None:
-        t0 = time.time()
-        self.index.insert(vecs, vids)
-        self.insert_lat.append(time.time() - t0)
-        self._tick_background()
+    def note_ticket(self, ticket: Ticket) -> None:
+        if ticket.latency_s is not None:
+            self.lat[ticket.op].append(ticket.latency_s)
 
-    def delete(self, vids: np.ndarray) -> None:
-        self.index.delete(vids)
-        self._tick_background()
+    def note_maintenance(self, steps: int, dt: float) -> None:
+        self.maint_slots += 1
+        self.maint_steps += steps
+        self.maint_time_s += dt
 
-    def _tick_background(self) -> None:
-        """Feed-forward pipeline: every fg_bg_ratio foreground batches, give
-        the Local Rebuilder one slot of maintain_budget steps."""
-        self._fg_since_bg += 1
-        if self._fg_since_bg >= self.cfg.fg_bg_ratio:
-            self._fg_since_bg = 0
-            self.index.maintain(max_steps=self.cfg.maintain_budget)
-
-    def drain(self) -> int:
-        return self.index.maintain()
-
-    # ------------------------------------------------------------------
-    def latency_percentiles(self, which: str = "search") -> dict:
-        lat = self.search_lat if which == "search" else self.insert_lat
+    def percentiles(self, op: str) -> dict:
+        lat = self.lat.get(op, [])
         if not lat:
             return {}
         arr = np.asarray(lat) * 1e3
@@ -80,5 +157,203 @@ class ServeEngine:
             "n": len(arr),
         }
 
+
+class ServeEngine:
+    """Batched async serving pipeline over a local or sharded index.
+
+    Async API: ``submit_search`` / ``submit_insert`` / ``submit_delete``
+    return a :class:`Ticket`; ``pump()`` processes queued micro-batches;
+    ``ticket.result()`` pumps until that request completes.  The
+    synchronous ``search`` / ``insert`` / ``delete`` methods are
+    submit-then-pump conveniences (and the pre-pipeline API).
+    """
+
+    def __init__(
+        self,
+        backend: IndexBackend | SPFreshIndex,
+        cfg: EngineConfig | None = None,
+        policy: MaintenancePolicy | None = None,
+    ):
+        if isinstance(backend, SPFreshIndex):
+            backend = LocalBackend(backend)
+        self.backend = backend
+        self.cfg = cfg or EngineConfig()
+        self.policy = policy or self.cfg.make_policy()
+        self.queue = RequestQueue(self.cfg.buckets())
+        self.metrics = ServeMetrics()
+
+    @property
+    def index(self) -> SPFreshIndex | None:
+        """The underlying single-host index (None for sharded backends)."""
+        return getattr(self.backend, "index", None)
+
+    # ----------------------------- submit ------------------------------
+    def _empty_ticket(self, op: str, key: tuple,
+                      buffers: dict[str, np.ndarray]) -> Ticket:
+        """Zero-row requests complete immediately (a no-op, not an error)."""
+        t = Ticket(op, 0, key, engine=self)
+        t._buffers = buffers
+        t.t_done = t.t_submit
+        return t
+
+    def submit_search(
+        self, queries: np.ndarray, *, k: int | None = None,
+        nprobe: int | None = None,
+    ) -> Ticket:
+        q = np.ascontiguousarray(np.asarray(queries, np.float32))
+        kk = k or self.cfg.search_k
+        key = (kk, nprobe or self.cfg.nprobe)
+        if len(q) == 0:
+            return self._empty_ticket(SEARCH, key, {
+                "dists": np.zeros((0, kk), np.float32),
+                "ids": np.full((0, kk), -1, np.int32),
+            })
+        t = Ticket(SEARCH, len(q), key, engine=self)
+        return self.queue.submit(t, {"queries": q})
+
+    def submit_insert(self, vecs: np.ndarray, vids: np.ndarray) -> Ticket:
+        vecs = np.asarray(vecs, np.float32)
+        vids = np.asarray(vids, np.int32)
+        assert len(vecs) == len(vids)
+        if len(vids) == 0:
+            return self._empty_ticket(INSERT, (), {
+                "ids": np.zeros((0,), np.int32),
+                "landed": np.zeros((0,), bool),
+            })
+        t = Ticket(INSERT, len(vids), (), engine=self)
+        return self.queue.submit(t, {"vecs": vecs, "vids": vids})
+
+    def submit_delete(self, vids: np.ndarray) -> Ticket:
+        vids = np.asarray(vids, np.int32)
+        if len(vids) == 0:
+            return self._empty_ticket(DELETE, (), {})
+        t = Ticket(DELETE, len(vids), (), engine=self)
+        return self.queue.submit(t, {"vids": vids})
+
+    # ------------------------------ pump -------------------------------
+    def pump(self, max_batches: int | None = None) -> int:
+        """Process queued micro-batches; returns how many were processed."""
+        n = 0
+        while max_batches is None or n < max_batches:
+            batch = self.queue.pop_batch()
+            if batch is None:
+                break
+            self._process(batch)
+            n += 1
+        return n
+
+    def _pump_until(self, ticket: Ticket) -> None:
+        while not ticket.done:
+            if self.pump(max_batches=1) == 0:
+                raise RuntimeError("ticket still pending on an empty queue")
+
+    def _process(self, batch: MicroBatch) -> None:
+        if batch.op == SEARCH:
+            k, nprobe = batch.key
+            d, v = self.backend.search(batch.arrays["queries"], k, nprobe)
+            batch.scatter({"dists": d, "ids": v})
+        elif batch.op == INSERT:
+            self._process_insert(batch)
+            self._tick_background()
+        else:
+            vids, valid = batch.arrays["vids"], batch.valid
+            self.backend.log_update("delete", {"vids": vids[valid]})
+            self.backend.delete(vids, valid)
+            batch.scatter({})
+            self._tick_background()
+        for part in batch.parts:
+            if part.ticket.done:
+                self.metrics.note_ticket(part.ticket)
+
+    def _process_insert(self, batch: MicroBatch) -> None:
+        """Insert with pipeline backpressure: when primary appends hit a
+        posting at hard capacity, give the rebuilder a slot (it splits the
+        oversized posting) and retry the unlanded rows — the explicit
+        backpressure form of the paper's Updater→Rebuilder pipeline."""
+        vecs, vids = batch.arrays["vecs"], batch.arrays["vids"]
+        valid = batch.valid
+        # logged ONCE per batch (not per retry): replay re-runs the full
+        # backpressure loop through SPFreshIndex.insert
+        self.backend.log_update(
+            "insert", {"vecs": vecs[valid], "vids": vids[valid]}
+        )
+        ids = np.asarray(vids).copy()
+        landed_all = np.zeros(batch.bucket, bool)
+        pending = valid.copy()
+        for attempt in range(self.cfg.max_insert_retries + 1):
+            if not pending.any():
+                break
+            if attempt > 0:
+                self._run_maintenance()      # backpressure slot
+                self.metrics.insert_retries += 1
+            got_ids, landed = self.backend.insert(vecs, vids, pending)
+            newly = pending & landed
+            ids[newly] = got_ids[newly]
+            landed_all |= newly
+            pending = pending & ~landed
+        self.metrics.insert_dropped += int(pending.sum())
+        batch.scatter({"ids": ids, "landed": landed_all})
+
+    # ------------------------ background pipeline -----------------------
+    def _tick_background(self) -> None:
+        self.policy.note_foreground()
+        if self.policy.want_maintenance(self.backend.backlog):
+            self._run_maintenance()
+
+    def _run_maintenance(self) -> int:
+        t0 = time.perf_counter()
+        steps = self.backend.maintain(self.policy.budget)
+        self.policy.note_maintenance(steps)
+        self.metrics.note_maintenance(steps, time.perf_counter() - t0)
+        return steps
+
+    def drain(self) -> int:
+        """Flush the queue, then run the rebuilder to quiescence."""
+        self.pump()
+        t0 = time.perf_counter()
+        steps = self.backend.drain()
+        self.metrics.note_maintenance(steps, time.perf_counter() - t0)
+        return steps
+
+    # ------------------------- sync conveniences ------------------------
+    def search(
+        self, queries: np.ndarray, *, k: int | None = None,
+        nprobe: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        t = self.submit_search(queries, k=k, nprobe=nprobe)
+        return t.result()
+
+    def insert(self, vecs: np.ndarray, vids: np.ndarray) -> None:
+        t = self.submit_insert(vecs, vids)
+        t.result()
+
+    def delete(self, vids: np.ndarray) -> None:
+        t = self.submit_delete(vids)
+        t.result()
+
+    # ----------------------------- metrics ------------------------------
+    def latency_percentiles(self, which: str = SEARCH) -> dict:
+        return self.metrics.percentiles(which)
+
+    def report(self) -> dict:
+        m = self.metrics
+        mt = m.maint_time_s
+        return {
+            "search": m.percentiles(SEARCH),
+            "insert": m.percentiles(INSERT),
+            "delete": m.percentiles(DELETE),
+            "queue": self.queue.accounting(),
+            "maintenance": {
+                "policy": self.policy.describe(),
+                "slots": m.maint_slots,
+                "steps": m.maint_steps,
+                "time_s": mt,
+                "steps_per_s": m.maint_steps / mt if mt > 0 else 0.0,
+            },
+            "insert_retries": m.insert_retries,
+            "insert_dropped": m.insert_dropped,
+            "backlog": self.backend.backlog(),
+        }
+
     def stats(self) -> dict:
-        return self.index.stats()
+        return self.backend.stats()

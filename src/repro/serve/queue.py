@@ -1,0 +1,237 @@
+"""Micro-batching request queue for the serving pipeline.
+
+The engine's front door: callers ``submit`` search / insert / delete
+requests of arbitrary size; the queue coalesces *contiguous runs of
+same-kind requests* (order across kinds is preserved, so an insert
+followed by a delete of the same id never reorders) and emits
+fixed-shape **padded micro-batches**.
+
+Padding is *pad-to-bucket*: batch rows are rounded up to the nearest
+bucket in a small geometric ladder (default powers of two, e.g.
+``8, 16, 32, 64, 128, 256``).  Under jit every distinct array shape is a
+distinct compiled executable, so free-form batch sizes would thrash the
+compile cache; a fixed bucket ladder keeps the cache warm at the cost of
+a measurable amount of padding waste — which the queue accounts for
+(``padded_rows`` vs ``real_rows``) so the trade-off shows up in the
+engine's metrics instead of being invisible.
+
+Large requests are split into parts of at most the largest bucket; a
+:class:`Ticket` tracks all parts of one request and reassembles per-row
+results in submission order.  Queue depth (in rows and requests) is
+tracked continuously for the engine's depth metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+SEARCH, INSERT, DELETE = "search", "insert", "delete"
+_PAD_FILL = {"queries": 0.0, "vecs": 0.0, "vids": -1}
+
+
+def default_buckets(min_bucket: int = 8, max_batch: int = 256) -> tuple[int, ...]:
+    """Geometric (×2) bucket ladder from ``min_bucket`` to ``max_batch``."""
+    assert min_bucket >= 1 and max_batch >= min_bucket
+    out = []
+    b = min_bucket
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+class Ticket:
+    """Handle for one submitted request (possibly split into parts).
+
+    ``result()`` blocks by pumping the owning engine until every part of
+    the request has been processed, then returns the assembled per-row
+    result (op-dependent; see :class:`ServeEngine`).
+    """
+
+    def __init__(self, op: str, n: int, key: tuple, engine: Any = None):
+        self.op = op
+        self.n = n
+        self.key = key                    # (k, nprobe) for search, () else
+        self.t_submit = time.perf_counter()
+        self.t_done: float | None = None
+        self._engine = engine
+        self._pending = 0                 # parts not yet processed
+        self._buffers: dict[str, np.ndarray] = {}
+
+    @property
+    def done(self) -> bool:
+        return self._pending == 0
+
+    def _complete_part(self, start: int, n: int, arrays: dict[str, np.ndarray]):
+        for name, arr in arrays.items():
+            if name not in self._buffers:
+                shape = (self.n,) + arr.shape[1:]
+                self._buffers[name] = np.zeros(shape, arr.dtype)
+            self._buffers[name][start : start + n] = arr[:n]
+        self._pending -= 1
+        if self._pending == 0:
+            self.t_done = time.perf_counter()
+
+    def result(self):
+        if not self.done:
+            if self._engine is None:
+                raise RuntimeError("ticket not done and no engine attached")
+            self._engine._pump_until(self)
+        return self._assemble()
+
+    def _assemble(self):
+        if self.op == SEARCH:
+            return self._buffers["dists"], self._buffers["ids"]
+        if self.op == INSERT:
+            return self._buffers["ids"], self._buffers["landed"]
+        return None
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class _Part:
+    """A contiguous slice of one ticket's rows, at most one bucket wide."""
+
+    ticket: Ticket
+    arrays: dict[str, np.ndarray]   # unpadded row arrays for this part
+    start: int                      # row offset inside the ticket
+    n: int
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A padded, fixed-shape batch of same-kind parts ready for one jit call."""
+
+    op: str
+    key: tuple                      # per-op static params (k, nprobe)
+    parts: list[_Part]
+    arrays: dict[str, np.ndarray]   # padded to ``bucket`` rows
+    n_valid: int
+    bucket: int
+
+    @property
+    def valid(self) -> np.ndarray:
+        return np.arange(self.bucket) < self.n_valid
+
+    def scatter(self, results: dict[str, np.ndarray]) -> None:
+        """Write per-row results back into the owning tickets."""
+        off = 0
+        for part in self.parts:
+            sliced = {k: v[off : off + part.n] for k, v in results.items()}
+            part.ticket._complete_part(part.start, part.n, sliced)
+            off += part.n
+
+
+class RequestQueue:
+    """FIFO of request parts + the batching/padding policy described above."""
+
+    def __init__(self, buckets: tuple[int, ...] | None = None):
+        self.buckets = tuple(sorted(buckets or default_buckets()))
+        self.max_batch = self.buckets[-1]
+        self._fifo: deque[_Part] = deque()
+        self._depth_rows = 0
+        # cumulative accounting (engine metrics read these)
+        self.real_rows = 0
+        self.padded_rows = 0
+        self.batches = 0
+        self.max_depth_rows = 0
+        self._depth_sum = 0.0
+        self._depth_samples = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, ticket: Ticket, arrays: dict[str, np.ndarray]) -> Ticket:
+        """Split a request into ≤ max_batch parts and enqueue them in order."""
+        n = ticket.n
+        assert n >= 1, "empty request"
+        for start in range(0, n, self.max_batch):
+            stop = min(start + self.max_batch, n)
+            part = _Part(
+                ticket=ticket,
+                arrays={k: v[start:stop] for k, v in arrays.items()},
+                start=start,
+                n=stop - start,
+            )
+            ticket._pending += 1
+            self._fifo.append(part)
+            self._depth_rows += part.n
+        self.max_depth_rows = max(self.max_depth_rows, self._depth_rows)
+        return ticket
+
+    # -------------------------------------------------------------- state
+    def __len__(self) -> int:
+        return len(self._fifo)
+
+    @property
+    def depth_rows(self) -> int:
+        return self._depth_rows
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_batch
+
+    # ----------------------------------------------------------- batching
+    def pop_batch(self) -> MicroBatch | None:
+        """Coalesce the head run of same-kind/same-key parts into one
+        padded batch.  Returns None when the queue is empty."""
+        if not self._fifo:
+            return None
+        self._depth_sum += self._depth_rows
+        self._depth_samples += 1
+
+        head = self._fifo[0]
+        op, key = head.ticket.op, head.ticket.key
+        parts: list[_Part] = []
+        rows = 0
+        while self._fifo:
+            p = self._fifo[0]
+            if p.ticket.op != op or p.ticket.key != key:
+                break
+            if rows + p.n > self.max_batch:
+                break
+            parts.append(self._fifo.popleft())
+            rows += p.n
+        bucket = self.bucket_for(rows)
+        self._depth_rows -= rows
+        self.real_rows += rows
+        self.padded_rows += bucket - rows
+        self.batches += 1
+
+        arrays: dict[str, np.ndarray] = {}
+        for name in parts[0].arrays:
+            chunks = [p.arrays[name] for p in parts]
+            cat = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+            pad = bucket - rows
+            if pad:
+                width = [(0, pad)] + [(0, 0)] * (cat.ndim - 1)
+                cat = np.pad(cat, width, constant_values=_PAD_FILL.get(name, 0))
+            arrays[name] = cat
+        return MicroBatch(
+            op=op, key=key, parts=parts, arrays=arrays,
+            n_valid=rows, bucket=bucket,
+        )
+
+    # ------------------------------------------------------------ metrics
+    def accounting(self) -> dict:
+        total = self.real_rows + self.padded_rows
+        return {
+            "batches": self.batches,
+            "rows": self.real_rows,
+            "padded_rows": self.padded_rows,
+            "padding_waste_frac": self.padded_rows / total if total else 0.0,
+            "depth_rows_now": self._depth_rows,
+            "depth_rows_max": self.max_depth_rows,
+            "depth_rows_avg": (
+                self._depth_sum / self._depth_samples
+                if self._depth_samples else 0.0
+            ),
+        }

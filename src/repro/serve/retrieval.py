@@ -5,6 +5,11 @@ The item corpus lives in a SPFreshIndex built over item-tower embeddings;
 ``retrieve`` runs the user tower and answers top-k by ANN search instead of
 the brute-force 1M-candidate GEMM.  Streaming catalog churn (new/removed
 items) goes through LIRE insert/delete — no index rebuilds.
+
+``attach_engine`` puts the serving pipeline in front of the index: lookups
+and churn then flow through the micro-batched ServeEngine, and background
+maintenance is scheduled by its MaintenancePolicy instead of the fixed
+``maintain(32)`` slot.
 """
 from __future__ import annotations
 
@@ -23,6 +28,19 @@ class IndexedRetriever:
         self.model_cfg = model_cfg
         self.index_cfg = index_cfg
         self.index: SPFreshIndex | None = None
+        self.engine = None
+
+    # ------------------------------------------------------------------
+    def attach_engine(self, cfg=None, policy=None):
+        """Serve this corpus through the batched pipeline; returns the
+        :class:`~repro.serve.engine.ServeEngine` (also kept on ``self``)."""
+        from repro.serve.engine import EngineConfig, ServeEngine
+
+        assert self.index is not None, "build_corpus first"
+        self.engine = ServeEngine(
+            self.index, cfg or EngineConfig(), policy=policy
+        )
+        return self.engine
 
     # ------------------------------------------------------------------
     def build_corpus(self, item_ids: np.ndarray, batch: int = 4096) -> None:
@@ -48,11 +66,18 @@ class IndexedRetriever:
         base = len(self._id_map)
         vids = np.arange(base, base + len(item_ids))
         self._id_map = np.concatenate([self._id_map, np.asarray(item_ids)])
-        self.index.insert(embs, vids.astype(np.int32))
-        self.index.maintain(max_steps=32)
+        if self.engine is not None:
+            self.engine.insert(embs, vids.astype(np.int32))
+        else:
+            self.index.insert(embs, vids.astype(np.int32))
+            self.index.maintain(max_steps=32)
 
     def remove_items(self, vids: np.ndarray) -> None:
-        self.index.delete(np.asarray(vids, np.int32))
+        vids = np.asarray(vids, np.int32)
+        if self.engine is not None:
+            self.engine.delete(vids)
+        else:
+            self.index.delete(vids)
 
     # ------------------------------------------------------------------
     def retrieve(self, user_fields: np.ndarray, k: int = 10,
@@ -64,7 +89,10 @@ class IndexedRetriever:
             R.user_tower(self.params, jnp.asarray(user_fields), self.model_cfg),
             np.float32,
         )
-        d, v = self.index.search(u, k, nprobe=nprobe)
+        if self.engine is not None:
+            d, v = self.engine.search(u, k=k, nprobe=nprobe)
+        else:
+            d, v = self.index.search(u, k, nprobe=nprobe)
         safe = np.maximum(v, 0)
         ids = np.where(v >= 0, self._id_map[safe], -1)
         # squared-L2 on unit vectors ⇒ dot = 1 - d/2

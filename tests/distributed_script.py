@@ -67,7 +67,9 @@ with MESH:
     # ---- distributed insert: new vectors become searchable ----
     insert = D.make_insert_step(MESH, CFG)
     new = make_clustered(rng, 32, 16, n_clusters=2)
-    stacked, new_handles = insert(stacked, jnp.asarray(new))
+    stacked, new_handles = insert(
+        stacked, jnp.asarray(new), jnp.ones(len(new), bool)
+    )
     new_handles = np.asarray(new_handles)
     assert (new_handles >= 0).all(), new_handles
     d2, v2 = search(stacked, jnp.asarray(new), alive)
@@ -123,7 +125,7 @@ with MESH:
     )
     recall8 = hits8 / (len(queries) * 10)
     assert recall8 > 0.85, f"8-shard recall {recall8}"
-    stacked8, h8 = insert8(stacked8, jnp.asarray(new))
+    stacked8, h8 = insert8(stacked8, jnp.asarray(new), jnp.ones(len(new), bool))
     assert (np.asarray(h8) >= 0).all()
     print(f"PASS document_sharded_8 recall={recall8:.3f}")
 

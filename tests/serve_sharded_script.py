@@ -1,0 +1,110 @@
+"""Engine round-trip over a 2-shard stacked state — run as a subprocess
+with 2 fake CPU devices (spawned by tests/test_serve_pipeline.py so the
+main pytest process keeps exactly one device).
+
+Exercises the tentpole claim: the SAME ServeEngine drives a sharded
+backend (shard_map steps from distributed/sharded_index.py) through the
+same micro-batched padded pipeline as the single-host index.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=2 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.types import LireConfig
+from repro.distributed.sharded_index import ShardedIndex
+from repro.serve import BacklogPolicy, EngineConfig, ServeEngine
+
+assert len(jax.devices()) == 2, jax.devices()
+
+MESH = jax.make_mesh((2,), ("model",))
+CFG = LireConfig(
+    dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=1024,
+    num_postings_cap=128, num_vectors_cap=4096, split_limit=48,
+    merge_limit=6, reassign_range=8, reassign_budget=128, replica_count=2,
+    nprobe=8,
+)
+
+
+def make_clustered(rng, n, d, n_clusters=8, spread=0.05):
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, size=n)
+    return (centers[assign] + spread * rng.normal(size=(n, d))).astype(np.float32)
+
+
+rng = np.random.default_rng(0)
+base = make_clustered(rng, 1200, 16, n_clusters=10)
+
+sidx, handles = ShardedIndex.build(MESH, CFG, base, 2)
+engine = ServeEngine(
+    sidx, EngineConfig(search_k=10, max_batch=64, min_bucket=16),
+)
+assert engine.index is None  # sharded backend: no single-host index
+
+# ---- batched search through the pipeline, vs brute force ----
+queries = base[rng.integers(0, len(base), 48)] + 0.01 * rng.normal(
+    size=(48, 16)
+).astype(np.float32)
+t_search = engine.submit_search(queries)      # 48 rows -> one padded bucket
+d, v = t_search.result()
+assert d.shape == (48, 10) and v.shape == (48, 10)
+bf = ((queries[:, None, :] - base[None]) ** 2).sum(-1)
+gt = handles[np.argsort(bf, axis=1)[:, :10]]
+hits = sum(len(set(gt[i].tolist()) & set(v[i].tolist())) for i in range(48))
+recall = hits / (48 * 10)
+assert recall > 0.85, f"sharded engine recall {recall}"
+print(f"PASS sharded_engine_search recall={recall:.3f}")
+
+# ---- insert through the pipeline: handles come back, rows searchable ----
+new = make_clustered(rng, 40, 16, n_clusters=3)
+t_ins = engine.submit_insert(new, np.full(40, -1, np.int32))
+new_handles, landed = t_ins.result()
+assert landed.all(), f"unlanded sharded inserts: {(~landed).sum()}"
+assert (new_handles >= 0).all()
+owners = np.unique(new_handles // CFG.num_vectors_cap)
+d2, v2 = engine.search(new)
+found = sum(int(new_handles[i]) in v2[i].tolist() for i in range(40))
+assert found >= 36, f"only {found}/40 pipeline inserts recalled"
+print(f"PASS sharded_engine_insert found={found}/40 owners={owners.tolist()}")
+
+# ---- delete through the pipeline ----
+engine.delete(new_handles[:20])
+_, v3 = engine.search(new[:20])
+still = sum(int(new_handles[i]) in v3[i].tolist() for i in range(20))
+assert still == 0, f"{still} deleted handles still returned"
+print("PASS sharded_engine_delete")
+
+# ---- maintenance slots fire on the sharded backend too ----
+engine.drain()
+rep = engine.report()
+assert rep["queue"]["depth_rows_now"] == 0
+assert rep["queue"]["rows"] >= 48 + 40 + 20 + 40
+assert rep["backlog"] == 0
+st = engine.stats()
+assert st["n_shards"] == 2 and st["n_inserts"] >= 40
+print(f"PASS sharded_engine_report waste={rep['queue']['padding_waste_frac']:.3f} "
+      f"stats_inserts={st['n_inserts']}")
+
+# ---- BacklogPolicy on the sharded backend ----
+eng2 = ServeEngine(
+    sidx, EngineConfig(search_k=10, max_batch=64),
+    policy=BacklogPolicy(threshold=1, budget=8),
+)
+more = make_clustered(rng, 120, 16, n_clusters=2)
+for s in range(0, 120, 40):
+    eng2.insert(more[s:s + 40], np.full(40, -1, np.int32))
+eng2.drain()
+assert eng2.backend.backlog() == 0
+print("PASS sharded_engine_backlog_policy")
+
+print("ALL_SERVE_SHARDED_PASS")

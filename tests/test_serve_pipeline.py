@@ -1,0 +1,306 @@
+"""Serving pipeline unit + integration tests: queue bucketing/padding
+invariants, MaintenancePolicy firing semantics, engine round-trips over
+the local backend, and (slow, subprocess) a 2-shard stacked state."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.index import SPFreshIndex
+from repro.data.vectors import make_shifting_stream, make_sift_like
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.policy import BacklogPolicy, RatioPolicy
+from repro.serve.queue import RequestQueue, Ticket, default_buckets
+from tests.test_lire import small_cfg
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue: bucketing / padding / ordering invariants
+# ---------------------------------------------------------------------------
+
+def _ticket(op, n, key=()):
+    return Ticket(op, n, key)
+
+
+def _submit(q, op, n, key=(), tag=0.0):
+    t = _ticket(op, n, key)
+    if op == "search":
+        arrays = {"queries": np.full((n, 4), tag, np.float32)}
+    elif op == "insert":
+        arrays = {"vecs": np.full((n, 4), tag, np.float32),
+                  "vids": np.arange(n, dtype=np.int32)}
+    else:
+        arrays = {"vids": np.arange(n, dtype=np.int32)}
+    return q.submit(t, arrays)
+
+
+def test_default_buckets_ladder():
+    assert default_buckets(8, 256) == (8, 16, 32, 64, 128, 256)
+    assert default_buckets(8, 100) == (8, 16, 32, 64, 100)
+    assert default_buckets(4, 4) == (4,)
+
+
+def test_queue_pads_to_bucket_and_accounts_waste():
+    q = RequestQueue(buckets=(8, 16, 32))
+    _submit(q, "search", 11, key=(10, None))
+    assert q.depth_rows == 11
+    b = q.pop_batch()
+    assert b.bucket == 16 and b.n_valid == 11
+    assert b.arrays["queries"].shape == (16, 4)
+    assert b.valid.sum() == 11
+    # padding rows are zero-filled
+    assert (b.arrays["queries"][11:] == 0).all()
+    acc = q.accounting()
+    assert acc["rows"] == 11 and acc["padded_rows"] == 5
+    assert acc["padding_waste_frac"] == pytest.approx(5 / 16)
+    assert q.depth_rows == 0
+
+
+def test_queue_coalesces_contiguous_same_op_runs_only():
+    q = RequestQueue(buckets=(8, 16, 32))
+    _submit(q, "insert", 5, tag=1.0)
+    _submit(q, "insert", 6, tag=2.0)
+    _submit(q, "delete", 3)
+    _submit(q, "insert", 4, tag=3.0)
+    b1 = q.pop_batch()   # both head inserts coalesce: 11 rows -> bucket 16
+    assert b1.op == "insert" and b1.n_valid == 11 and b1.bucket == 16
+    assert (b1.arrays["vecs"][:5] == 1.0).all()
+    assert (b1.arrays["vecs"][5:11] == 2.0).all()
+    b2 = q.pop_batch()   # the delete fences the later insert (op order kept)
+    assert b2.op == "delete" and b2.n_valid == 3
+    b3 = q.pop_batch()
+    assert b3.op == "insert" and b3.n_valid == 4
+    assert q.pop_batch() is None
+
+
+def test_queue_never_mixes_search_keys():
+    q = RequestQueue(buckets=(8, 16))
+    _submit(q, "search", 4, key=(10, None))
+    _submit(q, "search", 4, key=(5, None))   # different k: separate batch
+    b1, b2 = q.pop_batch(), q.pop_batch()
+    assert b1.key == (10, None) and b1.n_valid == 4
+    assert b2.key == (5, None) and b2.n_valid == 4
+
+
+def test_queue_splits_oversized_requests_into_parts():
+    q = RequestQueue(buckets=(8, 16))
+    t = _submit(q, "delete", 40)             # 16 + 16 + 8
+    sizes = []
+    while (b := q.pop_batch()) is not None:
+        sizes.append((b.n_valid, b.bucket))
+        b.scatter({})
+    assert sizes == [(16, 16), (16, 16), (8, 8)]
+    assert t.done
+    acc = q.accounting()
+    assert acc["rows"] == 40 and acc["batches"] == 3
+
+
+def test_queue_vid_padding_is_minus_one():
+    q = RequestQueue(buckets=(8,))
+    _submit(q, "delete", 3)
+    b = q.pop_batch()
+    assert (b.arrays["vids"][3:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# MaintenancePolicy firing semantics
+# ---------------------------------------------------------------------------
+
+def test_ratio_policy_fires_every_n_foreground_batches():
+    pol = RatioPolicy(ratio=3, budget=8)
+    fired = []
+    for _ in range(9):
+        pol.note_foreground()
+        fired.append(pol.want_maintenance(lambda: 99))
+    assert fired == [False, False, True] * 3
+    assert pol.budget == 8
+
+
+def test_ratio_policy_zero_disables_maintenance():
+    pol = RatioPolicy(ratio=0, budget=8)
+    for _ in range(10):
+        pol.note_foreground()
+        assert not pol.want_maintenance(lambda: 99)
+
+
+def test_ratio_policy_never_reads_backlog():
+    pol = RatioPolicy(ratio=1, budget=4)
+
+    def boom():
+        raise AssertionError("ratio policy must not probe the backlog")
+
+    pol.note_foreground()
+    assert pol.want_maintenance(boom)
+
+
+def test_backlog_policy_fires_iff_threshold_reached():
+    pol = BacklogPolicy(threshold=2, budget=16)
+    backlog = {"v": 0}
+    pol.note_foreground()
+    assert not pol.want_maintenance(lambda: backlog["v"])
+    backlog["v"] = 1
+    pol.note_foreground()
+    assert not pol.want_maintenance(lambda: backlog["v"])
+    backlog["v"] = 2
+    pol.note_foreground()
+    assert pol.want_maintenance(lambda: backlog["v"])
+
+
+def test_backlog_policy_rate_limits_probes():
+    pol = BacklogPolicy(threshold=1, budget=4, check_every=4)
+    calls = {"n": 0}
+
+    def probe():
+        calls["n"] += 1
+        return 5
+
+    fired = 0
+    for _ in range(8):
+        pol.note_foreground()
+        fired += bool(pol.want_maintenance(probe))
+    assert calls["n"] == 2 and fired == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine over the local backend
+# ---------------------------------------------------------------------------
+
+def test_engine_async_tickets_and_metrics(rng):
+    base = make_sift_like(1500, 16, seed=9)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    eng = ServeEngine(idx, EngineConfig(search_k=5, max_batch=64))
+
+    t1 = eng.submit_search(base[:10])
+    t2 = eng.submit_insert(make_shifting_stream(30, 16, seed=10),
+                           np.arange(4000, 4030, dtype=np.int32))
+    t3 = eng.submit_delete(np.arange(5, dtype=np.int32))
+    assert not (t1.done or t2.done or t3.done)
+    assert eng.queue.depth_rows == 45
+
+    d, v = t1.result()              # pumps until t1 completes
+    assert t1.done and d.shape == (10, 5)
+    assert (v[:, 0] == np.arange(10)).all()
+
+    ids, landed = t2.result()
+    assert landed.all() and (ids == np.arange(4000, 4030)).all()
+    assert t3.result() is None and t3.done
+
+    rep = eng.report()
+    assert rep["search"]["n"] == 1 and rep["insert"]["n"] == 1
+    assert rep["queue"]["rows"] == 45
+    assert rep["queue"]["depth_rows_now"] == 0
+    assert rep["queue"]["padded_rows"] > 0   # 10->16, 30->32, 5->8
+
+
+def test_engine_search_matches_direct_index(rng):
+    base = make_sift_like(1200, 16, seed=11)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    eng = ServeEngine(idx, EngineConfig(search_k=10))
+    q = base[rng.integers(0, 1200, 40)]
+    d_eng, v_eng = eng.search(q)
+    d_ref, v_ref = idx.search(q, 10)
+    np.testing.assert_allclose(d_eng, d_ref, rtol=1e-5)
+    np.testing.assert_array_equal(v_eng, v_ref)
+
+
+def test_engine_backlog_policy_keeps_postings_bounded(rng):
+    base = make_sift_like(2000, 16, seed=5)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    eng = ServeEngine(
+        idx, EngineConfig(search_k=10),
+        policy=BacklogPolicy(threshold=1, budget=16),
+    )
+    inserts = make_shifting_stream(600, 16, seed=6)
+    ids = np.arange(5000, 5600, dtype=np.int32)
+    for s in range(0, 600, 100):
+        eng.insert(inserts[s:s + 100], ids[s:s + 100])
+    eng.drain()
+    assert idx.backlog() == 0
+    lens = np.asarray(idx.state.pool.posting_len)
+    valid = np.asarray(idx.state.centroid_valid)
+    assert (lens[valid] <= idx.state.cfg.split_limit).all()
+    rep = eng.report()
+    assert rep["maintenance"]["policy"].startswith("backlog")
+    assert rep["maintenance"]["steps"] > 0
+
+
+def test_engine_ratio_off_accumulates_backlog_then_drains(rng):
+    base = make_sift_like(2000, 16, seed=5)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    eng = ServeEngine(idx, EngineConfig(fg_bg_ratio=0, max_insert_retries=0))
+    inserts = make_shifting_stream(400, 16, seed=8)
+    eng.insert(inserts, np.arange(6000, 6400, dtype=np.int32))
+    assert eng.report()["maintenance"]["slots"] == 0
+    eng.drain()
+    assert idx.backlog() == 0
+
+
+def test_engine_fused_maintenance_equivalent_to_drain(rng):
+    base = make_sift_like(1500, 16, seed=13)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    idx.insert(make_shifting_stream(300, 16, seed=14),
+               np.arange(3000, 3300, dtype=np.int32))
+    while idx.maintain_fused(8):
+        pass
+    assert idx.backlog() == 0
+    lens = np.asarray(idx.state.pool.posting_len)
+    valid = np.asarray(idx.state.centroid_valid)
+    assert (lens[valid] <= idx.state.cfg.split_limit).all()
+
+
+def test_engine_empty_requests_are_noops(rng):
+    base = make_sift_like(800, 16, seed=15)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    eng = ServeEngine(idx, EngineConfig(search_k=7))
+    d, v = eng.submit_search(np.zeros((0, 16), np.float32)).result()
+    assert d.shape == (0, 7) and v.shape == (0, 7)
+    ids, landed = eng.submit_insert(
+        np.zeros((0, 16), np.float32), np.zeros(0, np.int32)
+    ).result()
+    assert ids.shape == (0,) and landed.shape == (0,)
+    assert eng.submit_delete(np.zeros(0, np.int32)).result() is None
+    # sync facades too
+    eng.delete(np.zeros(0, np.int32))
+    assert eng.queue.accounting()["batches"] == 0
+
+
+def test_engine_updates_reach_the_wal(rng, tmp_path):
+    wal_path = str(tmp_path / "serve.wal")
+    snap = str(tmp_path / "base.snap")
+    base = make_sift_like(1000, 16, seed=16)
+    idx = SPFreshIndex.build(small_cfg(), base, wal_path=wal_path)
+    idx.snapshot(snap)
+    eng = ServeEngine(idx, EngineConfig(search_k=5))
+    fresh = make_shifting_stream(60, 16, seed=17)
+    ids = np.arange(2000, 2060, dtype=np.int32)
+    eng.insert(fresh, ids)
+    eng.delete(ids[:10])
+    eng.drain()
+    # crash: rebuild from the pre-pipeline snapshot + WAL tail replay
+    idx2 = SPFreshIndex.restore(snap, small_cfg(), wal_path=wal_path)
+    _, got = idx2.search(fresh[10:20], 5)
+    assert (got[:, 0] == ids[10:20]).all(), "WAL replay lost pipeline inserts"
+    _, got_del = idx2.search(fresh[:10], 5)
+    leaked = set(got_del.reshape(-1).tolist()) & set(ids[:10].tolist())
+    assert not leaked, f"WAL replay resurrected deleted ids: {leaked}"
+
+
+# ---------------------------------------------------------------------------
+# Engine over a 2-shard stacked state (subprocess: fake 2-device mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_over_two_shard_mesh():
+    script = os.path.join(os.path.dirname(__file__), "serve_sharded_script.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "ALL_SERVE_SHARDED_PASS" in proc.stdout

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# One local gate for builders: byte-compile, fast tier-1 tests, bench smoke.
+#
+#   tools/check.sh            # the full gate
+#   tools/check.sh --fast     # skip the bench smoke
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== compileall =="
+python -m compileall -q src benchmarks examples tools
+
+echo "== pytest (tier-1, -m 'not slow') =="
+python -m pytest -q -m "not slow"
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== benchmarks dry smoke =="
+  python -m benchmarks.run --dry
+fi
+
+echo "check.sh: ALL GREEN"
