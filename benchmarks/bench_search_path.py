@@ -1,0 +1,161 @@
+"""Search data-path benchmark: XLA gather oracle vs Pallas paged scan
+(per-query and batch-dedup schedules).
+
+Reports wall-clock latency percentiles AND the modeled HBM scan traffic —
+the quantity the paged kernels are built to minimize:
+
+* **oracle**      — `bp.parallel_get` gathers the full fixed-capacity
+  probe buffer: ``Q · nprobe · MB`` pages regardless of occupancy.
+* **per_query**   — streams only *present* pages, once per (query, probe):
+  ``sum_q |pages(q)|`` page transfers.
+* **batched**     — streams each micro-batch-unique page ONCE:
+  ``|union_q pages(q)|`` transfers; traffic divides by the average probe
+  multiplicity (how many queries probe the same page).
+
+``run_json`` emits the machine-readable BENCH_search.json payload that
+``python -m benchmarks.run --json`` writes, so the perf trajectory is
+tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg
+from repro.core import lire
+from repro.core.index import SPFreshIndex
+from repro.data.vectors import make_sift_like
+
+# (label, search kwargs) — the three data paths under test
+PATHS = (
+    ("oracle", dict()),
+    ("pallas_per_query",
+     dict(use_pallas_scan=True, scan_schedule="per_query")),
+    ("pallas_batched",
+     dict(use_pallas_scan=True, scan_schedule="batched")),
+)
+
+
+def _build(quick: bool):
+    n = 6000 if quick else 60000
+    dim = 16
+    base = make_sift_like(n, dim, seed=71)
+    idx = SPFreshIndex.build(
+        bench_cfg(num_blocks=16384, num_postings_cap=2048,
+                  num_vectors_cap=max(65536, 2 * n)),
+        base,
+    )
+    rng = np.random.default_rng(72)
+    q_n = 32 if quick else 256
+    # serving-shaped query mix: half uniform, half from a few hot spots
+    # (trending-content skew) — probe multiplicity comes from the skew
+    uni = base[rng.integers(0, n, q_n // 2)]
+    hot_centers = base[rng.integers(0, n, 4)]
+    hot = hot_centers[rng.integers(0, 4, q_n - q_n // 2)]
+    queries = np.concatenate([uni, hot]) \
+        + 0.02 * rng.normal(size=(q_n, dim)).astype(np.float32)
+    return idx, jnp.asarray(queries, jnp.float32)
+
+
+def _traffic_model(state, queries, nprobe: int) -> dict:
+    """Pages touched per schedule on this workload + probe multiplicity."""
+    from benchmarks.common import scan_traffic
+
+    t = scan_traffic(state, queries, nprobe)
+    q_n = t["q_n"]
+    return {
+        "page_bytes": t["page_bytes"],
+        "probe_multiplicity": t["probe_multiplicity"],
+        "pages_per_query": {
+            "oracle": t["oracle_pages"] / q_n,
+            "pallas_per_query": t["total_pages"] / q_n,
+            "pallas_batched": t["unique_pages"] / q_n,
+        },
+    }
+
+
+def _timed(fn, reps: int) -> dict:
+    jax.block_until_ready(fn())  # compile
+    lats = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        lats.append((time.perf_counter() - t0) * 1e3)
+    arr = np.asarray(lats)
+    return {
+        "mean_ms": float(arr.mean()),
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+    }
+
+
+def run_json(quick: bool = True) -> dict:
+    idx, queries = _build(quick)
+    state = idx.state
+    nprobe = 8
+    k = 10
+    reps = 10 if quick else 30
+    model = _traffic_model(state, queries, nprobe)
+    page_bytes = model["page_bytes"]
+
+    # batched-schedule page accounting (overflow > 0 = budget dropped pages)
+    pstats = {
+        kk: int(v) for kk, v in
+        lire.scan_page_stats(state, queries, nprobe=nprobe).items()
+    }
+
+    out = {
+        "workload": {
+            "q": int(queries.shape[0]),
+            "dim": state.cfg.dim,
+            "nprobe": nprobe,
+            "k": k,
+            "block_size": state.cfg.block_size,
+            "page_bytes": page_bytes,
+            "n_postings": int(np.asarray(state.n_postings)),
+        },
+        "probe_multiplicity": model["probe_multiplicity"],
+        "page_dedup": pstats,
+        "paths": {},
+    }
+    for label, kw in PATHS:
+        fn = lambda kw=kw: lire.search(
+            state, queries, k=k, nprobe=nprobe, **kw
+        )
+        lat = _timed(fn, reps)
+        ppq = model["pages_per_query"][label]
+        out["paths"][label] = {
+            **lat,
+            "pages_per_query": ppq,
+            "scan_bytes_per_query": ppq * page_bytes,
+            "scan_gb_per_query": ppq * page_bytes / 1e9,
+        }
+    b = out["paths"]["pallas_batched"]["scan_bytes_per_query"]
+    p = out["paths"]["pallas_per_query"]["scan_bytes_per_query"]
+    out["batched_traffic_saving"] = p / max(b, 1e-12)
+    return out
+
+
+def run(quick: bool = True) -> list[str]:
+    res = run_json(quick)
+    lines = []
+    for label, r in res["paths"].items():
+        lines.append(
+            f"search_path/{label},{r['mean_ms'] * 1e3:.1f},"
+            f"p50_ms={r['p50_ms']:.3f};p99_ms={r['p99_ms']:.3f};"
+            f"scan_bytes_per_query={r['scan_bytes_per_query']:.0f}"
+        )
+    lines.append(
+        "search_path/traffic,0.0,"
+        f"probe_multiplicity={res['probe_multiplicity']:.2f}x;"
+        f"batched_saving={res['batched_traffic_saving']:.2f}x"
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

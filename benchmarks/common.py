@@ -65,3 +65,36 @@ def posting_stats(index: SPFreshIndex) -> dict:
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def scan_traffic(state, queries, nprobe: int) -> dict:
+    """Page-granular scan traffic model for a query micro-batch — the
+    quantities the paged posting-scan schedules move per query:
+
+    oracle     ``Q·nprobe·MB`` pages (full fixed-capacity gather),
+    per_query  present pages once per (query, probe) = ``total_pages``,
+    batched    each batch-unique page once = ``unique_pages``.
+    """
+    from repro.core import lire
+    from repro.core.distance import MASK_DISTANCE
+
+    cfg = state.cfg
+    nav_d, pids = lire.navigate(state, queries, nprobe)
+    probe_valid = nav_d < MASK_DISTANCE / 2
+    table = np.asarray(lire._page_table(state, pids, probe_valid))
+    present = table >= 0
+    total_pages = int(present.sum())
+    unique_pages = len(np.unique(table[present]))
+    q_n = table.shape[0]
+    page_bytes = (
+        cfg.block_size * cfg.dim * np.dtype(cfg.vector_dtype).itemsize
+    )
+    return {
+        "q_n": q_n,
+        "page_table": table,
+        "page_bytes": page_bytes,
+        "total_pages": total_pages,
+        "unique_pages": unique_pages,
+        "oracle_pages": q_n * nprobe * cfg.max_blocks_per_posting,
+        "probe_multiplicity": total_pages / max(unique_pages, 1),
+    }

@@ -3,10 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_search.json
+
+``--json PATH`` runs the search data-path benchmark and writes a
+machine-readable report (p50/p99 search latency + modeled scan GB/query
+for the oracle vs per-query vs batch-dedup Pallas schedules) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -20,6 +27,7 @@ BENCHES = [
     ("pipeline", "benchmarks.bench_pipeline_balance"),   # Fig. 12
     ("rebuild_cost", "benchmarks.bench_rebuild_cost"),   # Table 1
     ("kernels", "benchmarks.bench_kernels"),             # hot-path micro
+    ("search_path", "benchmarks.bench_search_path"),     # scan data paths
     ("roofline", "benchmarks.roofline_report"),          # §Roofline summary
 ]
 
@@ -31,7 +39,21 @@ def main() -> None:
     ap.add_argument("--dry", action="store_true",
                     help="import smoke: load every bench module, run nothing")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the search data-path report to PATH and exit")
     args = ap.parse_args()
+
+    if args.json:
+        from benchmarks.bench_search_path import run_json
+
+        report = run_json(quick=not args.full)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        mult = report["probe_multiplicity"]
+        saving = report["batched_traffic_saving"]
+        print(f"# wrote {args.json}: probe_multiplicity={mult:.2f}x "
+              f"batched_traffic_saving={saving:.2f}x")
+        return
 
     print("name,us_per_call,derived")
     failures = 0

@@ -12,6 +12,8 @@ Cells (serving steps, the paper's §5 workloads):
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -56,6 +58,20 @@ UPDATE_B = 4096
 # (the Pallas posting_scan kernel bounds real VMEM use on hardware).
 PROBE_CHUNK = 0
 
+# Paged-scan production path (serve_search_paged): the batch-dedup Pallas
+# schedule with a static page budget.  SEARCH_Q·nprobe probes touch at most
+# num_blocks distinct pages; 32768 (= num_blocks/8) caps the kernel grid
+# while staying above the unique-page count of real probe distributions
+# (overflow drops the highest-numbered pages, counted by dedup_pages).
+# pallas_interpret stays True so the cell lowers everywhere; flip it off on
+# real TPU hardware.
+CONFIG_PAGED = dataclasses.replace(
+    CONFIG,
+    use_pallas_scan=True,
+    scan_schedule="batched",
+    scan_page_budget=32_768,
+)
+
 
 def _shard_axes(multi_pod: bool):
     return ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -94,6 +110,22 @@ def _make_mesh_step(shape: str):
                 _sds((n,), jnp.bool_),
             )
             return fn, args
+        if shape == "serve_search_paged":
+            fn = D.make_search_step(
+                mesh, CONFIG_PAGED, k=10, shard_axes=axes,
+                probe_chunk=PROBE_CHUNK, use_pallas_scan=True,
+                scan_schedule="batched",
+            )
+            paged_specs = jax.tree_util.tree_map(
+                lambda x: _sds((n, *x.shape), x.dtype),
+                jax.eval_shape(lambda: make_empty_state(CONFIG_PAGED)),
+            )
+            args = (
+                paged_specs,
+                _sds((SEARCH_Q, CONFIG.dim), jnp.float32),
+                _sds((n,), jnp.bool_),
+            )
+            return fn, args
         if shape == "serve_search_grouped":
             from repro.core.grouping import GroupIndex
 
@@ -127,8 +159,8 @@ def _make_mesh_step(shape: str):
 
 def cells() -> list[Cell]:
     out = []
-    for shape in ("serve_search", "serve_search_grouped", "serve_update",
-                  "maintain"):
+    for shape in ("serve_search", "serve_search_paged",
+                  "serve_search_grouped", "serve_update", "maintain"):
         c = Cell(
             arch="spfresh-1b", shape=shape, family="index",
             kind="serve", model_cfg=CONFIG, smoke_cfg=SMOKE,

@@ -123,7 +123,11 @@ def navigate_grouped(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "nprobe", "gprobe", "probe_chunk")
+    jax.jit,
+    static_argnames=(
+        "k", "nprobe", "gprobe", "probe_chunk", "use_pallas_scan",
+        "scan_schedule",
+    ),
 )
 def search_grouped(
     state: IndexState,
@@ -134,8 +138,12 @@ def search_grouped(
     nprobe: int | None = None,
     gprobe: int = 8,
     probe_chunk: int = 0,
+    use_pallas_scan: bool | None = None,
+    scan_schedule: str | None = None,
 ) -> tuple[Array, Array]:
-    """lire.search with two-level navigation."""
+    """lire.search with two-level navigation.  The scan + reduce is the
+    shared ``lire.scan_and_reduce`` data path, so the Pallas paged scan,
+    the batch-dedup schedule, and probe chunking all apply here too."""
     from repro.core import lire
 
     cfg = state.cfg
@@ -144,7 +152,8 @@ def search_grouped(
         state, gidx, queries, nprobe=nprobe, gprobe=gprobe
     )
     probe_valid = nav_d < MASK_DISTANCE / 2
-    dists, vids, live = lire._scan_probe_chunk(state, queries, pids, probe_valid)
-    return jax.vmap(lambda d, v, m: lire._dedup_topk_1d(d, v, m, k))(
-        dists, vids, live
+    return lire.scan_and_reduce(
+        state, queries, pids, probe_valid,
+        k=k, probe_chunk=probe_chunk,
+        use_pallas_scan=use_pallas_scan, scan_schedule=scan_schedule,
     )

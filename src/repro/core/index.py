@@ -166,11 +166,23 @@ def build_state(
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def search_step(k: int, nprobe: int | None, probe_chunk: int = 0):
-    """jitted ``(state, queries (B, d)) -> (dists (B, k), vids (B, k))``."""
+def search_step(
+    k: int,
+    nprobe: int | None,
+    probe_chunk: int = 0,
+    use_pallas_scan: bool | None = None,
+    scan_schedule: str | None = None,
+):
+    """jitted ``(state, queries (B, d)) -> (dists (B, k), vids (B, k))``.
+
+    ``probe_chunk`` / ``use_pallas_scan`` / ``scan_schedule`` select the
+    posting-scan data path (None defers to the state's config flags) —
+    the serving pipeline threads them through from ``EngineConfig``.
+    """
     return jax.jit(
         functools.partial(
-            lire.search, k=k, nprobe=nprobe, probe_chunk=probe_chunk
+            lire.search, k=k, nprobe=nprobe, probe_chunk=probe_chunk,
+            use_pallas_scan=use_pallas_scan, scan_schedule=scan_schedule,
         )
     )
 
@@ -306,7 +318,9 @@ class SPFreshIndex:
 
     # ---------------------------- Searcher -----------------------------
     def search(
-        self, queries: np.ndarray, k: int, *, nprobe: int | None = None
+        self, queries: np.ndarray, k: int, *, nprobe: int | None = None,
+        probe_chunk: int = 0, use_pallas_scan: bool | None = None,
+        scan_schedule: str | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, np.float32)
         nq = queries.shape[0]
@@ -316,6 +330,8 @@ class SPFreshIndex:
             d, v = lire.search(
                 self.state, jnp.asarray(q), k=k,
                 nprobe=nprobe or self.state.cfg.nprobe,
+                probe_chunk=probe_chunk, use_pallas_scan=use_pallas_scan,
+                scan_schedule=scan_schedule,
             )
             out_d.append(np.asarray(d))
             out_v.append(np.asarray(v))
@@ -329,8 +345,12 @@ class SPFreshIndex:
 
     def search_padded(
         self, queries: np.ndarray, k: int, *, nprobe: int | None = None,
+        probe_chunk: int = 0, use_pallas_scan: bool | None = None,
+        scan_schedule: str | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
-        d, v = search_step(k, nprobe)(self.state, jnp.asarray(queries))
+        d, v = search_step(
+            k, nprobe, probe_chunk, use_pallas_scan, scan_schedule
+        )(self.state, jnp.asarray(queries))
         return np.asarray(d), np.asarray(v)
 
     def insert_padded(

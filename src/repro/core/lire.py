@@ -27,6 +27,7 @@ from repro.core.types import (
     free_pid,
     set_centroid,
 )
+from repro.kernels.posting_scan import ops as scan_ops
 from repro.storage import blockpool as bp
 from repro.storage import versionmap as vm
 
@@ -143,13 +144,20 @@ def delete_batch(state: IndexState, vids: Array, valid: Array) -> IndexState:
 # Search (the SPANN searcher over versioned postings)
 # ---------------------------------------------------------------------------
 
-def _dedup_topk_1d(
+def _dedup_topk_1d_ref(
     dists: Array, vids: Array, live: Array, k: int
 ) -> tuple[Array, Array]:
-    """Top-k smallest with duplicate-vid suppression (replicas!).
+    """Reference dedup-top-k (the original reduce, kept as the oracle for
+    tests and the before/after benchmark).
 
     Sort by (vid primary, dist secondary); keep first occurrence of each vid;
-    then masked top-k.
+    then masked top-k.  ``jnp.lexsort`` is two full O(n log n) sort passes
+    over the candidate array — the hottest reduce in search.
+
+    Caveat (fixed by the replacement): a vid whose *minimum-distance*
+    occurrence is dead (stale replica closer than the live one) is dropped
+    entirely here; callers must pre-mask dead distances to MASK_DISTANCE
+    for live-min semantics (the chunked scan path always did).
     """
     order = jnp.lexsort((dists, vids))
     sv = vids[order]
@@ -162,6 +170,178 @@ def _dedup_topk_1d(
     top_d, sel = masked_topk(sd, keep, k)
     out_vids = jnp.where(top_d < MASK_DISTANCE / 2, sv[sel], -1)
     return top_d, out_vids
+
+
+def _dedup_prefilter(cfg, k: int, n: int) -> int:
+    """Static candidate cap for the dedup reduce: the k-th distinct vid must
+    sit within the first ``k * max_live_replicas`` distance-sorted entries.
+    ``2 * replica_count`` covers the re-insert-live-id case (old replicas of
+    the same version stay live next to the fresh ones)."""
+    return max(k, min(n, max(4 * k, 2 * k * cfg.replica_count)))
+
+
+def _dedup_topk_1d(
+    dists: Array, vids: Array, live: Array, k: int, prefilter: int
+) -> tuple[Array, Array]:
+    """Top-k smallest with duplicate-vid suppression (replicas!).
+
+    Replaces the lexsort reduce (see ``_dedup_topk_1d_ref``): one
+    ``top_k`` prefilter to ``prefilter`` candidates (distance-sorted, ties
+    by index — so within the prefix, an entry's duplicates-with-smaller-
+    distance all precede it), then an O(prefilter²) segment-min mask picks
+    each vid's first occurrence, then the final masked top-k runs on the
+    tiny prefix.  A packed ``(vid << shift | rank)`` single-key sort needs
+    64-bit keys (vid caps exceed 2^21), which x64-disabled jax doesn't
+    have — the top_k prefilter is strictly cheaper anyway: one partial
+    selection instead of two full sorts over n.
+
+    Exact vs the reference whenever each vid has ≤ prefilter/k live
+    replicas (callers size ``prefilter`` via ``_dedup_prefilter``); only
+    exact cross-vid distance ties can reorder equal-distance results.
+    """
+    n = dists.shape[0]
+    m = min(max(prefilter, k), n)
+    d = jnp.where(live, dists, MASK_DISTANCE)
+    neg, sel = jax.lax.top_k(-d, m)
+    sd = -neg
+    sv = vids[sel]
+    idx = jnp.arange(m)
+    earlier_dup = (sv[:, None] == sv[None, :]) & (idx[:, None] > idx[None, :])
+    keep = ~jnp.any(earlier_dup, axis=1) & (sd < MASK_DISTANCE / 2)
+    top_d, s2 = masked_topk(sd, keep, k)
+    out_vids = jnp.where(top_d < MASK_DISTANCE / 2, sv[s2], -1)
+    return top_d, out_vids
+
+
+def _page_table(
+    state: IndexState, pids: Array, probe_valid: Array
+) -> Array:
+    """Probed pids → block-table rows: ``(Q, nprobe*MB)`` block ids with
+    -1 for absent pages and invalid probes."""
+    pool = state.pool
+    q = pids.shape[0]
+    table = pool.posting_blocks[jnp.maximum(pids, 0)]   # (Q, nprobe, MB)
+    table = jnp.where(((pids >= 0) & probe_valid)[..., None], table, -1)
+    return table.reshape(q, -1)
+
+
+def _page_slot_live(state: IndexState, pages: Array) -> tuple[Array, Array]:
+    """Per-slot (vids, live) metadata for a set of pages ``(..., )`` →
+    ``(..., BS)``.  The metadata gather is tiny (5 B/slot vs the d·dtype
+    payload the Pallas kernel streams page-by-page)."""
+    pool = state.pool
+    safe = jnp.maximum(pages, 0)
+    pvids = pool.block_vid[safe]
+    pvers = pool.block_ver[safe]
+    live = (
+        (pages >= 0)[..., None]
+        & (pvids >= 0)
+        & ~vm.is_stale(state.versions, pvids, pvers)
+    )
+    return pvids, live
+
+
+def _pallas_scan_candidates(
+    state: IndexState, queries: Array, pids: Array, probe_valid: Array,
+    *, k: int, schedule: str,
+) -> tuple[Array, Array, Array]:
+    """Paged Pallas posting scan → reduced candidate set.
+
+    Streams SSD-block-sized pages through the ``posting_scan`` kernels and
+    keeps only the per-page ``min(k, BS)`` nearest live candidates, so
+    neither the (Q, nprobe·cap, d) gather buffer nor the (Q, nprobe·MB·BS)
+    distance matrix ever exists in HBM.  Returns ``(dists (Q, n),
+    vids (Q, n), live (Q, n))`` with n = pages·kpage.
+
+    ``schedule="per_query"`` streams every probed page once per query
+    (paper-faithful ParallelGET).  ``schedule="batched"`` dedups the whole
+    micro-batch's pages to a static ``scan_page_budget`` (overflow drops
+    the highest-numbered pages — see ``ops.dedup_pages``) and scores each
+    unique page against all queries with one MXU GEMM; candidates are then
+    masked back to each query's own probe set, so results match the
+    per-query schedule whenever the budget holds every unique page.
+    """
+    cfg = state.cfg
+    pool = state.pool
+    q, nprobe = pids.shape
+    mb = pool.max_blocks_per_posting
+    kpage = min(k, pool.block_size)
+    interp = cfg.pallas_interpret
+    flat = _page_table(state, pids, probe_valid)        # (Q, NB)
+
+    if schedule == "per_query":
+        pvids, live = _page_slot_live(state, flat)      # (Q, NB, BS)
+        d, slots = scan_ops.scan_posting_blocks_topk(
+            queries, flat, live, pool.blocks, k=kpage, interpret=interp
+        )                                               # (Q, NB, kpage)
+        cand_v = jnp.take_along_axis(pvids, slots, axis=2)
+        cand_d = d.reshape(q, -1)
+        cand_v = cand_v.reshape(q, -1)
+    elif schedule == "batched":
+        budget = cfg.scan_page_budget or min(q * nprobe * mb, cfg.num_blocks)
+        uniq, member_pos, _, _ = scan_ops.dedup_pages(
+            flat.reshape(-1), budget=budget, num_blocks=cfg.num_blocks
+        )
+        pvids, live = _page_slot_live(state, uniq)      # (budget, BS)
+        d, slots = scan_ops.scan_unique_blocks_topk(
+            queries, uniq, live, pool.blocks, k=kpage, interpret=interp
+        )                                               # (budget, Q, kpage)
+        page_v = jnp.take_along_axis(pvids[:, None, :], slots, axis=2)
+        # gather each query's own probed pages back out of the unique-page
+        # tiles (parity with the per-query schedule: a page another query
+        # probed must not leak in) — the reduce then sees the per-query
+        # (Q, NB, kpage) candidate shape, NOT (Q, budget, kpage)
+        mp = member_pos.reshape(q, -1)                  # (Q, NB)
+        safe_mp = jnp.maximum(mp, 0)
+        qi = jnp.arange(q)[:, None]
+        cand_d = jnp.where(
+            (mp >= 0)[:, :, None], d[safe_mp, qi], MASK_DISTANCE
+        ).reshape(q, -1)
+        cand_v = page_v[safe_mp, qi].reshape(q, -1)
+    else:
+        raise ValueError(
+            f"scan_schedule must be 'per_query' or 'batched', got {schedule!r}"
+        )
+    return cand_d, cand_v, cand_d < MASK_DISTANCE / 2
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "scan_page_budget"))
+def scan_page_stats(
+    state: IndexState,
+    queries: Array,
+    *,
+    nprobe: int | None = None,
+    scan_page_budget: int | None = None,
+) -> dict[str, Array]:
+    """Batched-schedule page accounting for a query micro-batch.
+
+    The search hot path cannot surface the dedup counters (it returns only
+    ``(dists, vids)``), so overflow accounting lives here: run it on a
+    representative micro-batch to size ``scan_page_budget`` and to watch
+    for silent recall loss (``overflow > 0`` means the budget dropped
+    probed pages).  ``benchmarks/run.py --json`` reports it per workload.
+
+    Returns ``{"n_pages", "n_unique", "overflow"}`` (device scalars).
+    """
+    cfg = state.cfg
+    nprobe = cfg.nprobe if nprobe is None else nprobe
+    budget = scan_page_budget if scan_page_budget is not None \
+        else cfg.scan_page_budget
+    budget = budget or min(
+        queries.shape[0] * nprobe * cfg.max_blocks_per_posting,
+        cfg.num_blocks,
+    )
+    nav_d, pids = navigate(state, queries, nprobe)
+    probe_valid = nav_d < MASK_DISTANCE / 2
+    flat = _page_table(state, pids, probe_valid)
+    _, _, n_unique, overflow = scan_ops.dedup_pages(
+        flat.reshape(-1), budget=budget, num_blocks=cfg.num_blocks
+    )
+    return {
+        "n_pages": jnp.sum(flat >= 0),
+        "n_unique": n_unique,
+        "overflow": overflow,
+    }
 
 
 def _scan_probe_chunk(
@@ -191,38 +371,52 @@ def _scan_probe_chunk(
     return dists, vids, live
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "probe_chunk"))
-def search(
+def scan_and_reduce(
     state: IndexState,
     queries: Array,
+    pids: Array,
+    probe_valid: Array,
     *,
     k: int,
-    nprobe: int | None = None,
     probe_chunk: int = 0,
+    use_pallas_scan: bool | None = None,
+    scan_schedule: str | None = None,
 ) -> tuple[Array, Array]:
-    """ANN search: centroid navigation → posting scan → dedup top-k.
+    """Posting scan + dedup top-k over an already-navigated probe set.
 
-    Returns ``(dists (Q, k), vids (Q, k))``; missing results are ``-1`` with
-    MASK_DISTANCE.  ``nprobe`` is the latency-budget knob (the paper's 10 ms
-    hard cut becomes a fixed candidate budget under jit).
+    Shared by ``search`` and the grouped two-level search; the scan data
+    path is selected here:
 
-    ``probe_chunk > 0`` processes the probed postings in chunks with a
-    running candidate set (the flash-style streaming scan): the gather
-    buffer is O(Q · chunk · cap · d) instead of O(Q · nprobe · cap · d),
-    which is what makes billion-scale nprobe=64 scans fit in HBM.  On TPU
-    the Pallas ``posting_scan`` kernel fuses this gather+distance entirely.
+    * **Pallas paged scan** (``use_pallas_scan``, schedule per
+      ``scan_schedule`` — both default to the config flags): pages stream
+      HBM→VMEM through the ``posting_scan`` kernels, which emit per-page
+      k-min candidates; the reduce then works on (Q, pages·kpage)
+      candidates.  ``probe_chunk`` is ignored — the kernel grid already
+      streams page-at-a-time, and the candidate buffer is k-reduced.
+    * **XLA gather oracle** (default): ``bp.parallel_get`` materializes
+      the (Q, nprobe·cap, d) probe buffer; ``probe_chunk > 0`` processes
+      the probes in chunks with a running candidate set so the buffer is
+      O(Q · chunk · cap · d).
     """
     cfg = state.cfg
-    nprobe = cfg.nprobe if nprobe is None else nprobe
-    q = queries.shape[0]
+    q, nprobe = pids.shape
     cap = cfg.posting_capacity
+    pallas = cfg.use_pallas_scan if use_pallas_scan is None else use_pallas_scan
+    schedule = scan_schedule if scan_schedule is not None else cfg.scan_schedule
 
-    nav_d, pids = navigate(state, queries, nprobe)  # (Q, nprobe)
-    probe_valid = nav_d < MASK_DISTANCE / 2
+    if pallas:
+        cand_d, cand_v, live = _pallas_scan_candidates(
+            state, queries, pids, probe_valid, k=k, schedule=schedule
+        )
+        m = _dedup_prefilter(cfg, k, cand_d.shape[1])
+        return jax.vmap(lambda d, v, mm: _dedup_topk_1d(d, v, mm, k, m))(
+            cand_d, cand_v, live
+        )
 
     if probe_chunk <= 0 or nprobe % probe_chunk != 0 or nprobe == probe_chunk:
         dists, vids, live = _scan_probe_chunk(state, queries, pids, probe_valid)
-        return jax.vmap(lambda d, v, m: _dedup_topk_1d(d, v, m, k))(
+        m = _dedup_prefilter(cfg, k, dists.shape[1])
+        return jax.vmap(lambda d, v, mm: _dedup_topk_1d(d, v, mm, k, m))(
             dists, vids, live
         )
 
@@ -247,8 +441,48 @@ def search(
     )
     (best_d, best_v), _ = jax.lax.scan(body, init, (pids_c, pvalid_c))
     live = best_d < MASK_DISTANCE / 2
-    return jax.vmap(lambda d, v, m: _dedup_topk_1d(d, v, m, k))(
+    m = _dedup_prefilter(cfg, k, keep)
+    return jax.vmap(lambda d, v, mm: _dedup_topk_1d(d, v, mm, k, m))(
         best_d, best_v, live
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "nprobe", "probe_chunk", "use_pallas_scan", "scan_schedule"
+    ),
+)
+def search(
+    state: IndexState,
+    queries: Array,
+    *,
+    k: int,
+    nprobe: int | None = None,
+    probe_chunk: int = 0,
+    use_pallas_scan: bool | None = None,
+    scan_schedule: str | None = None,
+) -> tuple[Array, Array]:
+    """ANN search: centroid navigation → posting scan → dedup top-k.
+
+    Returns ``(dists (Q, k), vids (Q, k))``; missing results are ``-1`` with
+    MASK_DISTANCE.  ``nprobe`` is the latency-budget knob (the paper's 10 ms
+    hard cut becomes a fixed candidate budget under jit).
+
+    The posting-scan data path (Pallas paged streaming vs XLA gather, and
+    the per-query vs batch-dedup page schedule) is selected by
+    ``use_pallas_scan`` / ``scan_schedule`` — ``None`` defers to the
+    config flags.  See ``scan_and_reduce`` for the probe_chunk semantics
+    of the oracle path.
+    """
+    cfg = state.cfg
+    nprobe = cfg.nprobe if nprobe is None else nprobe
+    nav_d, pids = navigate(state, queries, nprobe)  # (Q, nprobe)
+    probe_valid = nav_d < MASK_DISTANCE / 2
+    return scan_and_reduce(
+        state, queries, pids, probe_valid,
+        k=k, probe_chunk=probe_chunk,
+        use_pallas_scan=use_pallas_scan, scan_schedule=scan_schedule,
     )
 
 

@@ -48,6 +48,24 @@ class LireConfig:
     enable_reassign: bool = True
     # --- kernel integration (TPU target; interpret=True executes on CPU) ---
     use_pallas_nav: bool = False
+    # Paged Pallas posting scan (search hot path).  False = XLA gather
+    # oracle (`bp.parallel_get` + diff²), the default on CPU.  True streams
+    # SSD-block-sized pages through the `posting_scan` kernels and emits
+    # per-page k-min candidates — the (Q, nprobe·cap, d) gather buffer and
+    # the (Q, nprobe·MB·BS) distance matrix are never materialized.
+    use_pallas_scan: bool = False
+    # "per_query": paper-faithful ParallelGET schedule — every probed page
+    #   streamed once per (query, probe); HBM traffic = Q·nprobe·MB pages.
+    # "batched": batch-dedup schedule — the micro-batch's probed pages are
+    #   deduped and each unique page is streamed ONCE, scored against all
+    #   Q queries with one MXU GEMM; traffic divides by the average probe
+    #   multiplicity.
+    scan_schedule: str = "per_query"
+    # Static page budget for the batched schedule's fixed-shape dedup
+    # compaction.  0 = lossless auto (min(Q·nprobe·MB, num_blocks)); a
+    # smaller explicit budget bounds the kernel grid, dropping the
+    # highest-numbered pages on overflow (counted, see `dedup_pages`).
+    scan_page_budget: int = 0
     pallas_interpret: bool = True
 
     @property
@@ -61,6 +79,8 @@ class LireConfig:
         assert self.merge_limit < self.split_limit
         assert self.replica_count >= 1
         assert self.nprobe >= 1
+        assert self.scan_schedule in ("per_query", "batched"), self.scan_schedule
+        assert self.scan_page_budget >= 0
 
 
 @pytree_dataclass

@@ -105,7 +105,8 @@ def _flat_axis_index(axes):
 def make_search_step(
     mesh: Mesh, cfg: LireConfig, *, k: int, nprobe: int | None = None,
     shard_axes: tuple[str, ...] = ("model",), probe_chunk: int = 0,
-    gprobe: int = 0,
+    gprobe: int = 0, use_pallas_scan: bool | None = None,
+    scan_schedule: str | None = None,
 ):
     """Returns a jitted ``search(state_stacked, queries, shard_alive[,
     group_index_stacked]) -> (dists (Q, k), global_vids (Q, k))``.
@@ -114,6 +115,10 @@ def make_search_step(
     merged with one all_gather over 'model' (the tournament merge).
     ``gprobe > 0`` switches navigation to the two-level group router (the
     step then takes a stacked GroupIndex as 4th argument).
+    ``use_pallas_scan`` / ``scan_schedule`` select each shard's local
+    posting-scan data path (None = the config flags); the batched
+    schedule dedups pages *per shard* — exactly the per-micro-batch
+    traffic model of the single-host path.
     """
     da = tuple(a for a in mesh.axis_names if a not in shard_axes)
     nprobe_ = nprobe or cfg.nprobe
@@ -128,11 +133,13 @@ def make_search_step(
             gidx = _squeeze(rest[0])
             d, v = search_grouped(
                 state, gidx, queries, k=k, nprobe=nprobe_, gprobe=gprobe,
-                probe_chunk=probe_chunk,
+                probe_chunk=probe_chunk, use_pallas_scan=use_pallas_scan,
+                scan_schedule=scan_schedule,
             )
         else:
             d, v = lire.search(
-                state, queries, k=k, nprobe=nprobe_, probe_chunk=probe_chunk
+                state, queries, k=k, nprobe=nprobe_, probe_chunk=probe_chunk,
+                use_pallas_scan=use_pallas_scan, scan_schedule=scan_schedule,
             )
         # globalize vids: handle = shard * N_shard + slot
         gv = jnp.where(v >= 0, my * n_shard_vecs + v, -1)
@@ -408,6 +415,8 @@ class ShardedIndex:
         *,
         shard_axes: tuple[str, ...] = ("model",),
         probe_chunk: int = 0,
+        use_pallas_scan: bool | None = None,
+        scan_schedule: str | None = None,
     ):
         self.mesh = mesh
         self.cfg = cfg
@@ -415,6 +424,8 @@ class ShardedIndex:
         self.n_shards = n_shards
         self.shard_axes = shard_axes
         self.probe_chunk = probe_chunk
+        self.use_pallas_scan = use_pallas_scan
+        self.scan_schedule = scan_schedule
         self.shard_alive = jnp.ones((n_shards,), bool)
         self._search_steps: dict[tuple, Any] = {}
         self._maintain_steps: dict[int, Any] = {}
@@ -432,11 +443,14 @@ class ShardedIndex:
         seed: int = 0,
         shard_axes: tuple[str, ...] = ("model",),
         probe_chunk: int = 0,
+        use_pallas_scan: bool | None = None,
+        scan_schedule: str | None = None,
     ) -> tuple["ShardedIndex", np.ndarray]:
         """Offline sharded build; returns (index, handles of the inputs)."""
         stacked, handles = build_sharded_state(cfg, vectors, n_shards, seed=seed)
         idx = cls(mesh, cfg, stacked, n_shards, shard_axes=shard_axes,
-                  probe_chunk=probe_chunk)
+                  probe_chunk=probe_chunk, use_pallas_scan=use_pallas_scan,
+                  scan_schedule=scan_schedule)
         return idx, handles
 
     def set_alive(self, alive: np.ndarray) -> None:
@@ -452,6 +466,8 @@ class ShardedIndex:
             step = make_search_step(
                 self.mesh, self.cfg, k=k, nprobe=nprobe,
                 shard_axes=self.shard_axes, probe_chunk=self.probe_chunk,
+                use_pallas_scan=self.use_pallas_scan,
+                scan_schedule=self.scan_schedule,
             )
             self._search_steps[key] = step
         d, v = step(self.stacked, jnp.asarray(queries), self.shard_alive)

@@ -1,2 +1,13 @@
-from repro.kernels.posting_scan.ops import scan_posting_blocks, scan_unique_blocks  # noqa: F401
-from repro.kernels.posting_scan.ref import scan_posting_blocks_ref, scan_unique_blocks_ref  # noqa: F401
+from repro.kernels.posting_scan.ops import (  # noqa: F401
+    dedup_pages,
+    scan_posting_blocks,
+    scan_posting_blocks_topk,
+    scan_unique_blocks,
+    scan_unique_blocks_topk,
+)
+from repro.kernels.posting_scan.ref import (  # noqa: F401
+    scan_batched_topk_ref,
+    scan_per_query_topk_ref,
+    scan_posting_blocks_ref,
+    scan_unique_blocks_ref,
+)

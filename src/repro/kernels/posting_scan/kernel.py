@@ -16,6 +16,15 @@ through a block table (exactly the paged-attention KV indirection):
 Both use ``PrefetchScalarGridSpec`` so the block table is available to the
 BlockSpec index_map (the indirection happens in the DMA engine, not in the
 kernel body).
+
+Each variant also has a ``*_topk`` form that fuses the per-page reduce: the
+kernel takes a per-slot distance bias (0 live / +BIG dead — absent page,
+empty slot, stale version, deletion) and emits only the ``k`` smallest
+candidates of each (page, query) tile with an unrolled min/mask loop, the
+same VPU idiom as ``l2_topk``.  The caller's merge works over
+``(Q, NB·k)`` candidates instead of the full ``(Q, NB·BS)`` distance
+matrix, which is what lets the search hot path stream pages without ever
+materializing the distance tiles in HBM.
 """
 from __future__ import annotations
 
@@ -109,3 +118,145 @@ def scan_batched(
         out_shape=jax.ShapeDtypeStruct((nb, q_n, bs), jnp.float32),
         interpret=interpret,
     )(unique_blocks, queries, blocks)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-page top-k variants (streaming running-top-k reduce)
+# ---------------------------------------------------------------------------
+
+# Plain Python float: a jnp scalar would be a captured traced constant,
+# which pallas_call rejects (same trick as l2_topk).
+BIG = 3.0e38
+
+
+def _kmin_rows(d, *, k: int):
+    """Unrolled k-min per row of ``d (rows, cols)``: the l2_topk min/mask
+    loop.  Returns ``(dists (rows, k), argmins (rows, k))``."""
+    rows, cols = d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+    ms, as_ = [], []
+    for _ in range(k):
+        m = jnp.min(d, axis=1)
+        a = jnp.argmin(d, axis=1).astype(jnp.int32)
+        ms.append(m)
+        as_.append(a)
+        d = jnp.where(col == a[:, None], BIG, d)
+    return jnp.stack(ms, axis=1), jnp.stack(as_, axis=1)
+
+
+def _scan_per_query_topk_kernel(
+    table_ref, q_ref, blk_ref, bias_ref, out_d_ref, out_i_ref, *, k: int
+):
+    # q_ref: (1, d); blk_ref: (1, BS, d); bias_ref: (1, 1, BS) f32 (0 live,
+    # +BIG dead); out: (1, 1, k) dists + slot indices within the page.
+    q = q_ref[0, :].astype(jnp.float32)
+    b = blk_ref[0].astype(jnp.float32)            # (BS, d)
+    bsq = jnp.sum(b * b, axis=1)                  # (BS,)
+    cross = jnp.dot(b, q, preferred_element_type=jnp.float32)  # (BS,)
+    qsq = jnp.sum(q * q)
+    d = jnp.maximum(qsq - 2.0 * cross + bsq, 0.0) + bias_ref[0, 0, :]
+    kd, ki = _kmin_rows(d[None, :], k=k)          # (1, k)
+    out_d_ref[0] = kd
+    out_i_ref[0] = ki
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_per_query_topk(
+    block_table: jax.Array,  # (Q, NB) i32 — block pool indices (clamped >=0)
+    queries: jax.Array,      # (Q, d)
+    blocks: jax.Array,       # (B, BS, d)
+    slot_bias: jax.Array,    # (Q, NB, BS) f32 — 0 live, +BIG dead
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query paged scan with fused per-page k-min.
+
+    Returns ``(dists (Q, NB, k), slots (Q, NB, k))`` where ``slots`` index
+    into the page (0..BS); dead candidates carry dist >= BIG."""
+    q_n, nb = block_table.shape
+    _, bs, dim = blocks.shape
+    assert k <= bs, (k, bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n, nb),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda q, j, table: (q, 0)),
+            pl.BlockSpec((1, bs, dim), lambda q, j, table: (table[q, j], 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda q, j, table: (q, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda q, j, table: (q, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda q, j, table: (q, j, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scan_per_query_topk_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_table, queries, blocks, slot_bias)
+
+
+def _scan_batched_topk_kernel(
+    ids_ref, q_ref, blk_ref, bias_ref, out_d_ref, out_i_ref, *, k: int
+):
+    # q_ref: (Q, d) resident; blk_ref: (1, BS, d); bias_ref: (1, BS);
+    # out: (1, Q, k) dists + slot indices.
+    q = q_ref[...].astype(jnp.float32)            # (Q, d)
+    b = blk_ref[0].astype(jnp.float32)            # (BS, d)
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)   # (Q, 1)
+    bsq = jnp.sum(b * b, axis=1)                  # (BS,)
+    cross = jax.lax.dot_general(
+        q, b, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (Q, BS)
+    d = jnp.maximum(qsq - 2.0 * cross + bsq[None, :], 0.0)
+    d = d + bias_ref[0, :][None, :]
+    kd, ki = _kmin_rows(d, k=k)                   # (Q, k)
+    out_d_ref[0] = kd
+    out_i_ref[0] = ki
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_batched_topk(
+    unique_blocks: jax.Array,  # (NB,) i32 unique block pool indices (>=0)
+    queries: jax.Array,        # (Q, d)
+    blocks: jax.Array,         # (B, BS, d)
+    slot_bias: jax.Array,      # (NB, BS) f32 — 0 live, +BIG dead
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batch-dedup paged scan with fused per-(page, query) k-min.
+
+    Returns ``(dists (NB, Q, k), slots (NB, Q, k))``."""
+    nb = unique_blocks.shape[0]
+    q_n, dim = queries.shape
+    _, bs, _ = blocks.shape
+    assert k <= bs, (k, bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((q_n, dim), lambda i, ids: (0, 0)),
+            pl.BlockSpec((1, bs, dim), lambda i, ids: (ids[i], 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, ids: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_n, k), lambda i, ids: (i, 0, 0)),
+            pl.BlockSpec((1, q_n, k), lambda i, ids: (i, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scan_batched_topk_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, q_n, k), jnp.float32),
+            jax.ShapeDtypeStruct((nb, q_n, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(unique_blocks, queries, blocks, slot_bias)

@@ -55,3 +55,93 @@ def scan_unique_blocks(
         jnp.maximum(unique_blocks, 0), queries, blocks, interpret=interpret
     )
     return jnp.where(ok[:, None, None], d, BIG)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-page top-k wrappers + batch page dedup (the search hot path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_posting_blocks_topk(
+    queries: jax.Array,      # (Q, d)
+    page_table: jax.Array,   # (Q, NB) i32 block ids, -1 = absent/not probed
+    slot_live: jax.Array,    # (Q, NB, BS) bool — live slots of each page
+    blocks: jax.Array,       # (B, BS, d)
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query paged scan with fused per-page k-min.
+
+    Returns ``(dists (Q, NB, k), slots (Q, NB, k))``; dead candidates
+    (absent page or dead slot) carry dist >= BIG."""
+    bias = jnp.where(
+        slot_live & (page_table >= 0)[:, :, None], jnp.float32(0), BIG
+    )
+    return K.scan_per_query_topk(
+        jnp.maximum(page_table, 0), queries, blocks, bias,
+        k=k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_unique_blocks_topk(
+    queries: jax.Array,       # (Q, d)
+    unique_blocks: jax.Array,  # (NB,) i32, -1 = padding
+    slot_live: jax.Array,     # (NB, BS) bool — live slots of each page
+    blocks: jax.Array,        # (B, BS, d)
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batch-dedup paged scan with fused per-(page, query) k-min.
+
+    Returns ``(dists (NB, Q, k), slots (NB, Q, k))``."""
+    bias = jnp.where(
+        slot_live & (unique_blocks >= 0)[:, None], jnp.float32(0), BIG
+    )
+    return K.scan_batched_topk(
+        jnp.maximum(unique_blocks, 0), queries, blocks, bias,
+        k=k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "num_blocks"))
+def dedup_pages(
+    pages: jax.Array,         # (N,) i32 probed block ids, -1 = invalid
+    *,
+    budget: int,
+    num_blocks: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fixed-shape batch page dedup (the batched schedule's compaction).
+
+    Returns ``(unique (budget,), member_pos (N,), n_unique (), overflow ())``:
+
+    * ``unique`` — sorted distinct valid page ids, -1-padded; when more
+      than ``budget`` distinct pages were probed, the *highest-numbered*
+      pages are dropped (jnp.unique keeps the smallest ``budget``).
+    * ``member_pos`` — for every input probe, the row of ``unique``
+      holding its page (clipped; -1 where the probe is invalid or its
+      page was dropped by the budget).
+    * ``n_unique`` / ``overflow`` — distinct valid pages probed, and how
+      many of them the budget dropped (the recall-accounting signal).
+    """
+    sentinel = jnp.int32(num_blocks)  # > every real page id
+    flat = jnp.where(pages >= 0, pages, sentinel)
+    # ONE sort serves both the unique compaction and the distinct count
+    # (jnp.unique would sort a second time just to recount)
+    srt = jnp.sort(flat)
+    first = jnp.concatenate([jnp.ones((1,), bool), srt[1:] != srt[:-1]])
+    first = first & (srt < sentinel)
+    n_unique = jnp.sum(first)
+    (pos,) = jnp.nonzero(first, size=budget, fill_value=0)
+    kept = jnp.minimum(n_unique, budget)
+    uniq = jnp.where(jnp.arange(budget) < kept, srt[pos], sentinel)
+    uniq_valid = uniq < sentinel
+    overflow = jnp.maximum(n_unique - kept, 0)
+    # membership: searchsorted into the sorted unique rows
+    pos = jnp.searchsorted(uniq, flat).astype(jnp.int32)
+    pos = jnp.minimum(pos, budget - 1)
+    hit = (uniq[pos] == flat) & (pages >= 0)
+    member_pos = jnp.where(hit, pos, -1)
+    return jnp.where(uniq_valid, uniq, -1), member_pos, n_unique, overflow

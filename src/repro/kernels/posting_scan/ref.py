@@ -23,3 +23,29 @@ def scan_unique_blocks_ref(
     q = queries.astype(jnp.float32)
     diff = gathered[:, None, :, :] - q[None, :, None, :]
     return jnp.sum(diff * diff, axis=-1)
+
+
+def _kmin_ref(d: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Row-wise k smallest of ``d (..., cols)`` with index-order tie-break
+    (matches the kernels' min/mask loop)."""
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def scan_per_query_topk_ref(
+    block_table: jax.Array, queries: jax.Array, blocks: jax.Array,
+    slot_bias: jax.Array, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """(Q, NB, k) per-page k-min candidates — per-query schedule."""
+    d = scan_posting_blocks_ref(block_table, queries, blocks) + slot_bias
+    return _kmin_ref(d, k)
+
+
+def scan_batched_topk_ref(
+    unique_blocks: jax.Array, queries: jax.Array, blocks: jax.Array,
+    slot_bias: jax.Array, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """(NB, Q, k) per-(page, query) k-min candidates — batched schedule."""
+    d = scan_unique_blocks_ref(unique_blocks, queries, blocks)
+    d = d + slot_bias[:, None, :]
+    return _kmin_ref(d, k)

@@ -56,6 +56,12 @@ def main() -> None:
                     help="BacklogPolicy firing threshold")
     ap.add_argument("--shards", type=int, default=1,
                     help=">1: serve an N-shard mesh on fake CPU devices")
+    ap.add_argument("--probe-chunk", type=int, default=0,
+                    help="oracle scan path: stream probes in chunks")
+    ap.add_argument("--scan", choices=["oracle", "per_query", "batched"],
+                    default="oracle",
+                    help="posting-scan data path (per_query/batched = "
+                         "Pallas paged kernels, interpret mode on CPU)")
     args = ap.parse_args()
 
     if args.shards > 1:
@@ -77,7 +83,11 @@ def main() -> None:
         num_vectors_cap=4 * args.n, split_limit=48, merge_limit=6,
         reassign_range=8, replica_count=2, nprobe=args.nprobe,
     )
-    ecfg = EngineConfig(search_k=10, nprobe=args.nprobe)
+    ecfg = EngineConfig(
+        search_k=10, nprobe=args.nprobe, probe_chunk=args.probe_chunk,
+        use_pallas_scan=None if args.scan == "oracle" else True,
+        scan_schedule=None if args.scan == "oracle" else args.scan,
+    )
     vecs, _ = wl.live_vectors()
 
     if args.shards > 1:
@@ -86,7 +96,11 @@ def main() -> None:
         from repro.distributed.sharded_index import ShardedIndex
 
         mesh = jax.make_mesh((args.shards,), ("model",))
-        backend, handles = ShardedIndex.build(mesh, cfg, vecs, args.shards)
+        backend, handles = ShardedIndex.build(
+            mesh, cfg, vecs, args.shards, probe_chunk=args.probe_chunk,
+            use_pallas_scan=ecfg.use_pallas_scan,
+            scan_schedule=ecfg.scan_schedule,
+        )
         engine = ServeEngine(backend, ecfg, policy=_make_policy(args))
         # workload vid -> global (shard, slot) handle, kept current so
         # epoch deletes translate into sharded deletes

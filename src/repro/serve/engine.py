@@ -60,13 +60,32 @@ class IndexBackend(Protocol):
 
 
 class LocalBackend:
-    """Single-host SPFreshIndex behind the batched entry points."""
+    """Single-host SPFreshIndex behind the batched entry points.
 
-    def __init__(self, index: SPFreshIndex):
+    ``probe_chunk`` / ``use_pallas_scan`` / ``scan_schedule`` select the
+    posting-scan data path for every search dispatch (engine knobs; the
+    scan flags default to the index config when None).
+    """
+
+    def __init__(
+        self,
+        index: SPFreshIndex,
+        *,
+        probe_chunk: int = 0,
+        use_pallas_scan: bool | None = None,
+        scan_schedule: str | None = None,
+    ):
         self.index = index
+        self.probe_chunk = probe_chunk
+        self.use_pallas_scan = use_pallas_scan
+        self.scan_schedule = scan_schedule
 
     def search(self, queries, k, nprobe):
-        return self.index.search_padded(queries, k, nprobe=nprobe)
+        return self.index.search_padded(
+            queries, k, nprobe=nprobe, probe_chunk=self.probe_chunk,
+            use_pallas_scan=self.use_pallas_scan,
+            scan_schedule=self.scan_schedule,
+        )
 
     def insert(self, vecs, vids, valid):
         landed = self.index.insert_padded(vecs, vids, valid)
@@ -103,6 +122,10 @@ class LocalBackend:
 class EngineConfig:
     search_k: int = 10
     nprobe: int | None = None
+    # --- search data path (threaded into every search dispatch) ---
+    probe_chunk: int = 0                  # oracle-path streaming chunk (0 = off)
+    use_pallas_scan: bool | None = None   # None = defer to LireConfig
+    scan_schedule: str | None = None      # "per_query" | "batched" | None
     # --- micro-batching ---
     max_batch: int = 256         # largest bucket (rows per dispatch)
     min_bucket: int = 8          # smallest bucket
@@ -174,10 +197,15 @@ class ServeEngine:
         cfg: EngineConfig | None = None,
         policy: MaintenancePolicy | None = None,
     ):
-        if isinstance(backend, SPFreshIndex):
-            backend = LocalBackend(backend)
-        self.backend = backend
         self.cfg = cfg or EngineConfig()
+        if isinstance(backend, SPFreshIndex):
+            backend = LocalBackend(
+                backend,
+                probe_chunk=self.cfg.probe_chunk,
+                use_pallas_scan=self.cfg.use_pallas_scan,
+                scan_schedule=self.cfg.scan_schedule,
+            )
+        self.backend = backend
         self.policy = policy or self.cfg.make_policy()
         self.queue = RequestQueue(self.cfg.buckets())
         self.metrics = ServeMetrics()

@@ -3,9 +3,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.posting_scan.kernel import scan_batched, scan_per_query
-from repro.kernels.posting_scan.ops import BIG, scan_posting_blocks, scan_unique_blocks
+from repro.kernels.posting_scan.kernel import (
+    scan_batched,
+    scan_batched_topk,
+    scan_per_query,
+    scan_per_query_topk,
+)
+from repro.kernels.posting_scan.ops import (
+    BIG,
+    dedup_pages,
+    scan_posting_blocks,
+    scan_posting_blocks_topk,
+    scan_unique_blocks,
+    scan_unique_blocks_topk,
+)
 from repro.kernels.posting_scan.ref import (
+    scan_batched_topk_ref,
+    scan_per_query_topk_ref,
     scan_posting_blocks_ref,
     scan_unique_blocks_ref,
 )
@@ -73,6 +87,125 @@ def test_scan_unique_blocks_padding(rng):
     assert (d[2:] >= BIG / 2).all()
     want = np.asarray(scan_unique_blocks_ref(ids[:2], queries, blocks))
     np.testing.assert_allclose(d[:2], want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("q_n,n_blocks,bs,d,nb,k,dtype", [
+    (4, 32, 8, 16, 6, 4, jnp.float32),
+    (8, 64, 16, 128, 4, 10, jnp.float32),
+    (2, 16, 8, 32, 3, 8, jnp.bfloat16),
+    (1, 8, 4, 8, 1, 2, jnp.float32),
+])
+def test_scan_per_query_topk_matches_ref(rng, q_n, n_blocks, bs, d, nb, k, dtype):
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), dtype)
+    queries = jnp.asarray(rng.normal(size=(q_n, d)), dtype)
+    table = jnp.asarray(rng.integers(0, n_blocks, size=(q_n, nb)), jnp.int32)
+    bias = jnp.where(
+        jnp.asarray(rng.random(size=(q_n, nb, bs)) < 0.3), BIG, jnp.float32(0)
+    )
+    got_d, got_i = scan_per_query_topk(
+        table, queries, blocks, bias, k=k, interpret=True
+    )
+    want_d, want_i = scan_per_query_topk_ref(table, queries, blocks, bias, k)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    gd, wd = np.asarray(got_d), np.asarray(want_d)
+    live = wd < BIG / 2
+    np.testing.assert_allclose(gd[live], wd[live], rtol=tol, atol=tol)
+    assert (gd[~live] >= BIG / 2).all()
+    # slot indices agree wherever the selection is unambiguous (live rows)
+    assert (np.asarray(got_i)[live] == np.asarray(want_i)[live]).all()
+
+
+@pytest.mark.parametrize("q_n,n_blocks,bs,d,nb,k,dtype", [
+    (4, 32, 8, 16, 6, 4, jnp.float32),
+    (8, 64, 16, 128, 12, 10, jnp.float32),
+    (2, 16, 8, 32, 3, 8, jnp.bfloat16),
+])
+def test_scan_batched_topk_matches_ref(rng, q_n, n_blocks, bs, d, nb, k, dtype):
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), dtype)
+    queries = jnp.asarray(rng.normal(size=(q_n, d)), dtype)
+    ids = jnp.asarray(rng.choice(n_blocks, size=nb, replace=False), jnp.int32)
+    bias = jnp.where(
+        jnp.asarray(rng.random(size=(nb, bs)) < 0.3), BIG, jnp.float32(0)
+    )
+    got_d, got_i = scan_batched_topk(
+        ids, queries, blocks, bias, k=k, interpret=True
+    )
+    want_d, want_i = scan_batched_topk_ref(ids, queries, blocks, bias, k)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    gd, wd = np.asarray(got_d), np.asarray(want_d)
+    live = wd < BIG / 2
+    np.testing.assert_allclose(gd[live], wd[live], rtol=tol, atol=tol)
+    assert (gd[~live] >= BIG / 2).all()
+    assert (np.asarray(got_i)[live] == np.asarray(want_i)[live]).all()
+
+
+def test_scan_topk_wrappers_mask_dead_pages(rng):
+    """Absent pages / dead slots never produce live candidates."""
+    n_blocks, bs, d, k = 16, 8, 8, 3
+    blocks = jnp.asarray(rng.normal(size=(n_blocks, bs, d)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(2, d)), jnp.float32)
+    table = jnp.asarray([[0, -1, 3], [-1, -1, -1]], jnp.int32)
+    live = jnp.ones((2, 3, bs), bool)
+    live = live.at[0, 0, :4].set(False)  # half of page 0 dead
+    dists, slots = scan_posting_blocks_topk(
+        queries, table, live, blocks, k=k, interpret=True
+    )
+    dists, slots = np.asarray(dists), np.asarray(slots)
+    assert (dists[1] >= BIG / 2).all()          # query 1 probed nothing
+    assert (dists[0, 1] >= BIG / 2).all()       # absent page masked
+    assert (slots[0, 0] >= 4).all()             # dead slots never selected
+    assert (dists[0, 0] < BIG / 2).all()
+    # batched wrapper: -1 padded pages masked
+    uniq = jnp.asarray([0, 3, -1], jnp.int32)
+    ulive = jnp.ones((3, bs), bool)
+    bd, _ = scan_unique_blocks_topk(
+        queries, uniq, ulive, blocks, k=k, interpret=True
+    )
+    bd = np.asarray(bd)
+    assert (bd[2] >= BIG / 2).all()
+    assert (bd[:2] < BIG / 2).all()
+
+
+def test_dedup_pages_basic(rng):
+    pages = jnp.asarray([5, 3, 5, -1, 9, 3, 3, -1], jnp.int32)
+    uniq, pos, n_uniq, overflow = dedup_pages(pages, budget=6, num_blocks=16)
+    uniq, pos = np.asarray(uniq), np.asarray(pos)
+    assert uniq[:3].tolist() == [3, 5, 9]
+    assert (uniq[3:] == -1).all()
+    assert int(n_uniq) == 3 and int(overflow) == 0
+    # membership rows point each probe at its page's row
+    for p, r in zip([5, 3, 5, -1, 9, 3, 3, -1], pos.tolist()):
+        if p < 0:
+            assert r == -1
+        else:
+            assert uniq[r] == p
+
+
+def test_dedup_pages_overflow_property(rng):
+    """Budget compaction: kept pages are always a subset of the probed
+    pages, counts are exact, and overflow == distinct - kept."""
+    for trial in range(20):
+        n_blocks = int(rng.integers(8, 64))
+        n = int(rng.integers(4, 128))
+        budget = int(rng.integers(1, 24))
+        pages_np = rng.integers(-1, n_blocks, size=n).astype(np.int32)
+        uniq, pos, n_uniq, overflow = dedup_pages(
+            jnp.asarray(pages_np), budget=budget, num_blocks=n_blocks
+        )
+        uniq, pos = np.asarray(uniq), np.asarray(pos)
+        real = np.unique(pages_np[pages_np >= 0])
+        kept = uniq[uniq >= 0]
+        assert int(n_uniq) == len(real)
+        assert int(overflow) == max(len(real) - budget, 0)
+        assert len(kept) == min(len(real), budget)
+        # kept = the smallest-numbered distinct pages, sorted, no dups
+        np.testing.assert_array_equal(kept, real[: len(kept)])
+        # every probe of a kept page is mapped to its row; dropped/invalid -> -1
+        for p, r in zip(pages_np.tolist(), pos.tolist()):
+            if p >= 0 and p in kept:
+                assert uniq[r] == p
+            else:
+                assert r == -1
 
 
 def test_scan_consistency_between_variants(rng):

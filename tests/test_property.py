@@ -123,7 +123,7 @@ def test_dedup_topk_no_duplicates_and_sorted(dists, vids):
     d = jnp.asarray(dists, jnp.float32)
     v = jnp.asarray(vids, jnp.int32)
     live = jnp.ones(8, bool)
-    top_d, top_v = lire._dedup_topk_1d(d, v, live, 4)
+    top_d, top_v = lire._dedup_topk_1d(d, v, live, 4, 8)
     top_d, top_v = np.asarray(top_d), np.asarray(top_v)
     real = top_v[top_v >= 0]
     assert len(real) == len(set(real.tolist())), "duplicate vid survived"

@@ -1,0 +1,252 @@
+"""End-to-end parity: the Pallas paged posting scan (interpret mode) vs the
+XLA gather oracle, both schedules, under inserts/deletes/splits.
+
+The two data paths compute ``‖q−x‖²`` with different contraction layouts
+(diff² gather vs per-page GEMM expansion), so distances can differ by the
+f32 cancellation error of the expansion (~eps·‖q‖²).  On workloads whose
+distance gaps resolve above that noise the top-k vids are identical; the
+adversarial near-duplicate workload asserts the tie-tolerant contract
+instead (any positional difference must be a sub-tolerance distance tie).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lire
+from repro.core.index import SPFreshIndex
+from tests.conftest import make_clustered
+from tests.test_lire import small_cfg
+
+SCHEDULES = ("per_query", "batched")
+
+_CACHE: dict = {}
+
+
+def _churned_index(rng, *, near_dup=False):
+    """Build + insert + delete + maintain: splits, stale replicas, GC'd
+    postings, freed pages — every masking path the scan must honor.
+    Built once per workload shape (fixed seed) and cached — the index is
+    read-only in every test; tests that mutate copy the state first."""
+    if near_dup in _CACHE:
+        return _CACHE[near_dup]
+    rng = np.random.default_rng(17 if near_dup else 7)
+    base = make_clustered(rng, 900, 16, n_clusters=8)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    if near_dup:
+        extra = (base[0][None, :] + 0.02 * rng.normal(size=(300, 16))
+                 ).astype(np.float32)
+    else:
+        extra = make_clustered(rng, 250, 16, n_clusters=5)
+    idx.insert(extra, np.arange(3000, 3000 + len(extra), dtype=np.int32))
+    idx.delete(rng.choice(900, size=120, replace=False).astype(np.int32))
+    idx.maintain()
+    assert idx.stats()["n_splits"] > 0
+    queries = np.concatenate([base[200:216], extra[:16]]) \
+        + 0.01 * rng.normal(size=(32, 16)).astype(np.float32)
+    _CACHE[near_dup] = (idx, jnp.asarray(queries))
+    return _CACHE[near_dup]
+
+
+def _assert_tie_tolerant(d0, v0, d1, v1, tol=1e-4):
+    """Positions may differ only where the two paths report a distance tie
+    within ``tol`` (f32 expansion noise); everything else is bit-equal."""
+    np.testing.assert_allclose(d0, d1, atol=tol)
+    mismatch = v0 != v1
+    assert (np.abs(d0 - d1)[mismatch] < tol).all(), (
+        v0[mismatch], v1[mismatch], d0[mismatch], d1[mismatch]
+    )
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_search_parity_under_churn(rng, schedule):
+    idx, queries = _churned_index(rng)
+    d0, v0 = lire.search(idx.state, queries, k=10, nprobe=8)
+    d1, v1 = lire.search(
+        idx.state, queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule=schedule,
+    )
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-4)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_search_parity_near_duplicates(rng, schedule):
+    """300 near-identical inserts: distance gaps at f32 resolution — the
+    tie-tolerant contract is the strongest claim either path can make."""
+    idx, queries = _churned_index(rng, near_dup=True)
+    d0, v0 = lire.search(idx.state, queries, k=10, nprobe=8)
+    d1, v1 = lire.search(
+        idx.state, queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule=schedule,
+    )
+    _assert_tie_tolerant(
+        np.asarray(d0), np.asarray(v0), np.asarray(d1), np.asarray(v1)
+    )
+
+
+def test_schedules_agree_with_each_other(rng):
+    """Both Pallas schedules share kernel math → bit-identical results."""
+    idx, queries = _churned_index(rng, near_dup=True)
+    d1, v1 = lire.search(
+        idx.state, queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule="per_query",
+    )
+    d2, v2 = lire.search(
+        idx.state, queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule="batched",
+    )
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_search_parity_respects_deletes(rng, schedule):
+    """Deleted vids never surface through the paged scan."""
+    cached, queries = _churned_index(rng)
+    idx = SPFreshIndex(cached.state)  # jax state is immutable; cache intact
+    victims = np.arange(200, 216, dtype=np.int32)
+    idx.delete(victims)
+    _, v1 = lire.search(
+        idx.state, queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule=schedule,
+    )
+    assert not (set(victims.tolist()) & set(np.asarray(v1).reshape(-1).tolist()))
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_search_parity_config_flag(rng, schedule):
+    """The LireConfig flags (not just the call-site override) select the
+    Pallas path end-to-end through SPFreshIndex.search."""
+    idx, queries = _churned_index(rng)
+    d0, v0 = idx.search(np.asarray(queries), 10, nprobe=8)
+    flagged = SPFreshIndex(idx.state.replace(cfg=dataclasses.replace(
+        idx.state.cfg, use_pallas_scan=True, scan_schedule=schedule,
+    )))
+    d1, v1 = flagged.search(np.asarray(queries), 10, nprobe=8)
+    np.testing.assert_array_equal(v0, v1)
+    np.testing.assert_allclose(d0, d1, atol=1e-4)
+
+
+def test_batched_page_budget_overflow_degrades_gracefully(rng):
+    """A starved page budget drops pages (recall loss) but never produces
+    duplicates, dead vids, or unsorted results."""
+    idx, queries = _churned_index(rng)
+    cfg = dataclasses.replace(idx.state.cfg, scan_page_budget=16)
+    state = idx.state.replace(cfg=cfg)
+    d1, v1 = lire.search(
+        state, queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule="batched",
+    )
+    d1, v1 = np.asarray(d1), np.asarray(v1)
+    for row_d, row_v in zip(d1, v1):
+        valid = row_v >= 0
+        ids = row_v[valid].tolist()
+        assert len(ids) == len(set(ids))
+        assert (np.diff(row_d[valid]) >= -1e-6).all()
+    # a generous budget matches the oracle again
+    cfg2 = dataclasses.replace(idx.state.cfg, scan_page_budget=4096)
+    d2, v2 = lire.search(
+        idx.state.replace(cfg=cfg2), queries, k=10, nprobe=8,
+        use_pallas_scan=True, scan_schedule="batched",
+    )
+    d0, v0 = lire.search(idx.state, queries, k=10, nprobe=8)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v2))
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_grouped_search_pallas_parity(rng, schedule):
+    from repro.core.grouping import build_group_index, search_grouped
+
+    idx, queries = _churned_index(rng)
+    gidx = build_group_index(idx.state, n_groups=8, capacity=64)
+    d0, v0 = search_grouped(idx.state, gidx, queries, k=10, nprobe=8, gprobe=8)
+    d1, v1 = search_grouped(
+        idx.state, gidx, queries, k=10, nprobe=8, gprobe=8,
+        use_pallas_scan=True, scan_schedule=schedule,
+    )
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-4)
+
+
+def test_grouped_search_probe_chunk_no_longer_dropped(rng):
+    """search_grouped used to ignore probe_chunk; the shared reduce
+    honors it (same results, chunked gather)."""
+    from repro.core.grouping import build_group_index, search_grouped
+
+    idx, queries = _churned_index(rng)
+    gidx = build_group_index(idx.state, n_groups=8, capacity=64)
+    d0, v0 = search_grouped(idx.state, gidx, queries, k=10, nprobe=8, gprobe=8)
+    d1, v1 = search_grouped(
+        idx.state, gidx, queries, k=10, nprobe=8, gprobe=8, probe_chunk=4,
+    )
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-5)
+
+
+def test_dedup_topk_matches_reference(rng):
+    """The rewritten reduce (top_k prefilter + segment-min) must agree with
+    the lexsort reference whenever prefilter covers the duplicates."""
+    for trial in range(30):
+        n = int(rng.integers(20, 400))
+        k = int(rng.integers(1, 12))
+        n_vids = max(2, n // int(rng.integers(1, 6)))
+        vids = jnp.asarray(rng.integers(0, n_vids, size=n), jnp.int32)
+        dists = jnp.asarray(rng.random(size=n), jnp.float32)
+        live = jnp.asarray(rng.random(size=n) < 0.8)
+        # pre-mask dead entries: the reference otherwise drops a vid whose
+        # min-dist occurrence is dead (see _dedup_topk_1d_ref caveat)
+        masked = jnp.where(live, dists, lire.MASK_DISTANCE)
+        want_d, want_v = lire._dedup_topk_1d_ref(masked, vids, live, k)
+        got_d, got_v = lire._dedup_topk_1d(dists, vids, live, k, n)
+        np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))
+        np.testing.assert_allclose(np.asarray(want_d), np.asarray(got_d))
+
+
+def test_sharded_index_scan_flags(rng):
+    """ShardedIndex threads the scan flags into its shard_map search step
+    (1-shard mesh; tie-tolerant — shard_map changes contraction layout)."""
+    import jax
+
+    from repro.core.types import LireConfig
+    from repro.distributed.sharded_index import ShardedIndex
+
+    cfg = LireConfig(
+        dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=2048,
+        num_postings_cap=256, num_vectors_cap=8192, split_limit=48,
+        merge_limit=6, reassign_range=8, replica_count=2, nprobe=8,
+    )
+    base = make_clustered(rng, 800, 16, n_clusters=6)
+    mesh = jax.make_mesh((1,), ("model",))
+    idx0, _ = ShardedIndex.build(mesh, cfg, base, 1)
+    idxp = ShardedIndex(
+        mesh, cfg, idx0.stacked, 1,
+        use_pallas_scan=True, scan_schedule="batched",
+    )
+    q = base[:16]
+    d0, v0 = idx0.search(q, 10, 8)
+    d1, v1 = idxp.search(q, 10, 8)
+    _assert_tie_tolerant(d0, v0, d1, v1)
+
+
+def test_engine_scan_knobs(rng):
+    """EngineConfig scan knobs reach the search dispatch (results match a
+    direct oracle search)."""
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    base = make_clustered(rng, 600, 16, n_clusters=6)
+    idx = SPFreshIndex.build(small_cfg(), base)
+    queries = base[:16]
+    d0, v0 = idx.search(queries, 10)
+    eng = ServeEngine(idx, EngineConfig(
+        search_k=10, use_pallas_scan=True, scan_schedule="batched",
+        probe_chunk=0,
+    ))
+    d1, v1 = eng.search(queries)
+    np.testing.assert_array_equal(v0, v1)
+    # probe_chunk knob on the oracle path
+    eng2 = ServeEngine(SPFreshIndex(idx.state),
+                       EngineConfig(search_k=10, probe_chunk=4))
+    d2, v2 = eng2.search(queries)
+    np.testing.assert_array_equal(v0, v2)
