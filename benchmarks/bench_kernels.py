@@ -152,6 +152,26 @@ def run(quick: bool = True) -> list[str]:
         f"kernel/dedup_topk_prefilter,{t_new * 1e6:.1f},"
         f"candidates={cand};speedup={t_ref / max(t_new, 1e-12):.2f}x"
     )
+
+    # reassign same-vid dedup (maintenance round, _execute_reassigns):
+    # O(n²) pairwise mask reference vs the sort-based first-occurrence
+    # rewrite — n is the fused round's reassign budget (2·K·budget rows)
+    for rows in (256, 2048):
+        vids_r = jnp.asarray(
+            rng.integers(0, max(rows // 4, 1), rows), jnp.int32
+        )
+        mask_r = jnp.asarray(rng.random(rows) < 0.7)
+        refm = jax.jit(lire._dedup_vid_mask_ref)
+        newm = jax.jit(lire._dedup_vid_mask)
+        t_rm = _timeit(refm, vids_r, mask_r)
+        t_nm = _timeit(newm, vids_r, mask_r)
+        out.append(
+            f"kernel/reassign_dedup_pairwise_ref,{t_rm * 1e6:.1f},rows={rows}"
+        )
+        out.append(
+            f"kernel/reassign_dedup_sort,{t_nm * 1e6:.1f},"
+            f"rows={rows};speedup={t_rm / max(t_nm, 1e-12):.2f}x"
+        )
     return out
 
 

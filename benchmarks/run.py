@@ -26,6 +26,7 @@ BENCHES = [
     ("reassign_range", "benchmarks.bench_reassign_range"),  # Fig. 11
     ("pipeline", "benchmarks.bench_pipeline_balance"),   # Fig. 12
     ("rebuild_cost", "benchmarks.bench_rebuild_cost"),   # Table 1
+    ("maintenance", "benchmarks.bench_maintenance"),     # batched rounds
     ("kernels", "benchmarks.bench_kernels"),             # hot-path micro
     ("search_path", "benchmarks.bench_search_path"),     # scan data paths
     ("roofline", "benchmarks.roofline_report"),          # §Roofline summary
@@ -40,10 +41,34 @@ def main() -> None:
                     help="import smoke: load every bench module, run nothing")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the search data-path report to PATH and exit")
+                    help="write a machine-readable report to PATH and exit")
+    ap.add_argument("--report", choices=["auto", "search", "maintenance"],
+                    default="auto",
+                    help="which --json report to write; 'auto' picks "
+                         "maintenance for paths containing 'update'/'maint', "
+                         "else search")
     args = ap.parse_args()
 
     if args.json:
+        import os
+
+        base = os.path.basename(args.json).lower()
+        which = args.report
+        if which == "auto":
+            which = ("maintenance" if "update" in base or "maint" in base
+                     else "search")
+        if which == "maintenance":
+            from benchmarks.bench_maintenance import run_json
+
+            report = run_json(quick=not args.full)
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            sp = report["round_speedup_vs_step"]
+            stall = report["insert_stall"]["stall_reduction"]
+            print(f"# wrote {args.json}: round_speedup_vs_step="
+                  + ",".join(f"j{j}:{v:.2f}x" for j, v in sp.items())
+                  + f" insert_stall_reduction={stall:.2f}x")
+            return
         from benchmarks.bench_search_path import run_json
 
         report = run_json(quick=not args.full)

@@ -6,7 +6,8 @@ Composition (paper Fig. 5):
   * foreground Updater — `insert`/`delete` (jitted `lire.insert_batch` /
                          `lire.delete_batch`), WAL-logged;
   * background Local Rebuilder — `maintain()` drains split/merge/reassign
-                         jobs (jitted `lire.maintenance_step`);
+                         jobs in batched rounds (jitted
+                         `lire.maintenance_round`);
   * Searcher           — `search()`;
   * crash recovery     — `snapshot()` / `restore()` = snapshot + WAL replay.
 
@@ -209,12 +210,13 @@ def delete_step():
 
 @functools.lru_cache(maxsize=None)
 def fused_maintenance_step(budget: int):
-    """jitted, state-donating fused rebuilder slot: ``budget`` maintenance
-    steps in ONE executable (a lax.scan), returning ``(state, n_did_work)``.
+    """jitted, state-donating SEQUENTIAL rebuilder slot: ``budget``
+    one-job-at-a-time maintenance steps in ONE executable (a lax.scan),
+    returning ``(state, n_did_work)``.
 
-    Constant work regardless of how many steps find a job — the TPU idiom
-    for the paper's background job queue; the host pays one dispatch per
-    slot instead of one per step."""
+    Kept as the baseline the batched round is benchmarked against
+    (`benchmarks/bench_maintenance.py`); the serving pipeline dispatches
+    `fused_maintenance_round` instead."""
 
     def f(state):
         def body(s, _):
@@ -223,6 +225,23 @@ def fused_maintenance_step(budget: int):
 
         state, dids = jax.lax.scan(body, state, None, length=budget)
         return state, jnp.sum(dids)
+
+    return jax.jit(f, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def fused_maintenance_round(jobs: int):
+    """jitted, state-donating batched rebuilder round: the top-``jobs``
+    oversized postings split and bottom-``jobs`` undersized merged in ONE
+    executable with a single fused reassignment pass, returning
+    ``(state, n_jobs_done)``.
+
+    Constant work regardless of how many jobs fire — the TPU idiom for the
+    paper's background job queue; the host pays one dispatch and reads one
+    did-work scalar per round."""
+
+    def f(state):
+        return lire.maintenance_round(state, jobs)
 
     return jax.jit(f, donate_argnums=(0,))
 
@@ -242,6 +261,7 @@ class SPFreshIndex:
         self.state = state
         self.wal = WriteAheadLog(wal_path) if wal_path else None
         self._wal_applied = self.wal.next_seqno - 1 if self.wal else -1
+        self.last_drain_rounds = 0
 
     # ------------------------------------------------------------------
     @classmethod
@@ -311,10 +331,18 @@ class SPFreshIndex:
             )
 
     # ------------------------- Local Rebuilder -------------------------
-    def maintain(self, max_steps: int | None = None) -> int:
-        """Drain split/merge/reassign jobs; returns steps executed."""
-        self.state, steps = lire.rebuild_drain(self.state, max_steps)
-        return steps
+    def maintain(
+        self, max_steps: int | None = None, jobs_per_round: int | None = None,
+    ) -> int:
+        """Drain split/merge/reassign jobs in batched rounds (one did-work
+        readback per round); returns jobs executed.  ``jobs_per_round``
+        defaults to ``cfg.jobs_per_round``; the round count of the last
+        drain is kept in ``last_drain_rounds``."""
+        self.state, jobs, rounds = lire.rebuild_drain(
+            self.state, max_steps, jobs_per_round, donate=True
+        )
+        self.last_drain_rounds = rounds
+        return jobs
 
     # ---------------------------- Searcher -----------------------------
     def search(
@@ -368,9 +396,20 @@ class SPFreshIndex:
             self.state, jnp.asarray(vids), jnp.asarray(valid)
         )
 
-    def maintain_fused(self, budget: int) -> int:
-        """One fused rebuilder slot (``budget`` steps, one dispatch);
-        returns how many steps found work."""
+    def maintain_round(self, jobs: int | None = None) -> int:
+        """One fused rebuilder round (``jobs`` split+merge jobs + one
+        fused reassign pass, one dispatch); returns how many jobs acted."""
+        jobs = jobs or self.state.cfg.jobs_per_round
+        self.state, did = fused_maintenance_round(jobs)(self.state)
+        return int(did)
+
+    # Pre-round name for the one-dispatch maintenance slot; the budget is
+    # now a jobs-per-round count.
+    maintain_fused = maintain_round
+
+    def maintain_fused_seq(self, budget: int) -> int:
+        """One SEQUENTIAL fused slot (``budget`` one-job steps, one
+        dispatch) — the benchmark baseline for the batched round."""
         self.state, did = fused_maintenance_step(budget)(self.state)
         return int(did)
 
@@ -407,6 +446,7 @@ class SPFreshIndex:
         idx.state = state
         idx.wal = None
         idx._wal_applied = after
+        idx.last_drain_rounds = 0
         if wal_path and os.path.exists(wal_path):
             for rec in iter_wal(wal_path, after_seqno=after):
                 if rec.op == "insert":

@@ -2,7 +2,9 @@
 
 External interface: :func:`insert_batch`, :func:`delete_batch`,
 :func:`search`.  Internal (Local Rebuilder): :func:`split_posting`,
-:func:`merge_posting`, :func:`maintenance_step`.
+:func:`merge_posting`, :func:`maintenance_step`, and the batched
+:func:`maintenance_round` (K split + K merge jobs with one fused
+reassignment pass — the update-path analogue of the batched search scan).
 
 Every op is a jittable, fixed-shape functional state transition.  Branchy
 protocol logic is expressed with ``enable`` masks threaded through the
@@ -22,10 +24,10 @@ from repro.core.distance import MASK_DISTANCE, masked_topk, pairwise_sql2, sql2
 from repro.core.types import (
     IndexState,
     LireStats,
-    alloc_pid,
+    alloc_pids,
     bump_stat,
-    free_pid,
-    set_centroid,
+    free_pids,
+    set_centroids,
 )
 from repro.kernels.posting_scan import ops as scan_ops
 from repro.storage import blockpool as bp
@@ -490,25 +492,59 @@ def search(
 # Reassignment execution (shared by split and merge)
 # ---------------------------------------------------------------------------
 
+def _dedup_vid_mask_ref(vids: Array, mask: Array) -> Array:
+    """Reference same-vid dedup (the original O(n²) pairwise mask, kept as
+    the oracle for tests and the before/after benchmark): a masked row is
+    dropped when any earlier-indexed masked row carries the same vid."""
+    n = vids.shape[0]
+    idx = jnp.arange(n)
+    same = (vids[:, None] == vids[None, :]) & (
+        idx[:, None] > idx[None, :]
+    )
+    dup = jnp.any(same & mask[None, :], axis=1)
+    return mask & ~dup
+
+
+def _dedup_vid_mask(vids: Array, mask: Array) -> Array:
+    """First-occurrence-per-vid filter over the masked rows.
+
+    Sort-based idiom (the `_dedup_topk_1d` rewrite applied to the reassign
+    batch): one stable argsort on a masked key instead of the O(n²)
+    pairwise comparison matrix.  Unmasked rows key to a sentinel so they
+    never suppress a masked row; within a vid group the stable sort keeps
+    the lowest original index — exactly the reference semantics.
+    """
+    n = vids.shape[0]
+    key = jnp.where(mask, vids, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)
+    sk = key[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    return mask & jnp.zeros((n,), bool).at[order].set(first)
+
+
 def _execute_reassigns(
     state: IndexState,
     cand_vecs: Array,   # (C, d)
     cand_vids: Array,   # (C,)
     cand_cur_pid: Array,  # (C,) posting the candidate currently lives in
     cand_mask: Array,   # (C,) passed the necessary conditions
+    budget: int | None = None,
 ) -> IndexState:
     """Paper §3.3 final stage: per candidate, search the new closest posting,
     NPA-recheck to drop false positives, then version-bump + re-append.
 
-    Candidates are compacted to ``reassign_budget`` rows (overflow counted —
-    the paper reports ~79 actual reassigns out of ~5094 evaluated, so the
-    budget is generous).
+    Candidates are compacted to ``budget`` rows (default
+    ``cfg.reassign_budget``; overflow counted — the paper reports ~79
+    actual reassigns out of ~5094 evaluated, so the budget is generous).
+    The maintenance round concatenates EVERY job's candidates into one
+    call here with a jobs-scaled budget, so the whole round pays one
+    routing GEMM and one `append_scatter` instead of two per job.
     """
     cfg = state.cfg
     c = cand_vecs.shape[0]
-    budget = min(cfg.reassign_budget, c)
+    budget = min(budget or cfg.reassign_budget, c)
 
-    # --- compact to budget ---
+    # --- compact to the evaluation budget ---
     order = jnp.argsort(~cand_mask, stable=True)  # True (mask) rows first
     take = order[:budget]
     vecs = cand_vecs[take]
@@ -519,17 +555,21 @@ def _execute_reassigns(
     overflow = jnp.maximum(n_cand - budget, 0)
 
     # --- dedup same vid within the batch (concurrent-reassign CAS analogue) ---
-    same = (vids[:, None] == vids[None, :]) & (
-        jnp.arange(budget)[:, None] > jnp.arange(budget)[None, :]
-    )
-    dup = jnp.any(same & mask[None, :], axis=1)
-    mask = mask & ~dup
+    mask = _dedup_vid_mask(vids, mask)
     # Deleted/stale ids never get reassigned (they get GC'd instead).
     mask = mask & ~vm.is_deleted(state.versions, jnp.maximum(vids, 0)) & (vids >= 0)
 
     # --- NPA re-check: find the true nearest posting now ---
-    pids, dists, replica_ok = route(state, vecs, cfg.replica_count)
-    nearest = pids[:, 0]
+    # The re-check only needs the argmin posting, not the full top-R
+    # closure routing — a masked argmin over the (budget × P) GEMM, so the
+    # (sort-backed, CPU-hostile) masked top-k runs only on the compacted
+    # movers below.
+    d_all = pairwise_sql2(vecs, state.centroids, state.centroid_sqn)
+    d_all = jnp.where(state.centroid_valid[None, :], d_all, MASK_DISTANCE)
+    nearest = jnp.argmin(d_all, axis=1).astype(jnp.int32)
+    nearest = jnp.where(
+        jnp.min(d_all, axis=1) < MASK_DISTANCE / 2, nearest, -1
+    )
     # False-positive filter (paper: "if a vector actually does not need
     # reassignment, the reassign operation is aborted"): if a LIVE replica of
     # this vid already sits in the nearest posting, NPA is satisfied.
@@ -546,23 +586,46 @@ def _execute_reassigns(
     )
     need = mask & (nearest >= 0) & (nearest != cur_pid) & ~replica_there
 
+    # --- compact the actual MOVERS to reassign_budget candidates ---
+    # The paper reports ~79 movers out of ~5094 evaluated, so the write
+    # path is sized for the movers, not the evaluation budget: the fused
+    # round evaluates its jobs-scaled candidate budget with the GEMMs
+    # above, but at most reassign_budget vectors move per pass (the knob's
+    # original meaning) — keeping the append scatter, the scarcest op on
+    # CPU/TPU alike, at a fixed small row count.  Truncated movers simply
+    # stay where they are (counted as overflow; live replicas untouched).
+    movers = min(cfg.reassign_budget, budget)
+    morder = jnp.argsort(~need, stable=True)
+    mtake = morder[:movers]
+    m_vecs = vecs[mtake]
+    m_vids = vids[mtake]
+    m_safe_vids = safe_vids[mtake]
+    m_cur_ver = cur_ver[mtake]
+    m_need = need[mtake]
+    n_need = jnp.sum(need)
+    overflow = overflow + jnp.maximum(n_need - movers, 0)
+    # Full closure routing (top-R + replica rule) for the movers only.
+    m_pids, _, m_replica_ok = route(state, m_vecs, cfg.replica_count)
+
     # --- append fresh replicas at the new homes with a TENTATIVE version ---
     # The version map is only bumped if the primary append lands; otherwise
     # the old replicas stay live (no data loss when the target is full) and
     # the tentative appends are stale garbage, GC'd by the next split.
-    tentative_ver = (cur_ver + 1) & vm.VERSION_MASK
-    enable = need[:, None] & replica_ok & (pids >= 0)
-    flat_pids = jnp.maximum(pids.reshape(-1), 0)
+    tentative_ver = (m_cur_ver + 1) & vm.VERSION_MASK
+    enable = m_need[:, None] & m_replica_ok & (m_pids >= 0)
+    flat_pids = jnp.maximum(m_pids.reshape(-1), 0)
     flat_enable = enable.reshape(-1)
-    flat_vecs = jnp.repeat(vecs, cfg.replica_count, axis=0)
-    flat_vids = jnp.repeat(vids, cfg.replica_count)
+    flat_vecs = jnp.repeat(m_vecs, cfg.replica_count, axis=0)
+    flat_vids = jnp.repeat(m_vids, cfg.replica_count)
     flat_vers = jnp.repeat(tentative_ver, cfg.replica_count)
-    pool, oks = bp.append_batch(
+    # collision-ranked scatter append: the whole (movers·R)-row batch lands
+    # in one dispatch instead of a movers·R-step tail-write scan
+    pool, oks = bp.append_scatter(
         state.pool, flat_pids, flat_vecs, flat_vids, flat_vers, flat_enable
     )
     landed = oks.reshape(-1, cfg.replica_count)[:, 0]
-    commit = need & landed
-    versions = vm.bump_version(state.versions, safe_vids, commit)
+    commit = m_need & landed
+    versions = vm.bump_version(state.versions, m_safe_vids, commit)
     state = state.replace(versions=versions)
 
     stats = state.stats
@@ -577,8 +640,156 @@ def _execute_reassigns(
 
 
 # ---------------------------------------------------------------------------
-# Split (Local Rebuilder job, §4.2.1)
+# Split (Local Rebuilder job, §4.2.1) — batched K-job core + K=1 wrapper
 # ---------------------------------------------------------------------------
+
+def _split_jobs(
+    state: IndexState, pids: Array, enable: Array
+) -> tuple[IndexState, Array, tuple[Array, Array, Array, Array]]:
+    """K split jobs in one fused pass.  ``pids (K,)`` must be distinct.
+
+    Per job: GC the posting; if still oversized, balanced-2-means split
+    into two fresh postings.  All K jobs share one vmapped
+    `balanced_two_means`, one batched pid alloc, one `free_postings`
+    scatter, ONE `put_postings` scatter for every half-write and GC
+    write-back, and one ``(K × P)`` neighbor GEMM.
+
+    Returns ``(state, acted (K,), (cand_vecs, cand_vids, cand_cur,
+    cand_mask))`` — the flattened reassign candidates
+    (``K·(1+reassign_range)·cap`` rows) for the caller's fused
+    `_execute_reassigns`.
+    """
+    cfg = state.cfg
+    cap = cfg.posting_capacity
+    k = pids.shape[0]
+    pids = pids.astype(jnp.int32)
+    safe = jnp.maximum(pids, 0)
+    enable = enable & (pids >= 0) & state.centroid_valid[safe]
+
+    vecs, vids, vers, valid = bp.gather_postings(state.pool, safe)  # (K, cap, ...)
+    live = valid & ~vm.is_stale(state.versions, vids, vers)
+    n_live = jnp.sum(live, axis=1)                       # (K,)
+    cur_len = state.pool.posting_len[safe]
+    cur_ver = state.versions[jnp.maximum(vids, 0)] & vm.VERSION_MASK
+
+    # ---- Case A: garbage-collection write-back resolves the job ----
+    gc_wb = enable & (n_live <= cfg.split_limit) & (n_live < cur_len)
+    order_live = jnp.argsort(~live, axis=1, stable=True)
+    gc_vecs = jnp.take_along_axis(vecs, order_live[..., None], axis=1)
+    gc_vids = jnp.take_along_axis(vids, order_live, axis=1)
+    gc_vers = jnp.take_along_axis(cur_ver, order_live, axis=1)
+
+    # ---- Case B: real split ----
+    want = enable & (n_live > cfg.split_limit)
+    if not cfg.enable_split:
+        want = jnp.zeros_like(want)
+    rng, sub = jax.random.split(state.rng)
+    state = state.replace(rng=rng)
+    new_centroids, assign = jax.vmap(
+        lambda key, x, lv: balanced_two_means(
+            key, x, lv, iters=cfg.kmeans_iters
+        )
+    )(jax.random.split(sub, k), vecs.astype(jnp.float32), live)
+    # new_centroids (K, 2, d); assign (K, cap) in {-1, 0, 1}
+
+    state, new_pids = alloc_pids(state, jnp.repeat(want, 2))  # (2K,)
+    pid1, pid2 = new_pids[0::2], new_pids[1::2]
+    ok = want & (pid1 >= 0) & (pid2 >= 0)
+    # Roll back half-successful allocations (pid1 landed, pid2 didn't).
+    state = free_pids(state, new_pids, jnp.repeat(want & ~ok, 2))
+
+    old_centroid = state.centroids[safe]                 # (K, d)
+
+    # Retire the old postings (blocks + centroids + ids) in one scatter.
+    pool = bp.free_postings(state.pool, safe, ok)
+    state = state.replace(pool=pool)
+    state = free_pids(state, pids, ok)
+
+    # Halves, compacted to the front of fixed-capacity buffers.
+    in0 = live & (assign == 0)
+    in1 = live & (assign == 1)
+    n0 = jnp.sum(in0, axis=1)
+    n1 = jnp.sum(in1, axis=1)
+    order0 = jnp.argsort(~in0, axis=1, stable=True)
+    order1 = jnp.argsort(~in1, axis=1, stable=True)
+
+    def _take(buf, order):
+        if buf.ndim == 3:
+            return jnp.take_along_axis(buf, order[..., None], axis=1)
+        return jnp.take_along_axis(buf, order, axis=1)
+
+    # ONE put scatter: K GC write-backs (old pid) + 2K half-writes (fresh
+    # pids) — all target pids distinct among enabled rows.
+    put_pids = jnp.concatenate([safe, jnp.maximum(pid1, 0), jnp.maximum(pid2, 0)])
+    put_vecs = jnp.concatenate(
+        [gc_vecs, _take(vecs, order0), _take(vecs, order1)], axis=0
+    )
+    put_vids = jnp.concatenate(
+        [gc_vids, _take(vids, order0), _take(vids, order1)], axis=0
+    )
+    put_vers = jnp.concatenate(
+        [gc_vers, _take(cur_ver, order0), _take(cur_ver, order1)], axis=0
+    )
+    put_ns = jnp.concatenate([n_live, n0, n1])
+    put_en = jnp.concatenate([gc_wb, ok, ok])
+    pool, _ = bp.put_postings(
+        state.pool, put_pids, put_vecs, put_vids, put_vers, put_ns, put_en
+    )
+    state = state.replace(pool=pool)
+    state = set_centroids(state, pid1, new_centroids[:, 0], ok)
+    state = set_centroids(state, pid2, new_centroids[:, 1], ok)
+
+    # ---- Reassignment candidates (the heart of LIRE) ----
+    # Neighbors: reassign_range nearest postings to each *old* centroid,
+    # excluding the job's own two fresh halves — one (K × P) GEMM instead
+    # of K skinny (1 × P) ones.
+    nb_d = pairwise_sql2(old_centroid, state.centroids, state.centroid_sqn)
+    arange_p = jnp.arange(cfg.num_postings_cap)
+    nb_valid = (
+        state.centroid_valid[None, :]
+        & (arange_p[None, :] != jnp.maximum(pid1, 0)[:, None])
+        & (arange_p[None, :] != jnp.maximum(pid2, 0)[:, None])
+    )
+    nb_dist, nb_pids = masked_topk(nb_d, nb_valid, cfg.reassign_range)
+    nb_ok = nb_dist < MASK_DISTANCE / 2                  # (K, RR)
+
+    nvecs, nvids, nvers, nvalid = bp.gather_postings(
+        state.pool, nb_pids.reshape(-1)
+    )  # (K·RR, cap, ...)
+    nlive = nvalid & ~vm.is_stale(state.versions, nvids, nvers)
+    nlive = nlive & nb_ok.reshape(-1)[:, None] & jnp.repeat(ok, cfg.reassign_range)[:, None]
+
+    # Eq. (2) for neighbor vectors; Eq. (1) for the split posting's vectors.
+    eq2 = jax.vmap(npa.split_neighbor_candidates)(
+        nvecs.reshape(k, -1, cfg.dim).astype(jnp.float32),
+        old_centroid,
+        new_centroids,
+    ).reshape(k * cfg.reassign_range, cap)
+    eq1 = jax.vmap(npa.split_old_posting_candidates)(
+        vecs.astype(jnp.float32), old_centroid, new_centroids
+    )  # (K, cap)
+    own_cur = jnp.where(
+        assign == 0, jnp.maximum(pid1, 0)[:, None], jnp.maximum(pid2, 0)[:, None]
+    )
+
+    cand_vecs = jnp.concatenate(
+        [vecs.reshape(-1, cfg.dim), nvecs.reshape(-1, cfg.dim)], axis=0
+    )
+    cand_vids = jnp.concatenate([vids.reshape(-1), nvids.reshape(-1)])
+    cand_cur = jnp.concatenate(
+        [own_cur.reshape(-1), jnp.repeat(nb_pids.reshape(-1), cap)]
+    )
+    cand_mask = jnp.concatenate(
+        [(eq1 & live & ok[:, None]).reshape(-1), (eq2 & nlive).reshape(-1)]
+    )
+
+    checked = jnp.sum(jnp.where(ok, n_live, 0)) + jnp.sum(nlive)
+    stats = bump_stat(state.stats, "n_reassign_checked", checked)
+    stats = bump_stat(stats, "n_splits", jnp.sum(ok))
+    stats = bump_stat(stats, "n_gc_writebacks", jnp.sum(gc_wb))
+    state = state.replace(stats=stats, step=state.step + 1)
+    return state, (ok | gc_wb), (cand_vecs, cand_vids, cand_cur, cand_mask)
+
 
 @jax.jit
 def split_posting(
@@ -587,136 +798,129 @@ def split_posting(
     """Split job: GC the posting; if still oversized, balanced-2-means split,
     then LIRE reassignment over the split + ``reassign_range`` neighbors.
 
-    Returns ``(state, acted)`` where acted covers both GC-writeback and true
-    splits.
+    K=1 wrapper over the batched `_split_jobs` core (the maintenance round
+    runs K of these fused); returns ``(state, acted)`` where acted covers
+    both GC-writeback and true splits.
+    """
+    pid = jnp.asarray(pid, jnp.int32).reshape(1)
+    enable = jnp.asarray(enable).reshape(1)
+    state, acted, cand = _split_jobs(state, pid, enable)
+    if state.cfg.enable_reassign:
+        state = _execute_reassigns(state, *cand)
+    return state, acted[0]
+
+
+# ---------------------------------------------------------------------------
+# Merge (Local Rebuilder job, §3.2 / §4.2.1) — batched K-job core + wrapper
+# ---------------------------------------------------------------------------
+
+def _merge_jobs(
+    state: IndexState, pids: Array, enable: Array, exclude_pids: Array
+) -> tuple[IndexState, Array, tuple[Array, Array, Array, Array]]:
+    """K merge jobs in one fused pass.  ``pids (K,)`` must be distinct.
+
+    Target selection (nearest of the ``merge_fanout`` closest postings with
+    room) is one ``(K × P)`` GEMM; the moves land through ONE
+    `append_scatter` over the K·cap concatenated rows, whose per-posting
+    collision ranks keep per-append capacity safety when two jobs pick the
+    same target.  ``exclude_pids`` are barred as targets — the round
+    passes every merge source, since a source freed later in the round
+    must not absorb another job's vectors.
+
+    Returns ``(state, gone (K,), (cand_vecs, cand_vids, cand_cur,
+    cand_mask))`` — the moved vectors as reassign candidates.
     """
     cfg = state.cfg
-    cap = cfg.posting_capacity
-    pid = jnp.asarray(pid, jnp.int32)
-    enable = enable & (pid >= 0) & state.centroid_valid[jnp.maximum(pid, 0)]
-    safe_pid = jnp.maximum(pid, 0)
+    k = pids.shape[0]
+    pids = pids.astype(jnp.int32)
+    safe = jnp.maximum(pids, 0)
+    enable = enable & (pids >= 0) & state.centroid_valid[safe]
 
-    vecs, vids, vers, valid = bp.gather_posting(state.pool, safe_pid)
+    vecs, vids, vers, valid = bp.gather_postings(state.pool, safe)
     live = valid & ~vm.is_stale(state.versions, vids, vers)
-    n_live = jnp.sum(live)
-    cur_len = state.pool.posting_len[safe_pid]
+    n_live = jnp.sum(live, axis=1)                       # (K,)
+    enable = enable & (n_live < cfg.merge_limit)
+
+    # Nearest postings able to absorb each job: try the merge_fanout closest.
+    own_centroid = state.centroids[safe]                 # (K, d)
+    d = pairwise_sql2(own_centroid, state.centroids, state.centroid_sqn)
+    arange_p = jnp.arange(cfg.num_postings_cap)
+    ex = exclude_pids.astype(jnp.int32)
+    excluded = jnp.any(
+        (arange_p[:, None] == ex[None, :]) & (ex >= 0)[None, :], axis=1
+    )
+    cand_ok = state.centroid_valid & ~excluded           # (P,)
+    cd, cpids = masked_topk(
+        d, jnp.broadcast_to(cand_ok[None, :], d.shape), cfg.merge_fanout
+    )
+    fits = (cd < MASK_DISTANCE / 2) & (
+        state.pool.posting_len[jnp.maximum(cpids, 0)] + n_live[:, None]
+        <= cfg.posting_capacity
+    )
+    any_fit = jnp.any(fits, axis=1)
+    first_fit = jnp.argmax(fits, axis=1)                 # first True per job
+    target = jnp.where(
+        any_fit, jnp.take_along_axis(cpids, first_fit[:, None], axis=1)[:, 0], -1
+    )
+    do = enable & any_fit & (n_live > 0)
+    # Shared-target capacity: `fits` was checked against the pre-append
+    # lengths, so two jobs absorbing into the same posting could together
+    # overflow it and leak a partially-landed (live, unreclaimable) copy.
+    # Charge each job the load of every EARLIER move candidate on the same
+    # target (conservative: earlier candidates later dropped still count)
+    # and defer jobs that no longer fit to the next round.
+    jidx = jnp.arange(k)
+    same_t = (target[:, None] == target[None, :]) & (target >= 0)[:, None]
+    prior = jnp.sum(
+        jnp.where(
+            same_t & (jidx[:, None] > jidx[None, :]) & do[None, :],
+            n_live[None, :], 0,
+        ),
+        axis=1,
+    )
+    do = do & (
+        state.pool.posting_len[jnp.maximum(target, 0)] + prior + n_live
+        <= cfg.posting_capacity
+    )
+    # Empty postings are simply retired.
+    retire_empty = enable & (n_live == 0)
+
     cur_ver = state.versions[jnp.maximum(vids, 0)] & vm.VERSION_MASK
-
-    # ---- Case A: garbage-collection write-back resolves the job ----
-    gc_wb = enable & (n_live <= cfg.split_limit) & (n_live < cur_len)
-    order_live = jnp.argsort(~live, stable=True)
-    pool, _ = bp.put_posting(
+    move = live & do[:, None]
+    tgt_rows = jnp.broadcast_to(jnp.maximum(target, 0)[:, None], (k, vecs.shape[1]))
+    pool, oks = bp.append_scatter(
         state.pool,
-        safe_pid,
-        vecs[order_live],
-        vids[order_live],
-        cur_ver[order_live],
-        n_live,
-        gc_wb,
+        tgt_rows.reshape(-1),
+        vecs.reshape(-1, cfg.dim),
+        vids.reshape(-1),
+        cur_ver.reshape(-1),
+        move.reshape(-1),
     )
     state = state.replace(pool=pool)
 
-    # ---- Case B: real split ----
-    want_split = enable & (n_live > cfg.split_limit)
-    if not cfg.enable_split:
-        want_split = jnp.asarray(False)
-    rng, sub = jax.random.split(state.rng)
-    state = state.replace(rng=rng)
-    new_centroids, assign = balanced_two_means(
-        sub, vecs.astype(jnp.float32), live, iters=cfg.kmeans_iters
-    )
-
-    state, pid1 = alloc_pid(state, want_split)
-    state, pid2 = alloc_pid(state, want_split)
-    ok = want_split & (pid1 >= 0) & (pid2 >= 0)
-    # Roll back a half-successful allocation.
-    state = free_pid(state, pid1, want_split & ~ok)
-    state = free_pid(state, pid2, want_split & ~ok)
-
-    old_centroid = state.centroids[safe_pid]
-
-    # Retire the old posting (blocks + centroid + id).
-    pool = bp.free_posting(state.pool, safe_pid, ok)
+    # Retire the merged-away postings — only where every live vector landed
+    # in the target (pool OOM mid-merge must not lose vectors).
+    all_moved = jnp.all(oks.reshape(k, -1) == move, axis=1)
+    do = do & all_moved
+    gone = do | retire_empty
+    pool = bp.free_postings(state.pool, safe, gone)
     state = state.replace(pool=pool)
-    state = free_pid(state, pid, ok)
+    state = free_pids(state, pids, gone)
 
-    # Write the two halves.
-    in0 = live & (assign == 0)
-    in1 = live & (assign == 1)
-    n0 = jnp.sum(in0)
-    n1 = jnp.sum(in1)
-    order0 = jnp.argsort(~in0, stable=True)
-    order1 = jnp.argsort(~in1, stable=True)
-    pool, ok_put0 = bp.put_posting(
-        state.pool, jnp.maximum(pid1, 0), vecs[order0], vids[order0],
-        cur_ver[order0], n0, ok,
+    # Reassign check over moved vectors only (no neighbor scan for merges).
+    state = state.replace(
+        stats=bump_stat(
+            bump_stat(state.stats, "n_merges", jnp.sum(do)),
+            "n_reassign_checked", jnp.sum(jnp.where(do, n_live, 0)),
+        ),
+        step=state.step + 1,
     )
-    pool, ok_put1 = bp.put_posting(
-        pool, jnp.maximum(pid2, 0), vecs[order1], vids[order1],
-        cur_ver[order1], n1, ok,
-    )
-    state = state.replace(pool=pool)
-    state = set_centroid(state, pid1, new_centroids[0], ok)
-    state = set_centroid(state, pid2, new_centroids[1], ok)
-
-    # ---- Reassignment (the heart of LIRE) ----
-    # Neighbors: reassign_range nearest postings to the *old* centroid,
-    # excluding the two freshly created ones.
-    nb_d = pairwise_sql2(
-        old_centroid[None, :], state.centroids, state.centroid_sqn
-    )[0]
-    nb_valid_mask = state.centroid_valid & (
-        jnp.arange(cfg.num_postings_cap) != jnp.maximum(pid1, 0)
-    ) & (jnp.arange(cfg.num_postings_cap) != jnp.maximum(pid2, 0))
-    nb_dist, nb_pids = masked_topk(
-        nb_d[None, :], nb_valid_mask[None, :], cfg.reassign_range
-    )
-    nb_pids = nb_pids[0]
-    nb_ok = (nb_dist[0] < MASK_DISTANCE / 2)
-
-    nvecs, nvids, nvers, nvalid = bp.parallel_get(
-        state.pool, jnp.maximum(nb_pids, 0)
-    )  # (RR, cap, ...)
-    nlive = nvalid & ~vm.is_stale(state.versions, nvids, nvers)
-    nlive = nlive & nb_ok[:, None]
-
-    flat_nvecs = nvecs.reshape(-1, cfg.dim)
-    flat_nvids = nvids.reshape(-1)
-    flat_nlive = nlive.reshape(-1)
-    flat_ncur = jnp.repeat(nb_pids, cap)
-
-    # Eq. (2) for neighbor vectors; Eq. (1) for the split posting's vectors.
-    eq2 = npa.split_neighbor_candidates(
-        flat_nvecs.astype(jnp.float32), old_centroid, new_centroids
-    )
-    eq1 = npa.split_old_posting_candidates(
-        vecs.astype(jnp.float32), old_centroid, new_centroids
-    )
-    own_cur = jnp.where(assign == 0, jnp.maximum(pid1, 0), jnp.maximum(pid2, 0))
-
-    cand_vecs = jnp.concatenate([vecs, flat_nvecs], axis=0)
-    cand_vids = jnp.concatenate([vids, flat_nvids], axis=0)
-    cand_cur = jnp.concatenate([own_cur, flat_ncur], axis=0)
-    cand_mask = jnp.concatenate(
-        [eq1 & live & ok, eq2 & flat_nlive & ok], axis=0
+    cand_cur = tgt_rows.reshape(-1)
+    cand_mask = (live & do[:, None]).reshape(-1)
+    return state, gone, (
+        vecs.reshape(-1, cfg.dim), vids.reshape(-1), cand_cur, cand_mask
     )
 
-    checked = jnp.where(ok, jnp.sum(live) + jnp.sum(flat_nlive), 0)
-    stats = bump_stat(state.stats, "n_reassign_checked", checked)
-    stats = bump_stat(stats, "n_splits", ok)
-    stats = bump_stat(stats, "n_gc_writebacks", gc_wb)
-    state = state.replace(stats=stats, step=state.step + 1)
-
-    if cfg.enable_reassign:
-        state = _execute_reassigns(
-            state, cand_vecs, cand_vids, cand_cur, cand_mask
-        )
-    return state, (ok | gc_wb)
-
-
-# ---------------------------------------------------------------------------
-# Merge (Local Rebuilder job, §3.2 / §4.2.1)
-# ---------------------------------------------------------------------------
 
 @jax.jit
 def merge_posting(
@@ -725,68 +929,15 @@ def merge_posting(
     """Merge job: append the undersized posting's live vectors into the
     nearest posting that can hold them, delete its centroid, then run the
     (neighbor-free) reassignment check over the moved vectors.
+
+    K=1 wrapper over the batched `_merge_jobs` core.
     """
-    cfg = state.cfg
-    pid = jnp.asarray(pid, jnp.int32)
-    safe_pid = jnp.maximum(pid, 0)
-    enable = enable & (pid >= 0) & state.centroid_valid[safe_pid]
-
-    vecs, vids, vers, valid = bp.gather_posting(state.pool, safe_pid)
-    live = valid & ~vm.is_stale(state.versions, vids, vers)
-    n_live = jnp.sum(live)
-    enable = enable & (n_live < cfg.merge_limit)
-
-    # Nearest posting able to absorb us: try the 4 closest.
-    own_centroid = state.centroids[safe_pid]
-    d = pairwise_sql2(own_centroid[None, :], state.centroids, state.centroid_sqn)[0]
-    cand_mask = state.centroid_valid & (
-        jnp.arange(cfg.num_postings_cap) != safe_pid
-    )
-    cd, cpids = masked_topk(d[None, :], cand_mask[None, :], 4)
-    cd, cpids = cd[0], cpids[0]
-    fits = (cd < MASK_DISTANCE / 2) & (
-        state.pool.posting_len[jnp.maximum(cpids, 0)] + n_live
-        <= cfg.posting_capacity
-    )
-    any_fit = jnp.any(fits)
-    first_fit = jnp.argmax(fits)  # first True
-    target = jnp.where(any_fit, cpids[first_fit], -1)
-    do = enable & any_fit & (n_live > 0)
-    # Empty postings are simply retired.
-    retire_empty = enable & (n_live == 0)
-
-    cur_ver = state.versions[jnp.maximum(vids, 0)] & vm.VERSION_MASK
-    pool, oks = bp.append_batch(
-        state.pool,
-        jnp.full_like(vids, jnp.maximum(target, 0)),
-        vecs,
-        vids,
-        cur_ver,
-        live & do,
-    )
-    state = state.replace(pool=pool)
-
-    # Retire the merged-away posting — only if every live vector actually
-    # landed in the target (pool OOM mid-merge must not lose vectors).
-    all_moved = jnp.all(oks == (live & do))
-    do = do & all_moved
-    gone = do | retire_empty
-    pool = bp.free_posting(state.pool, safe_pid, gone)
-    state = state.replace(pool=pool)
-    state = free_pid(state, pid, gone)
-
-    # Reassign check over moved vectors only (no neighbor scan for merges).
-    state = state.replace(
-        stats=bump_stat(
-            bump_stat(state.stats, "n_merges", do),
-            "n_reassign_checked", jnp.where(do, n_live, 0),
-        ),
-        step=state.step + 1,
-    )
-    cand_cur = jnp.full_like(vids, jnp.maximum(target, 0))
-    if cfg.enable_reassign:
-        state = _execute_reassigns(state, vecs, vids, cand_cur, live & do)
-    return state, gone
+    pid = jnp.asarray(pid, jnp.int32).reshape(1)
+    enable = jnp.asarray(enable).reshape(1)
+    state, gone, cand = _merge_jobs(state, pid, enable, pid)
+    if state.cfg.enable_reassign:
+        state = _execute_reassigns(state, *cand)
+    return state, gone[0]
 
 
 # ---------------------------------------------------------------------------
@@ -801,7 +952,7 @@ def maintenance_step(state: IndexState) -> tuple[IndexState, Array]:
 
     The §3.4 convergence argument bounds how many steps a driver loop needs:
     each split consumes a free posting id, so ``P_cap`` is a hard bound on
-    cascade length.
+    cascade length.  `maintenance_round` is the batched K-job form.
     """
     cfg = state.cfg
     lens = state.pool.posting_len
@@ -824,17 +975,115 @@ def maintenance_step(state: IndexState) -> tuple[IndexState, Array]:
     return state, (split_acted | merge_acted)
 
 
-def rebuild_drain(
-    state: IndexState, max_steps: int | None = None
-) -> tuple[IndexState, int]:
-    """Host-driven Local Rebuilder loop: run maintenance steps until
-    quiescent.  Bounded by the convergence proof (≤ P_cap splits possible).
+@functools.partial(jax.jit, static_argnames=("jobs_per_round",))
+def maintenance_round(
+    state: IndexState, jobs_per_round: int | None = None
+) -> tuple[IndexState, Array]:
+    """One batched rebuild round: the top-K oversized postings are split and
+    the bottom-K undersized merged (disjoint pid sets — ``merge_limit <
+    split_limit``), both selected by ONE length scan, then every job's
+    reassign candidates are concatenated into ONE `_execute_reassigns`
+    call — one ``route`` GEMM and one ``append_batch`` for the whole round
+    instead of two per job.
+
+    Returns ``(state, n_did_work)`` — the number of jobs that acted, ONE
+    device scalar for the host drain loop to read back per round (the
+    sequential driver synced on a bool per step).  ``jobs_per_round=None``
+    defers to ``cfg.jobs_per_round``.
     """
-    limit = max_steps if max_steps is not None else 2 * state.cfg.num_postings_cap
-    steps = 0
-    for _ in range(limit):
-        state, did = maintenance_step(state)
-        steps += 1
-        if not bool(did):
+    cfg = state.cfg
+    k = int(jobs_per_round or cfg.jobs_per_round)
+    k = max(1, min(k, cfg.num_postings_cap // 2))
+
+    lens = state.pool.posting_len
+    valid = state.centroid_valid
+
+    # One length scan selects both job sets.
+    split_scores = jnp.where(valid, lens, -1)
+    top_l, split_pids = jax.lax.top_k(split_scores, k)
+    split_enable = top_l > cfg.split_limit
+
+    merge_scores = jnp.where(
+        valid & (lens < cfg.merge_limit), lens, jnp.iinfo(jnp.int32).max
+    )
+    neg_l, merge_pids = jax.lax.top_k(-merge_scores, k)
+    merge_enable = (-neg_l) < cfg.merge_limit
+    if not cfg.enable_merge:
+        merge_enable = jnp.zeros_like(merge_enable)
+
+    state, split_acted, s_cand = _split_jobs(
+        state, split_pids.astype(jnp.int32), split_enable
+    )
+    # Merges run after the splits (freed split pids are already invalid, so
+    # they can't be picked as absorb targets); every ENABLED merge source
+    # is barred as a target for every job — disabled rows are top_k filler
+    # indices that must stay eligible as targets.
+    state, merge_acted, m_cand = _merge_jobs(
+        state, merge_pids.astype(jnp.int32), merge_enable,
+        jnp.where(merge_enable, merge_pids, -1).astype(jnp.int32),
+    )
+
+    if cfg.enable_reassign:
+        cand = tuple(
+            jnp.concatenate([a, b], axis=0) for a, b in zip(s_cand, m_cand)
+        )
+        # Evaluation budget scales with the round's job count (overflow is
+        # counted); the mover compaction inside keeps the append scatter at
+        # reassign_budget rows regardless.  One wide GEMM + one scatter for
+        # the whole round instead of two of each per job.
+        state = _execute_reassigns(
+            state, *cand,
+            budget=max(cfg.reassign_budget, k * cfg.reassign_budget // 2),
+        )
+
+    did = jnp.sum(split_acted.astype(jnp.int32)) + jnp.sum(
+        merge_acted.astype(jnp.int32)
+    )
+    return state, did
+
+
+@functools.lru_cache(maxsize=None)
+def _donating_round(jobs: int):
+    """State-donating compile of `maintenance_round` (drain loops hand the
+    round its own state back, so XLA updates the block pool in place
+    instead of copying it every round)."""
+    return jax.jit(
+        lambda s: maintenance_round(s, jobs), donate_argnums=(0,)
+    )
+
+
+def rebuild_drain(
+    state: IndexState,
+    max_steps: int | None = None,
+    jobs_per_round: int | None = None,
+    *,
+    donate: bool = False,
+) -> tuple[IndexState, int, int]:
+    """Host-driven Local Rebuilder loop in batched rounds: run
+    `maintenance_round` until quiescent, reading back ONE ``did_work``
+    scalar per round (the old loop host-synced on a bool after every
+    split+merge step).  Bounded by the convergence proof (≤ P_cap splits
+    possible).
+
+    ``max_steps`` caps the total jobs executed (the pre-round "steps"
+    budget; the last round may overshoot by up to ``jobs_per_round - 1``).
+    ``donate=True`` lets XLA mutate the caller's state buffers in place —
+    only for callers that own them exclusively (`SPFreshIndex.maintain`).
+    Returns ``(state, jobs_done, rounds)``.
+    """
+    cfg = state.cfg
+    jobs = int(jobs_per_round or cfg.jobs_per_round)
+    cap_jobs = max_steps if max_steps is not None else 2 * cfg.num_postings_cap
+    step = _donating_round(jobs) if donate else (
+        lambda s: maintenance_round(s, jobs)
+    )
+    done = 0
+    rounds = 0
+    while done < cap_jobs:
+        state, did = step(state)
+        rounds += 1
+        d = int(did)  # the round's single device→host sync
+        done += d
+        if d == 0:
             break
-    return state, steps
+    return state, done, rounds

@@ -34,10 +34,17 @@ class LireConfig:
     # --- LIRE protocol ---
     split_limit: int = 96            # split when live length exceeds this
     merge_limit: int = 12            # merge when 0 < live length below this
+    merge_fanout: int = 4            # nearest postings tried as merge absorbers
     reassign_range: int = 8          # nearby postings scanned after a split (paper: 64)
-    reassign_budget: int = 256       # max vectors actually reassigned per job
+    reassign_budget: int = 256       # max vectors actually reassigned per pass
     replica_count: int = 4           # max closure replicas per vector (paper avg 5.47, max 8)
     replica_rng: float = 1.15        # replicate while d <= rng^2 * d_min (squared-L2 ratio)
+    # --- maintenance batching (the Local Rebuilder round) ---
+    # Jobs per `maintenance_round`: the top-K oversized postings are split
+    # and the bottom-K undersized merged in ONE fused dispatch, with every
+    # job's reassign candidates routed by a single GEMM.  1 degenerates to
+    # the sequential `maintenance_step` work shape.
+    jobs_per_round: int = 4
     # --- search ---
     nprobe: int = 8                  # postings probed per query (paper: 64)
     # --- split clustering ---
@@ -77,6 +84,11 @@ class LireConfig:
             "split_limit must fit in a posting"
         )
         assert self.merge_limit < self.split_limit
+        assert self.merge_fanout >= 1
+        assert self.jobs_per_round >= 1
+        assert 2 * self.jobs_per_round <= self.num_postings_cap, (
+            "a round allocates up to 2 pids per split job"
+        )
         assert self.replica_count >= 1
         assert self.nprobe >= 1
         assert self.scan_schedule in ("per_query", "batched"), self.scan_schedule
@@ -181,6 +193,60 @@ def free_pid(state: IndexState, pid: Array, enable: Array) -> IndexState:
         pid_free_stack=stack,
         pid_free_top=jnp.where(do, state.pid_free_top + 1, state.pid_free_top),
         centroid_valid=valid,
+    )
+
+
+def alloc_pids(state: IndexState, enable: Array) -> tuple[IndexState, Array]:
+    """Batched pid alloc: pop one id per enabled row, in ONE gather.
+
+    Pops follow the sequential `alloc_pid` LIFO order (row with the i-th
+    True gets ``stack[top - i]``); rows past stack exhaustion get ``-1``.
+    Returns ``(state, pids (k,))``.
+    """
+    cnt = jnp.cumsum(enable.astype(jnp.int32))  # inclusive
+    pos = state.pid_free_top - cnt
+    ok = enable & (pos >= 0)
+    pids = jnp.where(ok, state.pid_free_stack[jnp.maximum(pos, 0)], -1)
+    return (
+        state.replace(pid_free_top=state.pid_free_top - jnp.sum(ok)),
+        pids.astype(jnp.int32),
+    )
+
+
+def free_pids(state: IndexState, pids: Array, enable: Array) -> IndexState:
+    """Batched `free_pid`: push ``k`` (distinct) ids back in ONE scatter and
+    invalidate their centroids."""
+    do = enable & (pids >= 0)
+    pos = state.pid_free_top + jnp.cumsum(do.astype(jnp.int32)) - 1
+    cap = state.pid_free_stack.shape[0]
+    stack = state.pid_free_stack.at[jnp.where(do, pos, cap)].set(
+        pids.astype(jnp.int32), mode="drop"
+    )
+    valid = state.centroid_valid.at[
+        jnp.where(do, jnp.maximum(pids, 0), cap)
+    ].set(False, mode="drop")
+    return state.replace(
+        pid_free_stack=stack,
+        pid_free_top=state.pid_free_top + jnp.sum(do),
+        centroid_valid=valid,
+    )
+
+
+def set_centroids(
+    state: IndexState, pids: Array, centroids: Array, enable: Array
+) -> IndexState:
+    """Batched `set_centroid`: ``k`` (distinct) centroid writes in ONE
+    scatter.  ``centroids (k, d)``; disabled rows are dropped."""
+    do = enable & (pids >= 0)
+    cap = state.centroids.shape[0]
+    tgt = jnp.where(do, jnp.maximum(pids, 0), cap)
+    c = centroids.astype(jnp.float32)
+    return state.replace(
+        centroids=state.centroids.at[tgt].set(c, mode="drop"),
+        centroid_sqn=state.centroid_sqn.at[tgt].set(
+            jnp.sum(c * c, axis=-1), mode="drop"
+        ),
+        centroid_valid=state.centroid_valid.at[tgt].set(True, mode="drop"),
     )
 
 

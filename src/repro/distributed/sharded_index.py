@@ -286,12 +286,11 @@ def make_maintenance_step(
 ):
     """jitted ``maintain(state_stacked) -> (state, n_did_work)``.
 
-    Every shard runs ``budget`` LIRE maintenance steps on its own postings
-    (fused into one executable via lax.scan, mirroring
-    ``core.index.fused_maintenance_step``) — rebalancing is embarrassingly
-    parallel across shards because the reassign neighborhood is
-    shard-local by the centroid-space partition.  ``n_did_work`` is the
-    max-over-shards count of steps that found a job.
+    Every shard runs ``budget`` SEQUENTIAL LIRE maintenance steps on its
+    own postings (fused into one executable via lax.scan, mirroring
+    ``core.index.fused_maintenance_step``).  Kept as the baseline the
+    batched round is measured against; the serving path dispatches
+    `make_maintenance_round`.
     """
 
     def local(state_stacked):
@@ -303,6 +302,34 @@ def make_maintenance_step(
 
         state, dids = jax.lax.scan(body, state, None, length=budget)
         any_did = jax.lax.pmax(jnp.sum(dids), shard_axes)
+        return _expand(state), any_did
+
+    sm = _shard_map(
+        local, mesh=mesh,
+        in_specs=(state_pspecs_for(cfg, shard_axes),),
+        out_specs=(state_pspecs_for(cfg, shard_axes), P()),
+    )
+    return jax.jit(sm, donate_argnums=(0,))
+
+
+def make_maintenance_round(
+    mesh: Mesh, cfg: LireConfig, *, shard_axes: tuple[str, ...] = ("model",),
+    jobs_per_round: int = 4,
+):
+    """jitted ``maintain(state_stacked) -> (state, n_jobs_done)``.
+
+    Every shard runs ONE batched `lire.maintenance_round`
+    (``jobs_per_round`` splits + merges with a fused reassign pass) on its
+    own postings — rebalancing is embarrassingly parallel across shards
+    because the reassign neighborhood is shard-local by the centroid-space
+    partition.  ``n_jobs_done`` is the max-over-shards job count, the ONE
+    scalar the host drain loop reads back per round.
+    """
+
+    def local(state_stacked):
+        state = _squeeze(state_stacked)
+        state, did = lire.maintenance_round(state, jobs_per_round)
+        any_did = jax.lax.pmax(did, shard_axes)
         return _expand(state), any_did
 
     sm = _shard_map(
@@ -417,6 +444,7 @@ class ShardedIndex:
         probe_chunk: int = 0,
         use_pallas_scan: bool | None = None,
         scan_schedule: str | None = None,
+        jobs_per_round: int | None = None,
     ):
         self.mesh = mesh
         self.cfg = cfg
@@ -426,6 +454,7 @@ class ShardedIndex:
         self.probe_chunk = probe_chunk
         self.use_pallas_scan = use_pallas_scan
         self.scan_schedule = scan_schedule
+        self.jobs_per_round = jobs_per_round or cfg.jobs_per_round
         self.shard_alive = jnp.ones((n_shards,), bool)
         self._search_steps: dict[tuple, Any] = {}
         self._maintain_steps: dict[int, Any] = {}
@@ -445,12 +474,13 @@ class ShardedIndex:
         probe_chunk: int = 0,
         use_pallas_scan: bool | None = None,
         scan_schedule: str | None = None,
+        jobs_per_round: int | None = None,
     ) -> tuple["ShardedIndex", np.ndarray]:
         """Offline sharded build; returns (index, handles of the inputs)."""
         stacked, handles = build_sharded_state(cfg, vectors, n_shards, seed=seed)
         idx = cls(mesh, cfg, stacked, n_shards, shard_axes=shard_axes,
                   probe_chunk=probe_chunk, use_pallas_scan=use_pallas_scan,
-                  scan_schedule=scan_schedule)
+                  scan_schedule=scan_schedule, jobs_per_round=jobs_per_round)
         return idx, handles
 
     def set_alive(self, alive: np.ndarray) -> None:
@@ -494,27 +524,33 @@ class ShardedIndex:
         """No durable WAL on the sharded backend (yet) — updates are
         deterministically replicated; crash recovery is snapshot-only."""
 
-    def maintain(self, budget: int) -> int:
-        """One fused maintenance slot: ``budget`` steps, ONE dispatch
-        (cached per budget).  Returns how many steps found work."""
-        step = self._maintain_steps.get(budget)
+    def maintain(self, jobs: int) -> int:
+        """One fused maintenance round: ``jobs`` split+merge jobs per
+        shard, ONE dispatch (cached per jobs count), ONE did-work scalar
+        read back.  Returns the max-over-shards jobs done."""
+        step = self._maintain_steps.get(jobs)
         if step is None:
-            step = make_maintenance_step(
-                self.mesh, self.cfg, shard_axes=self.shard_axes, budget=budget
+            step = make_maintenance_round(
+                self.mesh, self.cfg, shard_axes=self.shard_axes,
+                jobs_per_round=jobs,
             )
-            self._maintain_steps[budget] = step
+            self._maintain_steps[jobs] = step
         self.stacked, did = step(self.stacked)
         return int(did)
 
-    def drain(self) -> int:
+    def drain(self) -> tuple[int, int]:
+        """Rounds to quiescence; returns ``(jobs_done, rounds)``."""
         total = 0
-        # convergence bound: at most ~2*P_cap useful steps (§3.4)
-        for _ in range(2 * self.cfg.num_postings_cap // 16 + 1):
-            did = self.maintain(16)
+        rounds = 0
+        jobs = self.jobs_per_round
+        # convergence bound: at most ~2*P_cap useful jobs (§3.4)
+        for _ in range(2 * self.cfg.num_postings_cap // jobs + 1):
+            did = self.maintain(jobs)
+            rounds += 1
             total += did
             if did == 0:
                 break
-        return total
+        return total, rounds
 
     def backlog(self) -> int:
         lens = np.asarray(self.stacked.pool.posting_len)      # (M, P)

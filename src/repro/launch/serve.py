@@ -18,16 +18,19 @@ import numpy as np
 def _make_policy(args):
     from repro.serve.policy import BacklogPolicy, RatioPolicy
 
+    jobs = args.maintain_jobs or args.budget
     if args.policy == "backlog":
-        return BacklogPolicy(threshold=args.threshold, budget=args.budget)
-    return RatioPolicy(ratio=args.ratio, budget=args.budget)
+        return BacklogPolicy(threshold=args.threshold, budget=jobs)
+    return RatioPolicy(ratio=args.ratio, budget=jobs)
 
 
 def _print_report(engine) -> None:
     rep = engine.report()
     q, m = rep["queue"], rep["maintenance"]
     print(f"policy={m['policy']} maint_slots={m['slots']} "
-          f"maint_steps={m['steps']} maint_sps={m['steps_per_s']:.1f}")
+          f"maint_rounds={m['rounds']} maint_jobs={m['steps']} "
+          f"maint_jps={m['steps_per_s']:.1f} "
+          f"insert_stall={rep['insert_stall_s'] * 1e3:.0f}ms")
     print(f"queue: batches={q['batches']} rows={q['rows']} "
           f"pad_waste={q['padding_waste_frac']:.3f} "
           f"depth_avg={q['depth_rows_avg']:.0f} depth_max={q['depth_rows_max']}")
@@ -51,7 +54,12 @@ def main() -> None:
     ap.add_argument("--ratio", type=int, default=2,
                     help="fg update batches per bg slot (0 disables)")
     ap.add_argument("--budget", type=int, default=8,
-                    help="rebuild steps per bg slot")
+                    help="rebuild jobs per bg slot (legacy alias of "
+                         "--maintain-jobs)")
+    ap.add_argument("--maintain-jobs", type=int, default=None,
+                    help="jobs per fused maintenance round (top-K splits "
+                         "+ bottom-K merges per slot, one dispatch); "
+                         "overrides --budget")
     ap.add_argument("--threshold", type=int, default=1,
                     help="BacklogPolicy firing threshold")
     ap.add_argument("--shards", type=int, default=1,
@@ -77,16 +85,19 @@ def main() -> None:
 
     maker = UpdateWorkload.spacev if args.dataset == "spacev" else UpdateWorkload.sift
     wl = maker(n=args.n, dim=args.dim, rate=args.rate, seed=0)
+    jobs = args.maintain_jobs or args.budget
     cfg = LireConfig(
         dim=args.dim, block_size=8, max_blocks_per_posting=8,
         num_blocks=max(8192, args.n // 2), num_postings_cap=max(1024, args.n // 20),
         num_vectors_cap=4 * args.n, split_limit=48, merge_limit=6,
         reassign_range=8, replica_count=2, nprobe=args.nprobe,
+        jobs_per_round=jobs,
     )
     ecfg = EngineConfig(
         search_k=10, nprobe=args.nprobe, probe_chunk=args.probe_chunk,
         use_pallas_scan=None if args.scan == "oracle" else True,
         scan_schedule=None if args.scan == "oracle" else args.scan,
+        maintain_budget=jobs,
     )
     vecs, _ = wl.live_vectors()
 

@@ -50,9 +50,9 @@ class IndexBackend(Protocol):
 
     def log_update(self, op: str, payload: dict) -> None: ...
 
-    def maintain(self, budget: int) -> int: ...
+    def maintain(self, jobs: int) -> int: ...
 
-    def drain(self) -> int: ...
+    def drain(self) -> tuple[int, int]: ...
 
     def backlog(self) -> int: ...
 
@@ -101,11 +101,12 @@ class LocalBackend:
         if self.index.wal is not None:
             self.index._wal_applied = self.index.wal.append(op, payload)
 
-    def maintain(self, budget):
-        return self.index.maintain_fused(budget)
+    def maintain(self, jobs):
+        return self.index.maintain_round(jobs)
 
     def drain(self):
-        return self.index.maintain()
+        jobs = self.index.maintain()
+        return jobs, self.index.last_drain_rounds
 
     def backlog(self):
         return self.index.backlog()
@@ -132,7 +133,11 @@ class EngineConfig:
     # --- maintenance scheduling (used when no policy object is given) ---
     policy: str = "ratio"        # "ratio" | "backlog"
     fg_bg_ratio: int = 2         # foreground update batches per bg slot (2:1)
-    maintain_budget: int = 8     # rebuild steps per background slot
+    # Jobs per background ROUND: each slot is ONE fused dispatch splitting
+    # the top-`maintain_budget` oversized postings and merging the bottom-
+    # `maintain_budget` undersized, with one fused reassign pass (the
+    # pre-round semantics were sequential steps per slot).
+    maintain_budget: int = 8
     backlog_threshold: int = 1   # BacklogPolicy firing threshold
     # --- insert backpressure ---
     max_insert_retries: int = 4
@@ -152,17 +157,20 @@ class ServeMetrics:
     def __init__(self):
         self.lat: dict[str, list[float]] = {SEARCH: [], INSERT: [], DELETE: []}
         self.maint_slots = 0
+        self.maint_rounds = 0
         self.maint_steps = 0
         self.maint_time_s = 0.0
         self.insert_retries = 0
+        self.insert_stall_s = 0.0
         self.insert_dropped = 0
 
     def note_ticket(self, ticket: Ticket) -> None:
         if ticket.latency_s is not None:
             self.lat[ticket.op].append(ticket.latency_s)
 
-    def note_maintenance(self, steps: int, dt: float) -> None:
+    def note_maintenance(self, steps: int, dt: float, rounds: int = 1) -> None:
         self.maint_slots += 1
+        self.maint_rounds += rounds
         self.maint_steps += steps
         self.maint_time_s += dt
 
@@ -312,7 +320,10 @@ class ServeEngine:
             if not pending.any():
                 break
             if attempt > 0:
+                t0 = time.perf_counter()
                 self._run_maintenance()      # backpressure slot
+                # stall: serve-path time burned waiting on the rebuilder
+                self.metrics.insert_stall_s += time.perf_counter() - t0
                 self.metrics.insert_retries += 1
             got_ids, landed = self.backend.insert(vecs, vids, pending)
             newly = pending & landed
@@ -329,19 +340,24 @@ class ServeEngine:
             self._run_maintenance()
 
     def _run_maintenance(self) -> int:
+        """One maintenance slot = ONE fused round of ``policy.budget`` jobs
+        (a single dispatch; the host reads back one did-work scalar)."""
         t0 = time.perf_counter()
-        steps = self.backend.maintain(self.policy.budget)
-        self.policy.note_maintenance(steps)
-        self.metrics.note_maintenance(steps, time.perf_counter() - t0)
-        return steps
+        jobs = self.backend.maintain(self.policy.budget)
+        self.policy.note_maintenance(jobs)
+        self.metrics.note_maintenance(jobs, time.perf_counter() - t0)
+        return jobs
 
     def drain(self) -> int:
-        """Flush the queue, then run the rebuilder to quiescence."""
+        """Flush the queue, then run the rebuilder to quiescence (batched
+        rounds, one readback per round); returns jobs executed."""
         self.pump()
         t0 = time.perf_counter()
-        steps = self.backend.drain()
-        self.metrics.note_maintenance(steps, time.perf_counter() - t0)
-        return steps
+        jobs, rounds = self.backend.drain()
+        self.metrics.note_maintenance(
+            jobs, time.perf_counter() - t0, rounds=rounds
+        )
+        return jobs
 
     # ------------------------- sync conveniences ------------------------
     def search(
@@ -374,11 +390,13 @@ class ServeEngine:
             "maintenance": {
                 "policy": self.policy.describe(),
                 "slots": m.maint_slots,
-                "steps": m.maint_steps,
+                "rounds": m.maint_rounds,
+                "steps": m.maint_steps,   # jobs that acted (pre-round name)
                 "time_s": mt,
                 "steps_per_s": m.maint_steps / mt if mt > 0 else 0.0,
             },
             "insert_retries": m.insert_retries,
+            "insert_stall_s": m.insert_stall_s,
             "insert_dropped": m.insert_dropped,
             "backlog": self.backend.backlog(),
         }

@@ -4,8 +4,11 @@ SPFresh overlaps the foreground Updater with the background Local
 Rebuilder; *when* the rebuilder gets a slot is the pipeline-balance knob
 the paper tunes in Fig. 12 (2 foreground threads : 1 background thread
 is their optimum).  In the jit world there are no threads — the engine
-interleaves fixed-budget maintenance *slots* between foreground update
-batches — so the knob becomes a scheduling policy object.
+interleaves maintenance *slots* between foreground update batches — so
+the knob becomes a scheduling policy object.  A slot is ONE fused
+``maintenance_round`` dispatch: ``budget`` is the round's
+jobs-per-round count (top-``budget`` splits + bottom-``budget`` merges
++ one fused reassign pass), not a sequential step count.
 
 Two concrete policies ship:
 
@@ -32,7 +35,7 @@ class MaintenancePolicy:
     """Decides when the engine gives the Local Rebuilder a slot.
 
     Subclasses override :meth:`want_maintenance`; ``budget`` is the
-    number of maintenance steps granted per slot.
+    jobs-per-round of the fused maintenance round each slot dispatches.
     """
 
     def __init__(self, budget: int = 8):
@@ -47,7 +50,7 @@ class MaintenancePolicy:
     def want_maintenance(self, backlog_fn) -> bool:
         raise NotImplementedError
 
-    def note_maintenance(self, steps: int) -> None:
+    def note_maintenance(self, jobs: int) -> None:
         self.slots_fired += 1
 
     def describe(self) -> str:

@@ -204,6 +204,99 @@ def append_batch(
     return pool, oks
 
 
+@jax.jit
+def append_scatter(
+    pool: BlockPool,
+    pids: Array,
+    vecs: Array,
+    vids: Array,
+    vers: Array,
+    enable: Array,
+) -> tuple[BlockPool, Array]:
+    """Vectorized batched APPEND: n rows land in ONE scatter instead of an
+    n-step ``lax.scan`` — the fused-reassignment append of the maintenance
+    round (and its merge moves), where the scan's per-row sequential cost
+    would swamp the batching win.
+
+    Rows targeting the same posting are ranked in row order (earlier rows
+    win tail slots — the same landed set as `append_batch`); a row fails
+    (``ok=False``) when its posting is at capacity.  Tail blocks for every
+    boundary-crossing posting are allocated in one cumsum-indexed pop;
+    under pool OOM the rows needing fresh blocks fail as a group, so each
+    posting still lands a contiguous rank prefix (`append_batch` fails
+    them one by one — the failure set can differ only when the free pool
+    runs dry mid-batch).
+    """
+    n = pids.shape[0]
+    bs = pool.block_size
+    cap = pool.posting_capacity
+    mb = pool.max_blocks_per_posting
+    nb_cap = pool.num_blocks_cap
+    p_cap = pool.num_postings_cap
+    en = enable & (pids >= 0)
+    safe = jnp.maximum(pids, 0).astype(jnp.int32)
+
+    # Rank of each enabled row within its posting, preserving row order:
+    # stable group-by-pid sort, then position minus group start.
+    row = jnp.arange(n, dtype=jnp.int32)
+    spid_key = jnp.where(en, safe, p_cap)
+    order = jnp.lexsort((row, spid_key))
+    sp = spid_key[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool), sp[1:] != sp[:-1]])
+    start = jax.lax.cummax(jnp.where(first, pos, 0))
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(pos - start)
+
+    slot_g = pool.posting_len[safe] + rank
+    ok_cap = en & (slot_g < cap)
+    blk = slot_g // bs
+    slot = slot_g % bs
+    safe_blk = jnp.minimum(blk, mb - 1)
+    existing = pool.posting_blocks[safe, safe_blk]       # (n,)
+
+    # One leader row per absent tail block (ranks are contiguous, so every
+    # block boundary has a slot==0 row); allocate all leaders at once.
+    leader = ok_cap & (slot == 0) & (existing < 0)
+    n_new = jnp.sum(leader)
+    have = n_new <= pool.free_top
+    lrank = jnp.cumsum(leader.astype(jnp.int32)) - 1
+    lpos = pool.free_top - 1 - lrank
+    new_bid = jnp.where(
+        leader & have, pool.free_stack[jnp.clip(lpos, 0, nb_cap - 1)], -1
+    )
+    posting_blocks = pool.posting_blocks.at[
+        jnp.where(leader & have, safe, p_cap), safe_blk
+    ].set(new_bid, mode="drop")
+
+    bid = jnp.where(existing >= 0, existing, posting_blocks[safe, safe_blk])
+    ok = ok_cap & (bid >= 0)
+
+    tb = jnp.where(ok, bid, nb_cap)
+    blocks = pool.blocks.at[tb, slot].set(
+        vecs.astype(pool.blocks.dtype), mode="drop"
+    )
+    block_vid = pool.block_vid.at[tb, slot].set(
+        vids.astype(jnp.int32), mode="drop"
+    )
+    block_ver = pool.block_ver.at[tb, slot].set(
+        vers.astype(jnp.uint8), mode="drop"
+    )
+    posting_len = pool.posting_len.at[jnp.where(ok, safe, p_cap)].add(
+        1, mode="drop"
+    )
+    return (
+        pool.replace(
+            blocks=blocks,
+            block_vid=block_vid,
+            block_ver=block_ver,
+            posting_blocks=posting_blocks,
+            posting_len=posting_len,
+            free_top=pool.free_top - jnp.where(have, n_new, 0),
+        ),
+        ok,
+    )
+
+
 # ---------------------------------------------------------------------------
 # GET — block-table gather (ParallelGET is vmap of this)
 # ---------------------------------------------------------------------------
@@ -237,6 +330,15 @@ def parallel_get(
     """Paper's ParallelGET: batched posting fetch, ``pids (m,)`` →
     ``(m, MB*BS, ...)`` buffers."""
     return jax.vmap(lambda p: gather_posting(pool, p))(pids)
+
+
+def gather_postings(
+    pool: BlockPool, pids: Array
+) -> tuple[Array, Array, Array, Array]:
+    """Multi-pid bulk GET for the maintenance round: ``pids (k,)`` →
+    ``(vecs (k, MB*BS, d), vids, vers, valid)``.  Negative pids read
+    posting 0 but the caller's enable masks make those rows inert."""
+    return parallel_get(pool, jnp.maximum(pids, 0))
 
 
 def gather_posting_ids(
@@ -279,6 +381,123 @@ def free_posting(pool: BlockPool, pid: Array, enable: Array) -> BlockPool:
         enable, pool.posting_len.at[pid].set(0), pool.posting_len
     )
     return pool.replace(posting_blocks=posting_blocks, posting_len=posting_len)
+
+
+def free_postings(pool: BlockPool, pids: Array, enable: Array) -> BlockPool:
+    """Batched `free_posting`: release all blocks of ``k`` DISTINCT postings
+    in ONE scatter (the maintenance round's retire/GC path).
+
+    The per-block ``lax.scan`` of `free_posting` becomes a cumsum-indexed
+    push: every freed block id lands in ``free_stack[free_top + i]`` where
+    ``i`` is its rank among the round's freed blocks; disabled rows and
+    absent blocks scatter out of bounds and are dropped.
+    """
+    enable = enable & (pids >= 0)
+    safe = jnp.maximum(pids, 0)
+    bids = pool.posting_blocks[safe]                     # (k, MB)
+    do = enable[:, None] & (bids >= 0)
+    flat_bids = bids.reshape(-1)
+    flat_do = do.reshape(-1)
+    nb_cap = pool.num_blocks_cap
+
+    pos = pool.free_top + jnp.cumsum(flat_do.astype(jnp.int32)) - 1
+    free_stack = pool.free_stack.at[jnp.where(flat_do, pos, nb_cap)].set(
+        flat_bids, mode="drop"
+    )
+    block_vid = pool.block_vid.at[
+        jnp.where(flat_do, flat_bids, nb_cap)
+    ].set(-1, mode="drop")
+    row = jnp.where(enable, safe, pool.num_postings_cap)
+    posting_blocks = pool.posting_blocks.at[row].set(-1, mode="drop")
+    posting_len = pool.posting_len.at[row].set(0, mode="drop")
+    return pool.replace(
+        free_stack=free_stack,
+        free_top=pool.free_top + jnp.sum(flat_do),
+        block_vid=block_vid,
+        posting_blocks=posting_blocks,
+        posting_len=posting_len,
+    )
+
+
+def put_postings(
+    pool: BlockPool,
+    pids: Array,
+    vecs: Array,
+    vids: Array,
+    vers: Array,
+    ns: Array,
+    enable: Array,
+) -> tuple[BlockPool, Array]:
+    """Batched `put_posting`: bulk-write ``k`` DISTINCT postings in ONE
+    scatter — the maintenance round's half-writes and GC write-backs.
+
+    ``vecs (k, cap, d)`` / ``vids`` / ``vers (k, cap)`` are fixed-capacity
+    buffers; row ``j`` writes its first ``ns[j]`` entries.  Per row the
+    semantics match `put_posting`: old blocks freed first, ``ceil(n/BS)``
+    fresh blocks allocated (LIFO from the shared stack), payload written,
+    length set.  Allocation is first-come: once cumulative demand exceeds
+    the free pool, that row and all later enabled rows fail (``ok=False``,
+    posting left empty — same observable outcome as `put_posting` under
+    pool OOM; the drain loop retries next round).
+    """
+    k, cap, _ = vecs.shape
+    assert cap == pool.posting_capacity, (cap, pool.posting_capacity)
+    mb, bs = pool.max_blocks_per_posting, pool.block_size
+    nb_cap = pool.num_blocks_cap
+
+    enable = enable & (pids >= 0)
+    safe = jnp.maximum(pids, 0)
+    pool = free_postings(pool, pids, enable)
+
+    need = jnp.where(enable, (ns + bs - 1) // bs, 0)     # (k,)
+    ok = enable & (jnp.cumsum(need) <= pool.free_top)
+    used = jnp.where(ok, need, 0)
+    off = jnp.cumsum(used) - used                        # exclusive
+
+    i_idx = jnp.arange(mb, dtype=jnp.int32)[None, :]     # (1, MB)
+    in_use = ok[:, None] & (i_idx < need[:, None])       # (k, MB)
+    pos = pool.free_top - 1 - (off[:, None] + i_idx)     # LIFO pop order
+    bids = jnp.where(
+        in_use, pool.free_stack[jnp.clip(pos, 0, nb_cap - 1)], -1
+    )
+
+    vecs_b = vecs.reshape(k, mb, bs, -1)
+    vids_b = vids.reshape(k, mb, bs)
+    vers_b = vers.reshape(k, mb, bs)
+    in_range = (
+        i_idx[..., None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, None, :]
+    ) < ns[:, None, None]                                # (k, MB, BS)
+    tgt = jnp.where(in_use, bids, nb_cap).reshape(-1)
+    blocks = pool.blocks.at[tgt].set(
+        vecs_b.astype(pool.blocks.dtype).reshape(k * mb, bs, -1), mode="drop"
+    )
+    block_vid = pool.block_vid.at[tgt].set(
+        jnp.where(in_range, vids_b, -1).reshape(k * mb, bs), mode="drop"
+    )
+    block_ver = pool.block_ver.at[tgt].set(
+        jnp.where(in_range, vers_b, jnp.uint8(0)).reshape(k * mb, bs),
+        mode="drop",
+    )
+
+    row = jnp.where(ok, safe, pool.num_postings_cap)
+    posting_blocks = pool.posting_blocks.at[
+        jnp.broadcast_to(row[:, None], (k, mb)),
+        jnp.broadcast_to(i_idx, (k, mb)),
+    ].set(bids, mode="drop")
+    posting_len = pool.posting_len.at[row].set(
+        ns.astype(jnp.int32), mode="drop"
+    )
+    return (
+        pool.replace(
+            blocks=blocks,
+            block_vid=block_vid,
+            block_ver=block_ver,
+            posting_blocks=posting_blocks,
+            posting_len=posting_len,
+            free_top=pool.free_top - jnp.sum(used),
+        ),
+        ok,
+    )
 
 
 def put_posting(

@@ -15,11 +15,15 @@ echo "== kernel parity (Pallas interpret vs XLA oracles) =="
 python -m pytest -q tests/test_kernels_posting_scan.py \
     tests/test_kernels_l2topk.py tests/test_search_pallas.py
 
+echo "== maintenance round parity (batched rounds vs sequential LIRE) =="
+python -m pytest -q tests/test_maintenance_round.py
+
 echo "== pytest (tier-1, -m 'not slow') =="
 python -m pytest -q -m "not slow" \
     --ignore=tests/test_kernels_posting_scan.py \
     --ignore=tests/test_kernels_l2topk.py \
-    --ignore=tests/test_search_pallas.py
+    --ignore=tests/test_search_pallas.py \
+    --ignore=tests/test_maintenance_round.py
 
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== benchmarks dry smoke =="
