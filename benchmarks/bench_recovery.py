@@ -1,0 +1,156 @@
+"""Durability lifecycle costs (paper §4.4, the service API's recovery
+path): snapshot write/restore bandwidth, WAL append + fsync throughput,
+and end-to-end crash recovery (snapshot load + per-shard WAL replay
+through the backend's jitted dispatches) via ``spfresh.open``.
+
+    PYTHONPATH=src python -m benchmarks.run --only recovery
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_recovery.json
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_cfg
+from repro import api
+from repro.data.vectors import make_shifting_stream, make_sift_like
+from repro.storage.snapshot import load_snapshot, save_snapshot
+from repro.storage.wal import WalSet, iter_wal
+from repro.core.types import make_empty_state
+
+
+def _state_bytes(state) -> int:
+    import jax
+
+    return sum(
+        np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(state)
+    )
+
+
+def _bench_snapshot(idx, root: str, repeats: int) -> dict:
+    path = os.path.join(root, "snap_bench")
+    nbytes = _state_bytes(idx.state)
+    t_w = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        save_snapshot(path, idx.state)
+        t_w.append(time.perf_counter() - t0)
+    template = make_empty_state(idx.state.cfg)
+    t_r = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        load_snapshot(path, template)
+        t_r.append(time.perf_counter() - t0)
+    return {
+        "state_mb": nbytes / 1e6,
+        "write_s": float(np.median(t_w)),
+        "write_mb_s": nbytes / 1e6 / float(np.median(t_w)),
+        "restore_s": float(np.median(t_r)),
+        "restore_mb_s": nbytes / 1e6 / float(np.median(t_r)),
+    }
+
+
+def _bench_wal(root: str, batch: int, n_batches: int, dim: int) -> dict:
+    """Append (fsync'd) + sequential replay-scan throughput."""
+    wal_dir = os.path.join(root, "wal_bench")
+    ws = WalSet(wal_dir, 1)
+    vecs = np.zeros((batch, dim), np.float32)
+    vids = np.arange(batch, dtype=np.int32)
+    valid = np.ones(batch, bool)
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        ws.append("insert", {"vecs": vecs, "vids": vids, "valid": valid})
+    t_append = time.perf_counter() - t0
+    nbytes = os.path.getsize(ws.shard_path(0))
+    t0 = time.perf_counter()
+    n_rec = sum(1 for _ in iter_wal(ws.shard_path(0)))
+    t_scan = time.perf_counter() - t0
+    ws.close()
+    assert n_rec == n_batches
+    return {
+        "append_batches_s": n_batches / t_append,
+        "append_rows_s": n_batches * batch / t_append,
+        "append_mb_s": nbytes / 1e6 / t_append,
+        "scan_records_s": n_rec / max(t_scan, 1e-9),
+        "log_mb": nbytes / 1e6,
+    }
+
+
+def _bench_open_recovery(root: str, n_base: int, n_updates: int,
+                         dim: int = 16) -> dict:
+    """Crash → ``spfresh.open`` wall time, split into snapshot load and
+    WAL replay (replay re-runs the update dispatches, so its throughput
+    is the real recovery bound — Fig. 7's update path re-applied)."""
+    svc_root = os.path.join(root, "svc")
+    spec = api.ServiceSpec(
+        index=api.IndexSpec(config=bench_cfg(dim=dim)),
+        durability=api.DurabilitySpec(root=svc_root),
+    )
+    base = make_sift_like(n_base, dim, seed=41)
+    svc = api.open(spec, vectors=base)
+    fresh = make_shifting_stream(n_updates, dim, seed=42)
+    ids = np.arange(n_base, n_base + n_updates, dtype=np.int32)
+    t0 = time.perf_counter()
+    for s in range(0, n_updates, 256):
+        svc.insert(fresh[s:s + 256], ids[s:s + 256])
+    t_updates = time.perf_counter() - t0
+    # crash: abandon without checkpoint/close; everything since the
+    # open-time snapshot lives only in the WAL
+    t0 = time.perf_counter()
+    svc2 = api.open(spec)
+    t_open = time.perf_counter() - t0
+    assert svc2.recovered
+    d, v = svc2.search(fresh[:4], k=5)
+    assert (v[:, 0] == ids[:4]).all(), "recovery lost updates"
+    svc2.close()
+    return {
+        "n_base": n_base,
+        "n_updates": n_updates,
+        "update_wall_s": t_updates,
+        "recover_open_s": t_open,
+        "replayed_rows_s": n_updates / max(t_open, 1e-9),
+        "recover_vs_update": t_open / max(t_updates, 1e-9),
+    }
+
+
+def run_json(quick: bool = True) -> dict:
+    n_base = 4000 if quick else 40000
+    n_updates = 1024 if quick else 8192
+    root = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        base = make_sift_like(n_base, 16, seed=40)
+        svc = api.open(api.ServiceSpec(index=api.IndexSpec(
+            config=bench_cfg())), vectors=base)
+        snap = _bench_snapshot(svc.index, root, repeats=3 if quick else 5)
+        wal = _bench_wal(root, batch=256, n_batches=16 if quick else 64,
+                         dim=16)
+        rec = _bench_open_recovery(root, n_base, n_updates)
+        return {"snapshot": snap, "wal": wal, "recovery": rec}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(quick: bool = True) -> list[str]:
+    r = run_json(quick=quick)
+    s, w, o = r["snapshot"], r["wal"], r["recovery"]
+    return [
+        f"recovery/snapshot,{s['write_s'] * 1e6:.0f},"
+        f"state_mb={s['state_mb']:.1f};write_mb_s={s['write_mb_s']:.0f};"
+        f"restore_mb_s={s['restore_mb_s']:.0f}",
+        f"recovery/wal,{1e6 / w['append_batches_s']:.0f},"
+        f"append_rows_s={w['append_rows_s']:.0f};"
+        f"append_mb_s={w['append_mb_s']:.1f};"
+        f"scan_records_s={w['scan_records_s']:.0f}",
+        f"recovery/open,{o['recover_open_s'] * 1e6:.0f},"
+        f"replayed_rows_s={o['replayed_rows_s']:.0f};"
+        f"recover_vs_update={o['recover_vs_update']:.2f}",
+    ]
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -8,9 +8,8 @@ import time
 import numpy as np
 
 from benchmarks.common import bench_cfg, posting_stats, recall_at, timed_search
-from repro.core.index import SPFreshIndex
+from repro import api
 from repro.data.vectors import UpdateWorkload
-from repro.serve.engine import EngineConfig, ServeEngine
 
 
 def run(quick: bool = True) -> list[str]:
@@ -22,8 +21,12 @@ def run(quick: bool = True) -> list[str]:
                         ("skew", UpdateWorkload.spacev)):
         wl = maker(n=n, dim=16, rate=rate, seed=21)
         vecs, _ = wl.live_vectors()
-        idx = SPFreshIndex.build(bench_cfg(num_blocks=16384), vecs)
-        engine = ServeEngine(idx, EngineConfig(fg_bg_ratio=2, maintain_budget=16))
+        service = api.open(api.ServiceSpec(
+            index=api.IndexSpec(config=bench_cfg(num_blocks=16384)),
+            serve=api.ServeSpec(fg_bg_ratio=2),
+            maintenance=api.MaintenanceSpec(maintain_budget=16),
+        ), vectors=vecs)
+        idx, engine = service.index, service.engine
         recalls, p99s = [], []
         n_upd = 0
         t0 = time.perf_counter()

@@ -7,10 +7,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import bench_cfg, posting_stats, recall_at, timed_search
-from repro.core.index import SPFreshIndex
+from repro import api
 from repro.data.vectors import UpdateWorkload
-from repro.serve.engine import EngineConfig, ServeEngine
-from repro.serve.policy import RatioPolicy
 
 
 def simulate(workload: UpdateWorkload, *, spfresh: bool, epochs: int) -> dict:
@@ -19,11 +17,12 @@ def simulate(workload: UpdateWorkload, *, spfresh: bool, epochs: int) -> dict:
         enable_split=False, enable_merge=False, enable_reassign=False,
     )
     vecs, ids = workload.live_vectors()
-    idx = SPFreshIndex.build(cfg, vecs)
-    engine = ServeEngine(
-        idx, EngineConfig(search_k=10, max_batch=256),
-        policy=RatioPolicy(ratio=2, budget=16),
-    )
+    service = api.open(api.ServiceSpec(
+        index=api.IndexSpec(config=cfg),
+        serve=api.ServeSpec(search_k=10, max_batch=256, fg_bg_ratio=2),
+        maintenance=api.MaintenanceSpec(maintain_budget=16),
+    ), vectors=vecs)
+    idx, engine = service.index, service.engine
 
     series = []
     for _ in range(epochs):

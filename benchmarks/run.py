@@ -27,6 +27,7 @@ BENCHES = [
     ("pipeline", "benchmarks.bench_pipeline_balance"),   # Fig. 12
     ("rebuild_cost", "benchmarks.bench_rebuild_cost"),   # Table 1
     ("maintenance", "benchmarks.bench_maintenance"),     # batched rounds
+    ("recovery", "benchmarks.bench_recovery"),           # §4.4 durability
     ("kernels", "benchmarks.bench_kernels"),             # hot-path micro
     ("search_path", "benchmarks.bench_search_path"),     # scan data paths
     ("roofline", "benchmarks.roofline_report"),          # §Roofline summary
@@ -42,11 +43,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable report to PATH and exit")
-    ap.add_argument("--report", choices=["auto", "search", "maintenance"],
+    ap.add_argument("--report",
+                    choices=["auto", "search", "maintenance", "recovery"],
                     default="auto",
                     help="which --json report to write; 'auto' picks "
                          "maintenance for paths containing 'update'/'maint', "
-                         "else search")
+                         "recovery for 'recover', else search")
     args = ap.parse_args()
 
     if args.json:
@@ -55,8 +57,24 @@ def main() -> None:
         base = os.path.basename(args.json).lower()
         which = args.report
         if which == "auto":
-            which = ("maintenance" if "update" in base or "maint" in base
-                     else "search")
+            if "update" in base or "maint" in base:
+                which = "maintenance"
+            elif "recover" in base:
+                which = "recovery"
+            else:
+                which = "search"
+        if which == "recovery":
+            from benchmarks.bench_recovery import run_json
+
+            report = run_json(quick=not args.full)
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            rec = report["recovery"]
+            print(f"# wrote {args.json}: "
+                  f"replayed_rows_s={rec['replayed_rows_s']:.0f} "
+                  f"recover_open_s={rec['recover_open_s']:.2f}s "
+                  f"snapshot_write_mb_s={report['snapshot']['write_mb_s']:.0f}")
+            return
         if which == "maintenance":
             from benchmarks.bench_maintenance import run_json
 

@@ -1,5 +1,6 @@
-"""Quickstart: build a SPFresh index, search it, stream updates through
-LIRE, snapshot + crash-recover.
+"""Quickstart: open a SPFresh *service*, search it, stream updates
+through LIRE, checkpoint, crash, and recover — all through the unified
+``spfresh.open(ServiceSpec)`` API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import LireConfig, SPFreshIndex
+import spfresh
+from repro.core import LireConfig
 from repro.data import make_sift_like
 
 
@@ -19,45 +21,55 @@ def main() -> None:
     dim = 16
     base = make_sift_like(5000, dim, seed=0)
 
-    cfg = LireConfig(
-        dim=dim, block_size=8, max_blocks_per_posting=8, num_blocks=8192,
-        num_postings_cap=1024, num_vectors_cap=65536,
-        split_limit=48, merge_limit=6, reassign_range=8, replica_count=2,
-        nprobe=8,
+    # ONE spec describes the whole service: index geometry, serving,
+    # scan path, maintenance, durability, sharding.  Add ``.with_shards(4)``
+    # and the same spec serves a 4-shard mesh.
+    spec = spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=LireConfig(
+            dim=dim, block_size=8, max_blocks_per_posting=8, num_blocks=8192,
+            num_postings_cap=1024, num_vectors_cap=65536,
+            split_limit=48, merge_limit=6, reassign_range=8, replica_count=2,
+            nprobe=8,
+        )),
+        serve=spfresh.ServeSpec(search_k=5),
+        durability=spfresh.DurabilitySpec(root=tempfile.mkdtemp()),
     )
 
-    tmp = tempfile.mkdtemp()
-    wal = os.path.join(tmp, "wal.log")
-    index = SPFreshIndex.build(cfg, base, wal_path=wal)
-    print(f"built: {index.stats()['n_postings']} postings over {len(base)} vectors")
+    service = spfresh.open(spec, vectors=base)
+    print(f"opened: {service.stats()['n_postings']} postings over "
+          f"{len(base)} vectors (durable root, open-time snapshot written)")
 
     # --- search ---
-    queries = base[:5] + 0.01 * np.random.default_rng(1).normal(size=(5, dim)).astype(np.float32)
-    dists, ids = index.search(queries, k=5)
+    queries = base[:5] + 0.01 * np.random.default_rng(1).normal(
+        size=(5, dim)).astype(np.float32)
+    dists, ids = service.search(queries, k=5)
     print("top-5 of query 0:", ids[0].tolist())
 
-    # --- streaming updates (in-place, no rebuild) ---
+    # --- streaming updates (in-place, no rebuild; WAL'd per dispatch) ---
     rng = np.random.default_rng(2)
     new_vecs = (base[0] + 0.02 * rng.normal(size=(200, dim))).astype(np.float32)
     new_ids = np.arange(10000, 10200, dtype=np.int32)
-    index.insert(new_vecs, new_ids)      # foreground Updater (backpressured)
-    index.delete(np.arange(10, 20, dtype=np.int32))  # tombstones
-    steps = index.maintain()             # background Local Rebuilder (LIRE)
-    st = index.stats()
-    print(f"maintain: {steps} steps, {st['n_splits']} splits, "
+    service.insert(new_vecs, new_ids)    # foreground Updater (backpressured)
+    service.delete(np.arange(10, 20, dtype=np.int32))  # tombstones
+    jobs = service.drain()               # background Local Rebuilder (LIRE)
+    st = service.stats()
+    print(f"maintain: {jobs} jobs, {st['n_splits']} splits, "
           f"{st['n_reassigned']} reassigned "
           f"(checked {st['n_reassign_checked']})")
 
-    _, ids = index.search(new_vecs[:3], k=3)
-    print("fresh vectors recalled:", [int(i) in ids[j] for j, i in enumerate(new_ids[:3])])
+    _, ids = service.search(new_vecs[:3], k=3)
+    print("fresh vectors recalled:",
+          [int(i) in ids[j] for j, i in enumerate(new_ids[:3])])
 
-    # --- crash recovery: snapshot + WAL replay ---
-    snap = os.path.join(tmp, "snap")
-    index.snapshot(snap)
-    index.insert(new_vecs[:50], np.arange(20000, 20050, dtype=np.int32))
-    recovered = SPFreshIndex.restore(snap, cfg, wal_path=wal)
+    # --- crash recovery: checkpoint, update, "crash", reopen ---
+    service.checkpoint()                 # snapshot + WAL truncate
+    service.insert(new_vecs[:50], np.arange(20000, 20050, dtype=np.int32))
+    # no close(): the post-checkpoint inserts live only in the WAL
+    recovered = spfresh.open(spec)       # snapshot + WAL replay
+    print("recovered:", recovered.recovered)
     _, ids2 = recovered.search(new_vecs[:1], k=5)
-    print("recovered index answers queries:", ids2[0].tolist())
+    print("recovered service answers queries:", ids2[0].tolist())
+    recovered.close()
 
 
 if __name__ == "__main__":

@@ -72,11 +72,18 @@ def main() -> None:
     print(f"fresh items now appearing in top-10s: {fresh}")
 
     # --- the serving pipeline in front of the corpus ---
-    from repro.serve.engine import EngineConfig
+    # attach_engine accepts a ServiceSpec: the serve/scan/maintenance
+    # sub-specs compile to the pipeline config (the preferred surface).
+    import spfresh
     from repro.serve.policy import BacklogPolicy
 
     engine = retriever.attach_engine(
-        EngineConfig(search_k=10, max_batch=128),
+        spfresh.ServiceSpec(
+            index=spfresh.IndexSpec(config=index_cfg),
+            serve=spfresh.ServeSpec(search_k=10, max_batch=128,
+                                    policy="backlog"),
+            maintenance=spfresh.MaintenanceSpec(maintain_budget=16),
+        ),
         policy=BacklogPolicy(threshold=1, budget=16),
     )
     t0 = time.perf_counter()

@@ -12,9 +12,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import LireConfig, SPFreshIndex
+import spfresh
+from repro.core import LireConfig
 from repro.data import UpdateWorkload
-from repro.serve.engine import EngineConfig, ServeEngine
 
 
 def main() -> None:
@@ -24,17 +24,19 @@ def main() -> None:
     args = ap.parse_args()
 
     wl = UpdateWorkload.spacev(n=args.n, dim=16, rate=0.01, seed=0)
-    cfg = LireConfig(
-        dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=16384,
-        num_postings_cap=2048, num_vectors_cap=131072,
-        split_limit=48, merge_limit=6, reassign_range=8, replica_count=2,
-        nprobe=8,
+    spec = spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=LireConfig(
+            dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=16384,
+            num_postings_cap=2048, num_vectors_cap=131072,
+            split_limit=48, merge_limit=6, reassign_range=8, replica_count=2,
+            nprobe=8,
+        )),
+        serve=spfresh.ServeSpec(search_k=10, fg_bg_ratio=2),
+        maintenance=spfresh.MaintenanceSpec(maintain_budget=16),
     )
     vecs, _ = wl.live_vectors()
-    engine = ServeEngine(
-        SPFreshIndex.build(cfg, vecs),
-        EngineConfig(search_k=10, fg_bg_ratio=2, maintain_budget=16),
-    )
+    service = spfresh.open(spec, vectors=vecs)
+    engine = service.engine
     print(f"day | recall@10 | search p99 (ms) | postings | splits | reassigned")
     for day in range(args.epochs):
         del_vids, ins_vecs, ins_vids = wl.epoch()

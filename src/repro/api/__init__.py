@@ -1,0 +1,22 @@
+"""Unified service API: ``spfresh.open(ServiceSpec) -> Service``.
+
+One frozen spec describes the whole service (index geometry, scan data
+path, micro-batching, maintenance, durability, sharding); ``open``
+compiles it into a durable serving handle over the single-host or the
+N-shard backend.  `import spfresh` re-exports this module.
+"""
+from repro.api.service import Service, open  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    DurabilitySpec,
+    IndexSpec,
+    MaintenanceSpec,
+    ScanSpec,
+    ServeSpec,
+    ServiceSpec,
+    ShardSpec,
+)
+
+__all__ = [
+    "DurabilitySpec", "IndexSpec", "MaintenanceSpec", "ScanSpec",
+    "ServeSpec", "Service", "ServiceSpec", "ShardSpec", "open",
+]

@@ -1,0 +1,324 @@
+"""`spfresh.open(spec)` — one durable serving lifecycle over both backends.
+
+``open`` compiles a :class:`~repro.api.spec.ServiceSpec` into a running
+:class:`Service`: it builds (or crash-recovers) the index, stands the
+micro-batched ServeEngine in front of it, and wires the durability
+lifecycle (per-shard WAL + snapshot checkpoints) into the backend.
+
+Lifecycle::
+
+    open(spec, vectors=...)           # fresh build; durable roots get an
+                                      #   open-time snapshot (the build's
+                                      #   durability point) + empty WALs
+    svc.search / insert / delete      # updates are WAL-appended per
+                                      #   dispatch before they run
+    svc.checkpoint()                  # flush + atomic snapshot stamping
+                                      #   per-shard wal_seqnos + WAL trunc
+    svc.close()                       # flush (+ final checkpoint)
+
+    open(spec)                        # after a crash: latest snapshot +
+                                      #   per-shard WAL replay through the
+                                      #   backend's own jitted dispatches
+
+Replay is bit-deterministic: the WAL records *dispatches* (padded arrays,
+masks, maintenance rounds) rather than requests, and every dispatch is a
+pure function of (state, batch) — so a recovered service answers queries
+exactly like the uncrashed one, on the single-host backend and the
+N-shard mesh alike.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api.spec import ServiceSpec
+from repro.core.index import SPFreshIndex
+from repro.core.types import make_empty_state
+from repro.serve.engine import LocalBackend, ServeEngine
+from repro.storage.durability import check_replay_config
+from repro.storage.snapshot import (
+    load_snapshot, read_manifest, snapshot_exists,
+)
+from repro.storage.wal import WalSet
+
+
+class Service:
+    """A running SPFresh service: the stable serving surface.
+
+    Thin by design — all state transitions live in the backend's jitted
+    dispatches; the service owns the lifecycle (queue flush, checkpoint
+    cadence, close) and the spec that created it.
+    """
+
+    def __init__(
+        self,
+        spec: ServiceSpec,
+        engine: ServeEngine,
+        *,
+        initial_handles: np.ndarray | None = None,
+        recovered: bool = False,
+    ):
+        self.spec = spec
+        self.engine = engine
+        self.initial_handles = initial_handles
+        self.recovered = recovered
+        self._updates_since_ckpt = 0
+        self._closed = False
+
+    # ------------------------------ serving ----------------------------
+    @property
+    def backend(self):
+        return self.engine.backend
+
+    @property
+    def index(self) -> SPFreshIndex | None:
+        """The single-host index (None on the sharded backend)."""
+        return self.engine.index
+
+    def search(
+        self, queries: np.ndarray, *, k: int | None = None,
+        nprobe: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        return self.engine.search(queries, k=k, nprobe=nprobe)
+
+    def insert(
+        self, vecs: np.ndarray, vids: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Returns ``(ids, landed)``.  The sharded backend assigns its own
+        (shard, slot) handles — pass ``vids=None`` there; the local
+        backend keys the version map by caller vids, so they're required."""
+        vecs = np.asarray(vecs, np.float32)
+        if vids is None:
+            if not self.spec.sharded:
+                raise ValueError("the local backend requires caller vids")
+            vids = np.full(len(vecs), -1, np.int32)
+        ids, landed = self.engine.submit_insert(vecs, vids).result()
+        self._note_updates(len(vecs))
+        return ids, landed
+
+    def delete(self, vids: np.ndarray) -> None:
+        vids = np.asarray(vids, np.int32)
+        self.engine.delete(vids)
+        self._note_updates(len(vids))
+
+    def maintain(self, jobs: int | None = None) -> int:
+        """One explicit Local-Rebuilder round (background slots also run
+        under the engine's MaintenancePolicy)."""
+        self.flush()
+        return self.backend.maintain(jobs or self.engine.policy.budget)
+
+    def drain(self) -> int:
+        """Flush the queue and run the rebuilder to quiescence."""
+        return self.engine.drain()
+
+    # ----------------------------- lifecycle ---------------------------
+    @property
+    def durable(self) -> bool:
+        return self.spec.durability.enabled
+
+    def flush(self) -> int:
+        """Process every queued micro-batch; returns batches pumped."""
+        return self.engine.pump()
+
+    def checkpoint(self) -> None:
+        """Flush, then commit an atomic snapshot stamping each shard's
+        applied WAL seqno; the WALs restart empty after the commit."""
+        if not self.durable:
+            raise RuntimeError("checkpoint() on a service with no "
+                               "DurabilitySpec root")
+        self.flush()
+        self.backend.checkpoint(self.spec.durability.resolved_snapshot_dir())
+        self._updates_since_ckpt = 0
+
+    def _note_updates(self, rows: int) -> None:
+        self._updates_since_ckpt += rows
+        every = self.spec.durability.checkpoint_every
+        if self.durable and every > 0 and self._updates_since_ckpt >= every:
+            self.checkpoint()
+
+    def close(self) -> None:
+        """Flush, optionally checkpoint (DurabilitySpec.checkpoint_on_close),
+        and release the WAL file handles.  Idempotent."""
+        if self._closed:
+            return
+        self.flush()
+        if self.durable and self.spec.durability.checkpoint_on_close:
+            self.checkpoint()
+        self.backend.close()
+        self._closed = True
+
+    def __enter__(self) -> "Service":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------- observability ------------------------
+    def report(self) -> dict:
+        rep = self.engine.report()
+        rep["durability"] = {
+            "durable": self.durable,
+            "recovered": self.recovered,
+            "wal_seqnos": (
+                self.backend.wal_seqnos() if self.durable else None
+            ),
+            "updates_since_checkpoint": self._updates_since_ckpt,
+        }
+        return rep
+
+    def stats(self) -> dict:
+        return self.engine.stats()
+
+    def backlog(self) -> int:
+        return self.backend.backlog()
+
+
+# ---------------------------------------------------------------------------
+# open()
+# ---------------------------------------------------------------------------
+
+def _make_mesh(spec: ServiceSpec):
+    import jax
+
+    n = spec.shards.n_shards
+    if len(spec.shards.shard_axes) != 1:
+        raise ValueError(
+            "spfresh.open builds single-axis meshes; pass mesh= for "
+            f"multi-axis shard_axes {spec.shards.shard_axes}"
+        )
+    return jax.make_mesh((n,), spec.shards.shard_axes)
+
+
+def _local_backend(spec: ServiceSpec, index: SPFreshIndex) -> LocalBackend:
+    return LocalBackend(
+        index,
+        probe_chunk=spec.scan.probe_chunk,
+        use_pallas_scan=spec.scan.use_pallas_scan,
+        scan_schedule=spec.scan.scan_schedule,
+    )
+
+
+def open(
+    spec: ServiceSpec,
+    *,
+    vectors: np.ndarray | None = None,
+    mesh=None,
+    fresh: bool = False,
+) -> Service:
+    """Open a SPFresh service described by ``spec``.
+
+    * With a durable root whose snapshot exists: **recover** — load the
+      snapshot, replay each shard's WAL tail through the backend, and
+      resume serving (``vectors`` is ignored; the snapshot is truth).
+    * Otherwise **build** from ``vectors`` (required); durable roots get
+      an open-time checkpoint so the offline build itself survives a
+      crash before the first explicit ``checkpoint()``.
+
+    ``fresh=True`` forces the build path even when a snapshot exists —
+    the durable root's previous contents are superseded by the new
+    open-time checkpoint (a rebuild, not a recovery).
+
+    The same spec (modulo :class:`ShardSpec`) opens a local service or an
+    N-shard mesh service; ``mesh`` overrides the auto-built single-axis
+    mesh (it must match ``spec.shards``).
+    """
+    spec.validate()
+    cfg = spec.lire_config()
+    dur = spec.durability
+    n_shards = spec.shards.n_shards
+    can_recover = (dur.enabled and not fresh
+                   and snapshot_exists(dur.resolved_snapshot_dir()))
+    if fresh and vectors is None:
+        raise ValueError("fresh=True requires vectors to build from")
+    if can_recover:
+        # Validate the stamped config BEFORE building templates: a
+        # geometry drift (e.g. the launcher re-run with different sizing
+        # flags) must fail with field names, not a leaf-shape mismatch.
+        check_replay_config(
+            read_manifest(dur.resolved_snapshot_dir()), cfg,
+            n_shards=n_shards,
+        )
+
+    initial_handles: np.ndarray | None = None
+    recovered = False
+    if not can_recover and vectors is None:
+        raise FileNotFoundError(
+            "no snapshot to recover and no vectors to build"
+        )
+
+    if spec.sharded:
+        from repro.distributed.sharded_index import ShardedIndex
+
+        mesh = mesh or _make_mesh(spec)
+        kwargs = dict(
+            shard_axes=spec.shards.shard_axes,
+            probe_chunk=spec.scan.probe_chunk,
+            use_pallas_scan=spec.scan.use_pallas_scan,
+            scan_schedule=spec.scan.scan_schedule,
+            jobs_per_round=cfg.jobs_per_round,
+        )
+        if can_recover:
+            backend, manifest = ShardedIndex.restore(
+                mesh, cfg, dur.resolved_snapshot_dir(), n_shards, **kwargs
+            )
+            recovered = True
+        else:
+            backend, initial_handles = ShardedIndex.build(
+                mesh, cfg, np.asarray(vectors, np.float32), n_shards,
+                seed=spec.index.seed, **kwargs
+            )
+    else:
+        if can_recover:
+            template = make_empty_state(cfg)
+            state, manifest = load_snapshot(
+                dur.resolved_snapshot_dir(), template
+            )
+            backend = _local_backend(spec, SPFreshIndex(state))
+            recovered = True
+        else:
+            index = SPFreshIndex.build(
+                cfg, np.asarray(vectors, np.float32), seed=spec.index.seed
+            )
+            initial_handles = np.arange(len(vectors), dtype=np.int64)
+            backend = _local_backend(spec, index)
+
+    if dur.enabled:
+        wal_set = WalSet(dur.resolved_wal_dir(), n_shards)
+        if recovered:
+            records = wal_set.recover_records()
+            after = min(manifest.get("extra", {}).get("wal_seqnos", [-1]))
+            # The checkpoint truncated the logs: seqno numbering must
+            # resume ABOVE the manifest stamp, or the next recovery would
+            # skip fresh acknowledged records as already-applied.
+            wal_set.ensure_seqno_floor(after)
+            backend.attach_durability(wal_set, applied_seqno=after)
+            backend.replay(records, after_seqno=after)
+        else:
+            # Fresh build over a durable root.  Leftover WAL records from
+            # a previous incarnation are NOT truncated here: the open-time
+            # checkpoint below drops them only AFTER its snapshot commits,
+            # so a crash anywhere in this window still recovers the
+            # previous incarnation intact (old snapshot + old WAL).
+            backend.attach_durability(wal_set)
+            if not dur.snapshot_on_open and (
+                snapshot_exists(dur.resolved_snapshot_dir())
+                or any(s >= 0 for s in wal_set.last_seqnos())
+            ):
+                raise ValueError(
+                    "refusing to rebuild over a non-empty durable root "
+                    "with snapshot_on_open=False: the old snapshot/WAL "
+                    "would later recover mixed with the new build's "
+                    "records (use fresh=True with snapshot_on_open=True, "
+                    "or point DurabilitySpec at a clean root)"
+                )
+
+    engine = ServeEngine(backend, spec.engine_config())
+    svc = Service(
+        spec, engine, initial_handles=initial_handles, recovered=recovered
+    )
+    if dur.enabled and not recovered and dur.snapshot_on_open:
+        # The offline build is not in the WAL; snapshot it so a crash
+        # before the first checkpoint still recovers to a served state
+        # (checkpoint also truncates any previous incarnation's WAL —
+        # strictly after the new snapshot commits).
+        svc.checkpoint()
+    return svc

@@ -1,0 +1,216 @@
+"""ServiceSpec — the one declarative description of a SPFresh service.
+
+Every knob the repo grew across `LireConfig`, `EngineConfig`,
+`ShardedIndex.__init__` kwargs, and `launch.serve` flags lives in exactly
+one frozen sub-spec here; `spfresh.open(spec)` compiles the spec into a
+running :class:`~repro.api.service.Service` over either backend.  Adding a
+knob is now a one-file change: extend the sub-spec, consume it in
+``lire_config()`` / ``engine_config()`` — nothing else threads it.
+
+Sub-specs (all frozen dataclasses, composable with ``dataclasses.replace``):
+
+  * :class:`IndexSpec`       — the LIRE protocol + storage geometry
+                               (wraps :class:`~repro.core.types.LireConfig`)
+  * :class:`ScanSpec`        — the Pallas posting-scan data path flags
+  * :class:`ServeSpec`       — micro-batching + maintenance policy
+                               (compiles to ``EngineConfig``)
+  * :class:`MaintenanceSpec` — Local-Rebuilder round shape / budget
+  * :class:`DurabilitySpec`  — WAL dir, snapshot dir, checkpoint cadence
+  * :class:`ShardSpec`       — mesh geometry for the sharded backend
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.core.types import LireConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Index geometry + LIRE protocol parameters.
+
+    ``config`` is the full :class:`LireConfig`; ``seed`` seeds the offline
+    SPANN build.  Scan/maintenance fields of the config are *defaults* —
+    the sibling :class:`ScanSpec` / :class:`MaintenanceSpec` override them
+    (``ServiceSpec.lire_config()`` folds everything into one config).
+    """
+
+    config: LireConfig = LireConfig()
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanSpec:
+    """Posting-scan data path (PR 2's flags, spec-ified).
+
+    ``None`` means "defer to ``IndexSpec.config``" for the tri-state
+    flags; ``probe_chunk`` is an engine-side knob (oracle path only).
+    """
+
+    probe_chunk: int = 0
+    use_pallas_scan: bool | None = None
+    scan_schedule: str | None = None       # "per_query" | "batched" | None
+    scan_page_budget: int | None = None
+    pallas_interpret: bool | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Micro-batching + maintenance scheduling (compiles to EngineConfig)."""
+
+    search_k: int = 10
+    nprobe: int | None = None
+    max_batch: int = 256
+    min_bucket: int = 8
+    policy: str = "ratio"                  # "ratio" | "backlog"
+    fg_bg_ratio: int = 2
+    backlog_threshold: int = 1
+    max_insert_retries: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceSpec:
+    """Local-Rebuilder round shape.  ``None`` defers to IndexSpec.config."""
+
+    jobs_per_round: int | None = None      # split/merge jobs per fused round
+    merge_fanout: int | None = None
+    reassign_budget: int | None = None
+    maintain_budget: int | None = None     # jobs per background SLOT
+                                           # (None -> jobs_per_round)
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilitySpec:
+    """Crash-recovery lifecycle: per-shard WAL + snapshot checkpoints.
+
+    ``root=None`` disables durability (an ephemeral service).  With a
+    root, every update dispatch is WAL-appended (fsync'd) before it runs,
+    ``checkpoint()`` writes an atomic snapshot stamping each shard's
+    applied WAL seqno and truncates the logs, and ``spfresh.open`` replays
+    snapshot + WAL tails.  ``checkpoint_every=N`` auto-checkpoints after
+    every N update rows (0 = manual/close only).
+    """
+
+    root: str | None = None
+    wal_dir: str | None = None             # default: <root>/wal
+    snapshot_dir: str | None = None        # default: <root>/snapshot
+    checkpoint_every: int = 0
+    snapshot_on_open: bool = True          # durability point for the build
+    checkpoint_on_close: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.root or (self.wal_dir and self.snapshot_dir))
+
+    def resolved_wal_dir(self) -> str:
+        assert self.enabled
+        return self.wal_dir or os.path.join(self.root, "wal")
+
+    def resolved_snapshot_dir(self) -> str:
+        assert self.enabled
+        return self.snapshot_dir or os.path.join(self.root, "snapshot")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Mesh geometry.  ``n_shards=1`` selects the single-host backend."""
+
+    n_shards: int = 1
+    shard_axes: tuple[str, ...] = ("model",)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """The whole service, declaratively.  See ``spfresh.open``."""
+
+    index: IndexSpec = IndexSpec()
+    serve: ServeSpec = ServeSpec()
+    scan: ScanSpec = ScanSpec()
+    maintenance: MaintenanceSpec = MaintenanceSpec()
+    durability: DurabilitySpec = DurabilitySpec()
+    shards: ShardSpec = ShardSpec()
+
+    # ------------------------------------------------------------------
+    @property
+    def sharded(self) -> bool:
+        return self.shards.n_shards > 1
+
+    def lire_config(self) -> LireConfig:
+        """IndexSpec.config with the scan/maintenance overrides folded in —
+        the ONE config both backends and every jitted step see."""
+        over: dict = {}
+        s, m = self.scan, self.maintenance
+        for field, value in (
+            ("use_pallas_scan", s.use_pallas_scan),
+            ("scan_schedule", s.scan_schedule),
+            ("scan_page_budget", s.scan_page_budget),
+            ("pallas_interpret", s.pallas_interpret),
+            ("jobs_per_round", m.jobs_per_round),
+            ("merge_fanout", m.merge_fanout),
+            ("reassign_budget", m.reassign_budget),
+        ):
+            if value is not None:
+                over[field] = value
+        cfg = dataclasses.replace(self.index.config, **over) if over \
+            else self.index.config
+        cfg.validate()
+        return cfg
+
+    def engine_config(self):
+        """Compile serve+scan+maintenance into the pipeline's EngineConfig."""
+        from repro.serve.engine import EngineConfig
+
+        cfg = self.lire_config()
+        sv, sc, mt = self.serve, self.scan, self.maintenance
+        return EngineConfig(
+            search_k=sv.search_k,
+            nprobe=sv.nprobe,
+            probe_chunk=sc.probe_chunk,
+            use_pallas_scan=sc.use_pallas_scan,
+            scan_schedule=sc.scan_schedule,
+            max_batch=sv.max_batch,
+            min_bucket=sv.min_bucket,
+            policy=sv.policy,
+            fg_bg_ratio=sv.fg_bg_ratio,
+            maintain_budget=(
+                mt.maintain_budget
+                if mt.maintain_budget is not None
+                else cfg.jobs_per_round
+            ),
+            backlog_threshold=sv.backlog_threshold,
+            max_insert_retries=sv.max_insert_retries,
+        )
+
+    def validate(self) -> None:
+        self.lire_config()  # folds + validates
+        assert self.shards.n_shards >= 1
+        assert self.serve.policy in ("ratio", "backlog"), self.serve.policy
+        assert self.durability.checkpoint_every >= 0
+        dur = self.durability
+        if dur.root is None and (dur.wal_dir is None) != (
+                dur.snapshot_dir is None):
+            # Half-configured durability would silently run ephemeral.
+            raise ValueError(
+                "DurabilitySpec needs BOTH wal_dir and snapshot_dir (or "
+                "just root); only one of them configures nothing"
+            )
+        if self.scan.scan_schedule is not None:
+            assert self.scan.scan_schedule in ("per_query", "batched")
+
+    # ------------------------------------------------------------------
+    def with_durability(self, root: str, **kw) -> "ServiceSpec":
+        """Convenience: the same service, durably rooted at ``root``."""
+        return dataclasses.replace(
+            self, durability=dataclasses.replace(
+                self.durability, root=root, **kw
+            )
+        )
+
+    def with_shards(self, n_shards: int, **kw) -> "ServiceSpec":
+        """Convenience: the same service over an ``n_shards`` mesh."""
+        return dataclasses.replace(
+            self, shards=dataclasses.replace(
+                self.shards, n_shards=n_shards, **kw
+            )
+        )

@@ -78,6 +78,37 @@ CONFIG_PAGED = dataclasses.replace(
 )
 
 
+# ---------------------------------------------------------------------------
+# Service specs — the deployable description of this architecture for
+# `spfresh.open` (the serving knobs that used to be hand-threaded through
+# EngineConfig/backend ctors live here, next to the geometry they tune).
+# ---------------------------------------------------------------------------
+
+def service_spec(*, paged: bool = True, smoke: bool = False,
+                 n_shards: int = 1, durable_root: str | None = None):
+    """The production ServiceSpec for spfresh-1b (or its smoke twin).
+
+    ``spfresh.open(service_spec(smoke=True), vectors=...)`` stands up a
+    runnable miniature of the billion-scale deployment; on real hardware
+    pass ``n_shards=256`` (single-pod) and a durable root per node.
+    """
+    import spfresh
+
+    base = SMOKE if smoke else (CONFIG_PAGED if paged else CONFIG)
+    return spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=base),
+        serve=spfresh.ServeSpec(
+            search_k=10, nprobe=base.nprobe, max_batch=SEARCH_Q,
+        ),
+        scan=spfresh.ScanSpec(probe_chunk=PROBE_CHUNK),
+        maintenance=spfresh.MaintenanceSpec(
+            jobs_per_round=base.jobs_per_round,
+        ),
+        durability=spfresh.DurabilitySpec(root=durable_root),
+        shards=spfresh.ShardSpec(n_shards=n_shards),
+    )
+
+
 def _shard_axes(multi_pod: bool):
     return ("pod", "data", "model") if multi_pod else ("data", "model")
 

@@ -33,6 +33,7 @@ from repro.core.clustering import balanced_kmeans
 from repro.core.index import build_state
 from repro.core.types import IndexState, LireConfig, make_empty_state
 from repro.core.distance import MASK_DISTANCE
+from repro.storage.durability import DurableBackend
 
 Array = jax.Array
 
@@ -423,7 +424,7 @@ def reshard(
 # ShardedIndex — the stateful handle the serving pipeline drives
 # ---------------------------------------------------------------------------
 
-class ShardedIndex:
+class ShardedIndex(DurableBackend):
     """Stacked sharded state + its jitted shard_map steps, behind the
     ServeEngine backend protocol (`repro.serve.engine.IndexBackend`).
 
@@ -431,6 +432,11 @@ class ShardedIndex:
     index; every op here is one dispatch of a cached shard_map executable,
     with the stacked state donated on updates.  Search/insert/delete use
     global (shard, slot) handles; ``shard_alive`` degrades dead shards.
+
+    Direct construction (the loose kwarg pile below) is deprecated as a
+    user surface: declare a :class:`repro.api.ServiceSpec` and let
+    ``spfresh.open`` build/recover the backend — that path also attaches
+    the durable lifecycle (per-shard WAL + snapshot checkpoints).
     """
 
     def __init__(
@@ -508,6 +514,10 @@ class ShardedIndex:
     ) -> tuple[np.ndarray, np.ndarray]:
         """Caller vids are ignored: the sharded index owns id assignment
         (global handle = shard * N_cap + slot).  Returns (handles, landed)."""
+        self._log("insert", {
+            "vecs": np.asarray(vecs, np.float32),
+            "valid": np.asarray(valid, bool),
+        })
         self.stacked, handles = self._insert_step(
             self.stacked, jnp.asarray(vecs), jnp.asarray(valid)
         )
@@ -516,18 +526,23 @@ class ShardedIndex:
 
     def delete(self, vids: np.ndarray, valid: np.ndarray) -> None:
         handles = np.where(np.asarray(valid), np.asarray(vids), -1)
+        self._log("delete", {"handles": np.asarray(handles, np.int32)})
         self.stacked = self._delete_step(
             self.stacked, jnp.asarray(handles, jnp.int32)
         )
 
     def log_update(self, op: str, payload: dict) -> None:
-        """No durable WAL on the sharded backend (yet) — updates are
-        deterministically replicated; crash recovery is snapshot-only."""
+        """Engine-level batch logging is a no-op here: the backend logs
+        every update DISPATCH itself (`_log`) when a WalSet is attached —
+        dispatch-level records make replay bit-deterministic (handles are
+        assigned inside the jitted step, so replaying the exact dispatch
+        stream reproduces them)."""
 
     def maintain(self, jobs: int) -> int:
         """One fused maintenance round: ``jobs`` split+merge jobs per
         shard, ONE dispatch (cached per jobs count), ONE did-work scalar
         read back.  Returns the max-over-shards jobs done."""
+        self._log("maintain", {"jobs": np.asarray(jobs, np.int32)})
         step = self._maintain_steps.get(jobs)
         if step is None:
             step = make_maintenance_round(
@@ -556,6 +571,70 @@ class ShardedIndex:
         lens = np.asarray(self.stacked.pool.posting_len)      # (M, P)
         valid = np.asarray(self.stacked.centroid_valid)       # (M, P)
         return int(((lens > self.cfg.split_limit) & valid).sum())
+
+    # ---------------------- durability lifecycle -----------------------
+    # Paper §4.4 promoted to the sharded backend (DurableBackend mixin):
+    # per-shard WAL append on every update dispatch, one atomic
+    # stacked-state snapshot stamping each shard's applied seqno, replay
+    # through the same shard_map'd steps on open — deterministic, so
+    # handles land exactly as pre-crash.  This closes the old
+    # "snapshot-only" gap.
+
+    @property
+    def _wal_shards(self) -> int:
+        return self.n_shards
+
+    def _snapshot_state(self):
+        return self.stacked
+
+    def _snapshot_extra(self):
+        return {"backend": "sharded", "n_shards": self.n_shards}
+
+    def _lire_config(self):
+        return self.cfg
+
+    def _apply_record(self, rec) -> None:
+        p = rec.payload
+        if rec.op == "insert":
+            self.insert(
+                p["vecs"], np.full(len(p["vecs"]), -1, np.int32),
+                p["valid"],
+            )
+        elif rec.op == "delete":
+            handles = p["handles"]
+            self.delete(handles, handles >= 0)
+        elif rec.op == "maintain":
+            self.maintain(int(p["jobs"]))
+        else:
+            raise ValueError(f"unknown WAL op {rec.op!r}")
+
+    @classmethod
+    def restore(
+        cls,
+        mesh: Mesh,
+        cfg: LireConfig,
+        snapshot_dir: str,
+        n_shards: int,
+        **kwargs: Any,
+    ) -> tuple["ShardedIndex", dict]:
+        """Load a stacked-state snapshot; returns (index, manifest).
+        WAL replay on top is the caller's move (`spfresh.open` wires
+        ``WalSet.recover_records`` → ``replay``)."""
+        from repro.storage.snapshot import load_snapshot
+
+        template = stack_states(
+            [make_empty_state(cfg) for _ in range(n_shards)]
+        )
+        stacked, manifest = load_snapshot(snapshot_dir, template)
+        extra = manifest.get("extra", {})
+        if extra.get("n_shards", n_shards) != n_shards:
+            raise ValueError(
+                f"snapshot has {extra['n_shards']} shards, want {n_shards}"
+            )
+        idx = cls(mesh, cfg, stacked, n_shards, **kwargs)
+        seqnos = extra.get("wal_seqnos", [-1])
+        idx._wal_applied = min(seqnos) if seqnos else -1
+        return idx, manifest
 
     def stats(self) -> dict:
         s = self.stacked.stats

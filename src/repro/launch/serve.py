@@ -1,11 +1,20 @@
-"""Serving launcher: stand up a SPFresh index and run a mixed
-search/update stream through the batched ServeEngine pipeline (the
-paper's §5.2 loop).  The same engine drives a single-host index or an
-N-shard mesh (fake CPU devices) — the tentpole claim, runnable:
+"""Serving launcher: stand up a SPFresh *service* and run a mixed
+search/update stream through it (the paper's §5.2 loop).
+
+Everything is driven through the unified service API: the flags compile
+into ONE :class:`~repro.api.ServiceSpec` and ``spfresh.open(spec)``
+serves a single-host index or an N-shard mesh (fake CPU devices) behind
+the same handle — with the durable lifecycle attached when ``--durable``
+is set:
 
     PYTHONPATH=src python -m repro.launch.serve --n 8000 --epochs 10 \
         --dataset spacev --rate 0.01 --policy ratio --ratio 2
     PYTHONPATH=src python -m repro.launch.serve --n 4000 --shards 4
+    # durable service: WAL every update, checkpoint every 2000 rows,
+    # then kill it and recover:
+    PYTHONPATH=src python -m repro.launch.serve --durable /tmp/svc \
+        --checkpoint-every 2000
+    PYTHONPATH=src python -m repro.launch.serve --durable /tmp/svc --recover
 """
 from __future__ import annotations
 
@@ -15,18 +24,9 @@ import os
 import numpy as np
 
 
-def _make_policy(args):
-    from repro.serve.policy import BacklogPolicy, RatioPolicy
-
-    jobs = args.maintain_jobs or args.budget
-    if args.policy == "backlog":
-        return BacklogPolicy(threshold=args.threshold, budget=jobs)
-    return RatioPolicy(ratio=args.ratio, budget=jobs)
-
-
-def _print_report(engine) -> None:
-    rep = engine.report()
-    q, m = rep["queue"], rep["maintenance"]
+def _print_report(service) -> None:
+    rep = service.report()
+    q, m, d = rep["queue"], rep["maintenance"], rep["durability"]
     print(f"policy={m['policy']} maint_slots={m['slots']} "
           f"maint_rounds={m['rounds']} maint_jobs={m['steps']} "
           f"maint_jps={m['steps_per_s']:.1f} "
@@ -34,11 +34,49 @@ def _print_report(engine) -> None:
     print(f"queue: batches={q['batches']} rows={q['rows']} "
           f"pad_waste={q['padding_waste_frac']:.3f} "
           f"depth_avg={q['depth_rows_avg']:.0f} depth_max={q['depth_rows_max']}")
+    if d["durable"]:
+        print(f"durability: recovered={d['recovered']} "
+              f"wal_seqnos={d['wal_seqnos']} "
+              f"since_ckpt={d['updates_since_checkpoint']}")
     for op in ("search", "insert", "delete"):
         p = rep[op]
         if p:
             print(f"{op}: p50={p['p50_ms']:.1f}ms p99={p['p99_ms']:.1f}ms "
                   f"n={p['n']}")
+
+
+def build_spec(args):
+    """Compile the CLI flags into the ONE ServiceSpec (the old launcher
+    threaded each knob positionally through LireConfig → EngineConfig →
+    backend ctor; every knob now has exactly one home)."""
+    import spfresh
+    from repro.core.types import LireConfig
+
+    jobs = args.maintain_jobs or args.budget
+    cfg = LireConfig(
+        dim=args.dim, block_size=8, max_blocks_per_posting=8,
+        num_blocks=max(8192, args.n // 2),
+        num_postings_cap=max(1024, args.n // 20),
+        num_vectors_cap=4 * args.n, split_limit=48, merge_limit=6,
+        reassign_range=8, replica_count=2, nprobe=args.nprobe,
+    )
+    return spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=cfg),
+        serve=spfresh.ServeSpec(
+            search_k=10, nprobe=args.nprobe, policy=args.policy,
+            fg_bg_ratio=args.ratio, backlog_threshold=args.threshold,
+        ),
+        scan=spfresh.ScanSpec(
+            probe_chunk=args.probe_chunk,
+            use_pallas_scan=None if args.scan == "oracle" else True,
+            scan_schedule=None if args.scan == "oracle" else args.scan,
+        ),
+        maintenance=spfresh.MaintenanceSpec(jobs_per_round=jobs),
+        durability=spfresh.DurabilitySpec(
+            root=args.durable, checkpoint_every=args.checkpoint_every,
+        ),
+        shards=spfresh.ShardSpec(n_shards=args.shards),
+    )
 
 
 def main() -> None:
@@ -49,7 +87,18 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=0.01)
     ap.add_argument("--dataset", choices=["spacev", "sift"], default="spacev")
     ap.add_argument("--nprobe", type=int, default=8)
-    ap.add_argument("--snapshot", default=None)
+    ap.add_argument("--durable", default=None, metavar="DIR",
+                    help="service root: per-shard WAL + snapshot "
+                         "checkpoints live under DIR (DurabilitySpec)")
+    ap.add_argument("--snapshot", default=None,
+                    help="legacy alias of --durable")
+    ap.add_argument("--recover", action="store_true",
+                    help="open-time recovery: restore the latest snapshot "
+                         "under --durable and replay the per-shard WALs "
+                         "instead of rebuilding")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                    help="auto-checkpoint (snapshot + WAL truncate) every "
+                         "N update rows (0 = only at exit)")
     ap.add_argument("--policy", choices=["ratio", "backlog"], default="ratio")
     ap.add_argument("--ratio", type=int, default=2,
                     help="fg update batches per bg slot (0 disables)")
@@ -71,6 +120,7 @@ def main() -> None:
                     help="posting-scan data path (per_query/batched = "
                          "Pallas paged kernels, interpret mode on CPU)")
     args = ap.parse_args()
+    args.durable = args.durable or args.snapshot
 
     if args.shards > 1:
         os.environ["XLA_FLAGS"] = (
@@ -78,91 +128,84 @@ def main() -> None:
             + os.environ.get("XLA_FLAGS", "")
         )
         os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    if args.recover and not args.durable:
+        raise SystemExit("--recover needs --durable DIR")
 
-    from repro.core import LireConfig, SPFreshIndex
+    import spfresh
     from repro.data import UpdateWorkload
-    from repro.serve.engine import EngineConfig, ServeEngine
 
-    maker = UpdateWorkload.spacev if args.dataset == "spacev" else UpdateWorkload.sift
+    spec = build_spec(args)
+    maker = (UpdateWorkload.spacev if args.dataset == "spacev"
+             else UpdateWorkload.sift)
     wl = maker(n=args.n, dim=args.dim, rate=args.rate, seed=0)
-    jobs = args.maintain_jobs or args.budget
-    cfg = LireConfig(
-        dim=args.dim, block_size=8, max_blocks_per_posting=8,
-        num_blocks=max(8192, args.n // 2), num_postings_cap=max(1024, args.n // 20),
-        num_vectors_cap=4 * args.n, split_limit=48, merge_limit=6,
-        reassign_range=8, replica_count=2, nprobe=args.nprobe,
-        jobs_per_round=jobs,
-    )
-    ecfg = EngineConfig(
-        search_k=10, nprobe=args.nprobe, probe_chunk=args.probe_chunk,
-        use_pallas_scan=None if args.scan == "oracle" else True,
-        scan_schedule=None if args.scan == "oracle" else args.scan,
-        maintain_budget=jobs,
-    )
-    vecs, _ = wl.live_vectors()
+
+    if args.recover:
+        service = spfresh.open(spec)
+        print(f"recovered service from {args.durable} "
+              f"(wal_seqnos={service.backend.wal_seqnos()})")
+    else:
+        # fresh=True: without --recover the launcher always builds from
+        # the workload — an existing durable root is superseded, never
+        # silently recovered with the freshly built vectors discarded.
+        vecs, _ = wl.live_vectors()
+        service = spfresh.open(spec, vectors=vecs, fresh=True)
+        if service.durable:
+            print(f"durable service at {args.durable} "
+                  f"(checkpoint_every={args.checkpoint_every or 'exit-only'})")
 
     if args.shards > 1:
-        import jax
-
-        from repro.distributed.sharded_index import ShardedIndex
-
-        mesh = jax.make_mesh((args.shards,), ("model",))
-        backend, handles = ShardedIndex.build(
-            mesh, cfg, vecs, args.shards, probe_chunk=args.probe_chunk,
-            use_pallas_scan=ecfg.use_pallas_scan,
-            scan_schedule=ecfg.scan_schedule,
-        )
-        engine = ServeEngine(backend, ecfg, policy=_make_policy(args))
         # workload vid -> global (shard, slot) handle, kept current so
-        # epoch deletes translate into sharded deletes
-        _, base_ids = wl.live_vectors()
-        vid2h = dict(zip(base_ids.tolist(), handles.tolist()))
+        # epoch deletes translate into sharded deletes.  After --recover
+        # the pre-crash handle map is gone: epoch deletes are skipped and
+        # the stream degrades to insert+search traffic.
+        vid2h = {}
+        if service.initial_handles is not None:
+            _, base_ids = wl.live_vectors()
+            vid2h = dict(zip(base_ids.tolist(),
+                             service.initial_handles.tolist()))
         print(f"serving {args.n} vectors over {args.shards} shards")
         print("epoch  p99_ms postings splits deletes")
         for epoch in range(args.epochs):
             dv, iv, ii = wl.epoch()
             dh = [vid2h.pop(int(v)) for v in dv if int(v) in vid2h]
-            engine.delete(np.asarray(dh, np.int32))
-            # sharded index assigns its own handles; vids are placeholders
-            t = engine.submit_insert(iv, np.full(len(iv), -1, np.int32))
-            new_h, landed = t.result()
+            service.delete(np.asarray(dh, np.int32))
+            # sharded service assigns its own handles
+            new_h, landed = service.insert(iv)
             vid2h.update(
                 (int(v), int(h))
                 for v, h, ok in zip(ii, new_h, landed) if ok
             )
             q, _gt = wl.queries(64)
-            engine.search(q)
-            lat = engine.latency_percentiles("search")
-            st = engine.stats()
+            service.search(q)
+            lat = service.engine.latency_percentiles("search")
+            st = service.stats()
             print(f"{epoch:5d} {lat.get('p99_ms', 0):7.1f} "
                   f"{st['n_postings']:8d} {st['n_splits']:6d} "
                   f"{len(dh):7d}")
-        engine.drain()
-        _print_report(engine)
+        service.drain()
+        _print_report(service)
+        service.close()
         return
 
-    engine = ServeEngine(
-        SPFreshIndex.build(cfg, vecs), ecfg, policy=_make_policy(args)
-    )
     print("epoch recall@10 p99_ms postings splits reassigned")
     for epoch in range(args.epochs):
         dv, iv, ii = wl.epoch()
-        engine.delete(dv.astype(np.int32))
-        engine.insert(iv, ii.astype(np.int32))
+        service.delete(dv.astype(np.int32))
+        service.insert(iv, ii.astype(np.int32))
         q, gt = wl.queries(64)
-        _, got = engine.search(q)
+        _, got = service.search(q)
         hits = sum(len(set(g.tolist()) & set(o.tolist()))
                    for g, o in zip(gt, got))
-        lat = engine.latency_percentiles("search")
-        st = engine.stats()
+        lat = service.engine.latency_percentiles("search")
+        st = service.stats()
         print(f"{epoch:5d} {hits / (len(q) * 10):9.3f} "
               f"{lat.get('p99_ms', 0):6.1f} {st['n_postings']:8d} "
               f"{st['n_splits']:6d} {st['n_reassigned']:10d}")
-    engine.drain()
-    _print_report(engine)
-    if args.snapshot:
-        engine.index.snapshot(args.snapshot)
-        print(f"snapshot written to {args.snapshot}")
+    service.drain()
+    _print_report(service)
+    service.close()
+    if service.durable:
+        print(f"service checkpointed under {args.durable}")
 
 
 if __name__ == "__main__":

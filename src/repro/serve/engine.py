@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.index import SPFreshIndex
 from repro.serve.policy import BacklogPolicy, MaintenancePolicy, RatioPolicy
+from repro.storage.durability import DurableBackend
 from repro.serve.queue import (
     DELETE, INSERT, SEARCH, MicroBatch, RequestQueue, Ticket, default_buckets,
 )
@@ -38,7 +39,11 @@ from repro.serve.queue import (
 # ---------------------------------------------------------------------------
 
 class IndexBackend(Protocol):
-    """What the engine needs from an index: fixed-shape batched ops."""
+    """What the engine needs from an index: fixed-shape batched ops, plus
+    the durable lifecycle (`spfresh.open` drives the last four — every
+    update dispatch is WAL-appended before it runs, `checkpoint` commits
+    an atomic snapshot stamping per-shard WAL seqnos, and `replay`
+    re-applies a WAL tail through the same jitted dispatches)."""
 
     def search(self, queries: np.ndarray, k: int, nprobe: int | None
                ) -> tuple[np.ndarray, np.ndarray]: ...
@@ -58,13 +63,32 @@ class IndexBackend(Protocol):
 
     def stats(self) -> dict: ...
 
+    # --- durability lifecycle (paper §4.4, promoted into the protocol) ---
 
-class LocalBackend:
+    def attach_durability(self, wal_set) -> None: ...
+
+    def checkpoint(self, snapshot_dir: str) -> None: ...
+
+    def replay(self, records, after_seqno: int = -1) -> int: ...
+
+    def close(self) -> None: ...
+
+
+class LocalBackend(DurableBackend):
     """Single-host SPFreshIndex behind the batched entry points.
 
     ``probe_chunk`` / ``use_pallas_scan`` / ``scan_schedule`` select the
     posting-scan data path for every search dispatch (engine knobs; the
     scan flags default to the index config when None).
+
+    With a :class:`~repro.storage.wal.WalSet` attached
+    (``attach_durability`` — `spfresh.open` does this), every update
+    DISPATCH (insert/delete/maintain/drain, with its padded arrays and
+    masks) is WAL-appended before it runs.  Because the jitted steps are
+    deterministic functions of (state, batch), replaying the dispatch
+    stream on top of a snapshot reproduces the index bit-for-bit —
+    including the engine's backpressure retries, whose interleaved
+    maintenance slots appear in the log at their true positions.
     """
 
     def __init__(
@@ -88,23 +112,37 @@ class LocalBackend:
         )
 
     def insert(self, vecs, vids, valid):
+        self._log("insert", {
+            "vecs": np.asarray(vecs, np.float32),
+            "vids": np.asarray(vids, np.int32),
+            "valid": np.asarray(valid, bool),
+        })
         landed = self.index.insert_padded(vecs, vids, valid)
         return np.asarray(vids), landed
 
     def delete(self, vids, valid):
+        self._log("delete", {
+            "vids": np.asarray(vids, np.int32),
+            "valid": np.asarray(valid, bool),
+        })
         self.index.delete_padded(vids, valid)
 
     def log_update(self, op, payload):
         """WAL-log a pipeline update batch (crash recovery, §4.4): the
         padded jit entry points bypass SPFreshIndex.insert/delete, so the
-        engine logs here — once per batch, before the first dispatch."""
+        engine logs here — once per batch, before the first dispatch.
+        Legacy request-level path (SPFreshIndex built with ``wal_path``);
+        the dispatch-level ``WalSet`` log supersedes it under
+        `spfresh.open`."""
         if self.index.wal is not None:
             self.index._wal_applied = self.index.wal.append(op, payload)
 
     def maintain(self, jobs):
+        self._log("maintain", {"jobs": np.asarray(jobs, np.int32)})
         return self.index.maintain_round(jobs)
 
     def drain(self):
+        self._log("drain", {})
         jobs = self.index.maintain()
         return jobs, self.index.last_drain_rounds
 
@@ -114,6 +152,34 @@ class LocalBackend:
     def stats(self):
         return self.index.stats()
 
+    # --------------- durability hooks (DurableBackend) -----------------
+    def _snapshot_state(self):
+        return self.index.state
+
+    def _snapshot_extra(self):
+        return {"backend": "local"}
+
+    def _lire_config(self):
+        return self.index.state.cfg
+
+    def _apply_record(self, rec) -> None:
+        p = rec.payload
+        if rec.op == "insert":
+            self.index.insert_padded(p["vecs"], p["vids"], p["valid"])
+        elif rec.op == "delete":
+            self.index.delete_padded(p["vids"], p["valid"])
+        elif rec.op == "maintain":
+            self.index.maintain_round(int(p["jobs"]))
+        elif rec.op == "drain":
+            self.index.maintain()
+        else:
+            raise ValueError(f"unknown WAL op {rec.op!r}")
+
+    def close(self) -> None:
+        super().close()
+        if self.index.wal is not None:
+            self.index.wal.close()
+
 
 # ---------------------------------------------------------------------------
 # Config + metrics
@@ -121,6 +187,12 @@ class LocalBackend:
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Pipeline knobs.  Deprecated as a user-facing surface: prefer
+    declaring a :class:`repro.api.ServiceSpec` (its serve/scan/
+    maintenance sub-specs compile to this via ``engine_config()``);
+    direct construction remains for the engine internals and one
+    release of back-compat."""
+
     search_k: int = 10
     nprobe: int | None = None
     # --- search data path (threaded into every search dispatch) ---

@@ -33,10 +33,19 @@ class IndexedRetriever:
     # ------------------------------------------------------------------
     def attach_engine(self, cfg=None, policy=None):
         """Serve this corpus through the batched pipeline; returns the
-        :class:`~repro.serve.engine.ServeEngine` (also kept on ``self``)."""
+        :class:`~repro.serve.engine.ServeEngine` (also kept on ``self``).
+
+        ``cfg`` may be an ``EngineConfig`` or a
+        :class:`~repro.api.ServiceSpec` — the spec is the preferred
+        surface (its serve/scan/maintenance sub-specs compile to the
+        engine config; the policy comes from the spec unless overridden).
+        """
+        from repro.api.spec import ServiceSpec
         from repro.serve.engine import EngineConfig, ServeEngine
 
         assert self.index is not None, "build_corpus first"
+        if isinstance(cfg, ServiceSpec):
+            cfg = cfg.engine_config()
         self.engine = ServeEngine(
             self.index, cfg or EngineConfig(), policy=policy
         )

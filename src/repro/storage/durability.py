@@ -1,0 +1,160 @@
+"""DurableBackend — the one durability lifecycle both index backends mix
+in (paper §4.4 promoted into the `IndexBackend` protocol).
+
+The lifecycle invariants live HERE exactly once: the not-while-replaying
+WAL logging guard, applied-seqno bookkeeping, checkpoint = snapshot
+(stamping per-shard ``wal_seqnos`` + the replay-critical ``lire_config``)
+then WAL truncate, and the replay loop that re-applies a dispatch stream
+through the subclass's ``_apply_record``.  Backends supply only what
+differs: the state pytree to snapshot, manifest extras, the per-op
+dispatch arms, and the shard count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.storage.snapshot import save_snapshot
+
+
+class DurableBackend:
+    """Mixin for backends with dispatch-level WAL + snapshot recovery.
+
+    Subclass hooks:
+      * ``_snapshot_state()``  — the pytree the checkpoint serializes
+      * ``_snapshot_extra()``  — backend-specific manifest fields
+      * ``_apply_record(rec)`` — re-run one WAL dispatch (replay arms)
+      * ``_wal_shards``        — logs in the WalSet (1 for local)
+      * ``_lire_config()``     — config stamped into the manifest
+    """
+
+    wal_set = None
+    _wal_applied = -1
+    _replaying = False
+
+    # ------------------------- subclass hooks --------------------------
+    def _snapshot_state(self):
+        raise NotImplementedError
+
+    def _snapshot_extra(self) -> dict:
+        return {}
+
+    def _apply_record(self, rec) -> None:
+        raise NotImplementedError
+
+    def _lire_config(self):
+        raise NotImplementedError
+
+    @property
+    def _wal_shards(self) -> int:
+        return 1
+
+    # ------------------------- the lifecycle ---------------------------
+    def _log(self, op: str, payload: dict) -> None:
+        if self.wal_set is not None and not self._replaying:
+            self._wal_applied = self.wal_set.append(op, payload)
+
+    def attach_durability(self, wal_set, applied_seqno: int | None = None,
+                          ) -> None:
+        """``applied_seqno`` is the seqno this backend's state already
+        reflects — the snapshot manifest stamp on recovery.  The default
+        (last durable record) is ONLY correct when the state genuinely
+        includes everything on disk (a fresh build about to checkpoint);
+        recovery paths must pass the stamp or a later checkpoint would
+        mark the unreplayed tail as applied."""
+        assert wal_set.n_shards == self._wal_shards, (
+            wal_set.n_shards, self._wal_shards,
+        )
+        self.wal_set = wal_set
+        self._wal_applied = (
+            applied_seqno if applied_seqno is not None
+            else wal_set.next_seqno - 1
+        )
+
+    def wal_seqnos(self) -> list[int]:
+        """Applied WAL seqno per shard (the snapshot manifest entry).
+        The snapshot is one atomic commit, so shards advance together."""
+        return [self._wal_applied] * self._wal_shards
+
+    def checkpoint(self, snapshot_dir: str) -> None:
+        """Atomic snapshot stamping the applied WAL seqnos and the
+        replay-critical config; the WALs restart empty only after the
+        snapshot commit."""
+        save_snapshot(
+            snapshot_dir, self._snapshot_state(),
+            extra={
+                "wal_seqnos": self.wal_seqnos(),
+                "lire_config": dataclasses.asdict(self._lire_config()),
+                **self._snapshot_extra(),
+            },
+        )
+        if self.wal_set is not None:
+            self.wal_set.truncate()
+
+    def replay(self, records, after_seqno: int = -1) -> int:
+        """Re-apply a WAL dispatch stream through the backend's own
+        jitted entry points; returns how many records were applied."""
+        n = 0
+        self._replaying = True
+        try:
+            for rec in records:
+                if rec.seqno <= after_seqno:
+                    continue
+                self._apply_record(rec)
+                self._wal_applied = rec.seqno
+                n += 1
+        finally:
+            self._replaying = False
+        return n
+
+    def close(self) -> None:
+        if self.wal_set is not None:
+            self.wal_set.close()
+
+
+# Geometry/protocol fields that must match between a snapshot and the
+# opening spec: they shape the state pytree or change update-dispatch
+# semantics, so replay under a different value is undefined.  Serving-side
+# knobs (nprobe, scan flags, jobs_per_round — the logged round records
+# carry their own job counts) may differ freely.
+REPLAY_CRITICAL_FIELDS = (
+    "dim", "block_size", "max_blocks_per_posting", "num_blocks",
+    "num_postings_cap", "num_vectors_cap", "vector_dtype",
+    "split_limit", "merge_limit", "merge_fanout",
+    "reassign_range", "reassign_budget", "replica_count", "replica_rng",
+    "kmeans_iters", "enable_split", "enable_merge", "enable_reassign",
+)
+
+
+def check_replay_config(manifest: dict, cfg, *, n_shards: int | None = None,
+                        ) -> None:
+    """Raise a clear error when a snapshot was written under a different
+    replay-critical config than the spec now opening it (e.g. the serve
+    launcher re-run with different sizing flags or a different
+    ``--shards``) — BEFORE template construction turns the drift into a
+    cryptic leaf-shape mismatch."""
+    extra = manifest.get("extra", {})
+    diffs = []
+    if n_shards is not None:
+        stamped_shards = extra.get("n_shards", 1)
+        if stamped_shards != n_shards:
+            diffs.append(
+                f"n_shards: snapshot={stamped_shards!r} spec={n_shards!r}"
+            )
+    stamped = extra.get("lire_config")
+    if stamped is None and not diffs:
+        return  # pre-stamp snapshot: nothing to validate against
+    if stamped is not None:
+        now = dataclasses.asdict(cfg)
+        diffs += [
+            f"{f}: snapshot={stamped[f]!r} spec={now[f]!r}"
+            for f in REPLAY_CRITICAL_FIELDS
+            if f in stamped and stamped[f] != now[f]
+        ]
+    if diffs:
+        raise ValueError(
+            "snapshot was written under a different index config; "
+            "recovery must reuse the original geometry/protocol "
+            "parameters (re-run with the original sizing flags or point "
+            "DurabilitySpec at a fresh root).  Mismatched fields:\n  "
+            + "\n  ".join(diffs)
+        )

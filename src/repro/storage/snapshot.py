@@ -29,11 +29,19 @@ _LEAVES = "leaves.npz"
 
 
 def save_snapshot(path: str, state: Any, *, step: int = 0, extra: dict | None = None) -> None:
+    """Crash-safe commit: write to a temp dir, rotate the previous
+    snapshot aside (``path + ".old"``), rename the new one in, then drop
+    the old.  At EVERY intermediate crash point either ``path`` or
+    ``path.old`` holds a complete snapshot — ``load_snapshot`` /
+    ``snapshot_exists`` resolve the fallback — so a checkpoint can never
+    destroy the only recovery point (the WAL is truncated strictly after
+    this function returns)."""
     leaves = jax.tree_util.tree_leaves(state)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
     parent = os.path.dirname(os.path.abspath(path)) or "."
     os.makedirs(parent, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=parent, prefix=".snap_tmp_")
+    old = path + ".old"
     try:
         np.savez(os.path.join(tmp, _LEAVES), **arrays)
         manifest = {
@@ -44,15 +52,37 @@ def save_snapshot(path: str, state: Any, *, step: int = 0, extra: dict | None = 
         with open(os.path.join(tmp, _MANIFEST), "w") as fh:
             json.dump(manifest, fh)
         if os.path.exists(path):
-            shutil.rmtree(path)
-        os.replace(tmp, path)  # atomic commit
+            # Only rotate when a live primary exists: if a prior crash
+            # left the .old fallback as the ONLY snapshot, deleting it
+            # before the new commit would violate the invariant above.
+            shutil.rmtree(old, ignore_errors=True)
+            os.replace(path, old)
+        os.replace(tmp, path)  # commit
+        shutil.rmtree(old, ignore_errors=True)
     finally:
         if os.path.exists(tmp):
             shutil.rmtree(tmp, ignore_errors=True)
 
 
+def _resolve(path: str) -> str:
+    """The live snapshot dir: ``path``, or the rotated-aside ``path.old``
+    if a crash hit save_snapshot between its two renames."""
+    if os.path.exists(os.path.join(path, _MANIFEST)):
+        return path
+    if os.path.exists(os.path.join(path + ".old", _MANIFEST)):
+        return path + ".old"
+    return path
+
+
+def read_manifest(path: str) -> dict:
+    """The snapshot manifest alone (cheap: no leaf arrays loaded)."""
+    with open(os.path.join(_resolve(path), _MANIFEST)) as fh:
+        return json.load(fh)
+
+
 def load_snapshot(path: str, template: T) -> tuple[T, dict]:
     """Restore a state with the same structure as ``template``."""
+    path = _resolve(path)
     with open(os.path.join(path, _MANIFEST)) as fh:
         manifest = json.load(fh)
     data = np.load(os.path.join(path, _LEAVES))
@@ -74,4 +104,4 @@ def load_snapshot(path: str, template: T) -> tuple[T, dict]:
 
 
 def snapshot_exists(path: str) -> bool:
-    return os.path.exists(os.path.join(path, _MANIFEST))
+    return os.path.exists(os.path.join(_resolve(path), _MANIFEST))

@@ -2,8 +2,23 @@
 
 All update requests between two snapshots are appended to the WAL; recovery
 replays the WAL on top of the latest snapshot.  Records are length-prefixed
-msgpack blobs with numpy payloads, fsync'd per batch (the paper's durability
-point is the SSD write; ours is the fsync).
+msgpack blobs with numpy payloads, fsync'd on every ``append`` (the paper's
+durability point is the SSD write; ours is the fsync — a record is
+acknowledged only after ``os.fsync`` returns).
+
+Corruption policy: a *torn tail* (crash mid-append: short header, short
+body, or garbage bytes where the final record should be — a multi-page
+append may persist later pages without the first) is tolerated and treated
+as "the last op was never acknowledged".  A bad-magic header FOLLOWED by a
+complete decodable record is mid-file corruption of acknowledged data and
+raises :class:`WalCorruptionError` instead of silently truncating the log
+there.
+
+``WalSet`` is the sharded form: one log file per index shard (in a real
+deployment each shard node fsyncs its own device).  Updates in this repro
+are deterministically replicated to every shard, so the per-shard logs are
+replicas of one global dispatch stream; recovery takes the longest cleanly-
+readable log as authoritative and re-syncs the laggards.
 """
 from __future__ import annotations
 
@@ -20,9 +35,13 @@ _MAGIC = b"SPFW"
 _HEADER = struct.Struct("<4sI")  # magic, payload length
 
 
+class WalCorruptionError(RuntimeError):
+    """Mid-file WAL corruption (bad magic on a fully-written header)."""
+
+
 @dataclass
 class WalRecord:
-    op: str                      # "insert" | "delete"
+    op: str                      # "insert" | "delete" | "maintain" | "drain"
     payload: dict[str, np.ndarray]
     seqno: int
 
@@ -52,17 +71,28 @@ def _decode(body: bytes) -> WalRecord:
 class WriteAheadLog:
     """Append-only log; one per index shard."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, tail: tuple[int, int] | None = None):
+        """``tail`` = precomputed ``(last seqno, clean end offset)`` from
+        a caller that already scanned the file (WalSet's salvage pass) —
+        skips the open-time rescan."""
         self.path = path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._seqno, clean_end = tail if tail is not None else self._scan_tail()
+        if os.path.exists(path) and os.path.getsize(path) > clean_end:
+            # Trim a torn tail so new appends don't land after garbage
+            # (the reader stops at the tear and would lose them).
+            with open(path, "r+b") as fh:
+                fh.truncate(clean_end)
+                fh.flush()
+                os.fsync(fh.fileno())
         self._fh = open(path, "ab")
-        self._seqno = self._scan_last_seqno()
 
-    def _scan_last_seqno(self) -> int:
-        last = -1
-        for rec in iter_wal(self.path):
-            last = rec.seqno
-        return last
+    def _scan_tail(self) -> tuple[int, int]:
+        """(last seqno, byte offset of the end of the last clean record)."""
+        last, end = -1, 0
+        for rec, rec_end in _scan_records(self.path):
+            last, end = rec.seqno, rec_end
+        return last, end
 
     @property
     def next_seqno(self) -> int:
@@ -71,36 +101,217 @@ class WriteAheadLog:
     def append(self, op: str, payload: dict[str, np.ndarray]) -> int:
         self._seqno += 1
         rec = WalRecord(op=op, payload=payload, seqno=self._seqno)
-        self._fh.write(_encode(rec))
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
+        self.append_encoded(_encode(rec))
         return self._seqno
 
+    def append_encoded(self, blob: bytes) -> None:
+        """Durability point: the append is acknowledged only post-fsync."""
+        self._fh.write(blob)
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
     def truncate(self) -> None:
-        """Called after a successful snapshot: the log restarts empty."""
+        """Called after a successful snapshot: the log restarts empty.
+        Seqnos keep counting (they are global, not per-file offsets)."""
         self._fh.close()
         self._fh = open(self.path, "wb")
         self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    def rewrite(self, records: list[WalRecord]) -> None:
+        """Replace the file contents with ``records`` (recovery re-sync of
+        a lagging shard log to the authoritative stream)."""
+        self._fh.close()
+        _rewrite_log_file(self.path, records)
+        self._seqno = records[-1].seqno if records else -1
+        self._fh = open(self.path, "ab")
 
     def close(self) -> None:
         self._fh.close()
 
 
-def iter_wal(path: str, after_seqno: int = -1) -> Iterator[WalRecord]:
-    """Replay iterator.  Tolerates a torn tail record (crash mid-append)."""
+def _rest_holds_complete_record(blob: bytes) -> bool:
+    """True if ``blob`` (bytes from a bad header onward) contains at
+    least one complete, decodable record — i.e. the damage sits in FRONT
+    of acknowledged data (corruption), not at the tail (a torn append)."""
+    idx = blob.find(_MAGIC, 1)
+    while idx != -1:
+        if idx + _HEADER.size <= len(blob):
+            _, length = _HEADER.unpack_from(blob, idx)
+            if idx + _HEADER.size + length <= len(blob):
+                try:
+                    _decode(blob[idx + _HEADER.size:
+                                 idx + _HEADER.size + length])
+                    return True
+                except Exception:
+                    pass
+        idx = blob.find(_MAGIC, idx + 1)
+    return False
+
+
+def _scan_records(path: str) -> Iterator[tuple[WalRecord, int]]:
+    """Yield ``(record, end_offset)`` up to the first tear.  Raises
+    :class:`WalCorruptionError` only when damage precedes a complete
+    record (see module docstring for the torn-tail/corruption policy)."""
     if not os.path.exists(path):
         return
     with open(path, "rb") as fh:
         while True:
             head = fh.read(_HEADER.size)
             if len(head) < _HEADER.size:
-                return
+                return  # EOF or torn header
             magic, length = _HEADER.unpack(head)
             if magic != _MAGIC:
-                return  # corrupt tail
+                pos = fh.tell() - _HEADER.size
+                if _rest_holds_complete_record(head + fh.read()):
+                    raise WalCorruptionError(
+                        f"{path}: bad record magic {magic!r} at offset "
+                        f"{pos} with intact records after it"
+                    )
+                return  # garbage at the tail: a torn multi-page append
             body = fh.read(length)
             if len(body) < length:
                 return  # torn write
-            rec = _decode(body)
-            if rec.seqno > after_seqno:
-                yield rec
+            yield _decode(body), fh.tell()
+
+
+def iter_wal(path: str, after_seqno: int = -1) -> Iterator[WalRecord]:
+    """Replay iterator.  Tolerates a torn tail record (crash mid-append);
+    raises :class:`WalCorruptionError` on mid-file damage."""
+    for rec, _end in _scan_records(path):
+        if rec.seqno > after_seqno:
+            yield rec
+
+
+def _salvage_scan(path: str) -> tuple[list[WalRecord], int, bool]:
+    """``(records, clean end offset, corrupt)`` up to the first tear OR
+    corruption; the flag is True only for mid-file corruption (a torn
+    tail is normal crash debris)."""
+    recs: list[WalRecord] = []
+    end = 0
+    try:
+        for rec, rec_end in _scan_records(path):
+            recs.append(rec)
+            end = rec_end
+        return recs, end, False
+    except WalCorruptionError:
+        return recs, end, True
+
+
+def _rewrite_log_file(path: str, records: list[WalRecord]) -> None:
+    with open(path, "wb") as fh:
+        for rec in records:
+            fh.write(_encode(rec))
+        fh.flush()
+        os.fsync(fh.fileno())
+
+
+class WalSet:
+    """Per-shard WALs behind one append/replay surface.
+
+    ``append`` encodes the record once and fsyncs it into every shard's
+    log (this repro's sharded backend replicates every update dispatch to
+    all shards, so each shard's log is exactly what that shard needs to
+    replay).  ``recover_records`` scans all logs, takes the one with the
+    longest cleanly-readable prefix as authoritative (a crash can tear
+    different logs at different records), re-syncs the laggards, and
+    returns the authoritative record list.
+    """
+
+    def __init__(self, wal_dir: str, n_shards: int):
+        self.wal_dir = wal_dir
+        self.n_shards = n_shards
+        os.makedirs(wal_dir, exist_ok=True)
+        # Salvage pass: a mid-file-corrupt shard log is repaired from the
+        # longest readable stream (the logs are replicas) instead of
+        # bricking recovery.  Only if EVERY log is corrupt do we raise —
+        # and then before rewriting anything, so the evidence survives.
+        streams: list[list[WalRecord]] = []
+        ends: list[int] = []
+        corrupt: list[int] = []
+        for i in range(n_shards):
+            recs, end, bad = _salvage_scan(self.shard_path(i))
+            streams.append(recs)
+            ends.append(end)
+            if bad:
+                corrupt.append(i)
+        if corrupt and len(corrupt) == n_shards:
+            raise WalCorruptionError(
+                f"{wal_dir}: all {n_shards} shard logs are corrupt "
+                "(no clean replica to resync from)"
+            )
+        if corrupt:
+            best = max(streams,
+                       key=lambda recs: recs[-1].seqno if recs else -1)
+            for i in corrupt:
+                _rewrite_log_file(self.shard_path(i), best)
+                streams[i] = list(best)
+                ends[i] = os.path.getsize(self.shard_path(i))
+        self.logs = [
+            # the salvage pass already found each tail: no rescan
+            WriteAheadLog(
+                self.shard_path(i),
+                tail=(streams[i][-1].seqno if streams[i] else -1, ends[i]),
+            )
+            for i in range(n_shards)
+        ]
+        # recover_records reuses this boot-time scan (one decode pass
+        # over the recovery-critical path); invalidated by any append.
+        self._boot_streams: list[list[WalRecord]] | None = streams
+
+    def shard_path(self, shard: int) -> str:
+        return os.path.join(self.wal_dir, f"shard_{shard:03d}.wal")
+
+    @property
+    def next_seqno(self) -> int:
+        return max(log.next_seqno for log in self.logs)
+
+    def last_seqnos(self) -> list[int]:
+        """Last durable seqno per shard log (the snapshot manifest entry)."""
+        return [log.next_seqno - 1 for log in self.logs]
+
+    def append(self, op: str, payload: dict[str, np.ndarray]) -> int:
+        seqno = self.next_seqno
+        blob = _encode(WalRecord(op=op, payload=payload, seqno=seqno))
+        self._boot_streams = None
+        for log in self.logs:
+            log._seqno = seqno
+            log.append_encoded(blob)
+        return seqno
+
+    def recover_records(self) -> list[WalRecord]:
+        """Authoritative post-crash record stream (see class docstring)."""
+        if self._boot_streams is not None:
+            per_shard = self._boot_streams
+        else:
+            per_shard = [
+                list(iter_wal(self.shard_path(i)))
+                for i in range(self.n_shards)
+            ]
+        best = max(per_shard, key=lambda recs: recs[-1].seqno if recs else -1)
+        for i, recs in enumerate(per_shard):
+            have = recs[-1].seqno if recs else -1
+            want = best[-1].seqno if best else -1
+            if have != want:
+                self.logs[i].rewrite(best)
+        for log in self.logs:
+            log._seqno = best[-1].seqno if best else -1
+        return best
+
+    def ensure_seqno_floor(self, seqno: int) -> None:
+        """Never hand out a seqno ≤ ``seqno`` again.  Recovery calls this
+        with the snapshot's stamped seqno: the checkpoint truncated the
+        logs, so a post-crash scan alone would restart numbering below
+        the manifest and the NEXT recovery would skip those acknowledged
+        records as already-applied."""
+        for log in self.logs:
+            log._seqno = max(log._seqno, seqno)
+
+    def truncate(self) -> None:
+        self._boot_streams = None
+        for log in self.logs:
+            log.truncate()
+
+    def close(self) -> None:
+        for log in self.logs:
+            log.close()

@@ -1,0 +1,36 @@
+"""``import spfresh`` — the stable top-level namespace of the repo.
+
+    import spfresh
+
+    spec = spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=my_lire_config),
+        durability=spfresh.DurabilitySpec(root="/data/svc"),
+    )
+    svc = spfresh.open(spec, vectors=base)      # build (+ open-time snapshot)
+    svc.insert(new_vecs, new_ids)
+    svc.checkpoint()
+    svc.close()
+
+    svc = spfresh.open(spec)                    # crash recovery: snapshot +
+                                                # per-shard WAL replay
+
+Everything here re-exports :mod:`repro.api`; the implementation modules
+(`repro.core`, `repro.serve`, `repro.distributed`, `repro.storage`)
+remain importable directly.
+"""
+from repro.api import (  # noqa: F401
+    DurabilitySpec,
+    IndexSpec,
+    MaintenanceSpec,
+    ScanSpec,
+    ServeSpec,
+    Service,
+    ServiceSpec,
+    ShardSpec,
+    open,
+)
+
+__all__ = [
+    "DurabilitySpec", "IndexSpec", "MaintenanceSpec", "ScanSpec",
+    "ServeSpec", "Service", "ServiceSpec", "ShardSpec", "open",
+]

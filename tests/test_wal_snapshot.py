@@ -1,11 +1,15 @@
 """Crash recovery (paper §4.4): snapshot + WAL replay."""
 import os
+import struct
 
 import numpy as np
+import pytest
 
 from repro.core.index import SPFreshIndex
 from repro.core.types import LireConfig
-from repro.storage.wal import WriteAheadLog, iter_wal
+from repro.storage.wal import (
+    WalCorruptionError, WalSet, WriteAheadLog, iter_wal,
+)
 from tests.conftest import make_clustered
 from tests.test_lire import small_cfg
 
@@ -31,6 +35,204 @@ def test_wal_tolerates_torn_tail(tmp_path):
         fh.write(b"SPFW\x99\x00\x00\x00partial")  # torn record
     recs = list(iter_wal(path))
     assert len(recs) == 1
+
+
+def _record_offsets(blob: bytes) -> list[int]:
+    """Start offset of every record in an encoded WAL image."""
+    offsets, pos = [], 0
+    while pos < len(blob):
+        _, length = struct.unpack_from("<4sI", blob, pos)
+        offsets.append(pos)
+        pos += 8 + length
+    return offsets
+
+
+def test_wal_torn_tail_property_every_byte_offset(tmp_path):
+    """Truncating the log at EVERY byte offset of the last record must
+    yield exactly the earlier records — the crash-mid-append property the
+    recovery path relies on (torn tail = op never acknowledged)."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    for i in range(3):
+        wal.append("insert", {
+            "vecs": np.full((4, 8), i, np.float32),
+            "vids": np.arange(4, dtype=np.int32) + 10 * i,
+        })
+    wal.close()
+    with open(path, "rb") as fh:
+        blob = fh.read()
+    last_start = _record_offsets(blob)[-1]
+    trunc = str(tmp_path / "trunc.log")
+    for cut in range(last_start, len(blob)):
+        with open(trunc, "wb") as fh:
+            fh.write(blob[:cut])
+        recs = list(iter_wal(trunc))
+        assert [r.seqno for r in recs] == [0, 1], f"cut at byte {cut}"
+    assert [r.seqno for r in iter_wal(path)] == [0, 1, 2]
+
+
+def test_wal_midfile_magic_mismatch_raises(tmp_path):
+    """A fully-written header with bad magic is corruption, not a tail —
+    silently truncating there would drop acknowledged (fsync'd) records."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    for i in range(3):
+        wal.append("delete", {"vids": np.asarray([i])})
+    wal.close()
+    with open(path, "rb") as fh:
+        blob = fh.read()
+    mid = _record_offsets(blob)[1]
+    corrupt = bytearray(blob)
+    corrupt[mid:mid + 4] = b"XXXX"
+    with open(path, "wb") as fh:
+        fh.write(bytes(corrupt))
+    with pytest.raises(WalCorruptionError):
+        list(iter_wal(path))
+    with pytest.raises(WalCorruptionError):
+        WriteAheadLog(path)
+
+
+def test_wal_garbage_magic_at_tail_is_a_tear_not_corruption(tmp_path):
+    """A multi-page append can persist later pages without the first
+    (no prefix ordering before fsync), leaving garbage where the final
+    record's header should be.  That is an UNACKNOWLEDGED tail — it must
+    be trimmed, not raised, or a normal crash bricks recovery."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    wal.append("delete", {"vids": np.asarray([1])})
+    wal.append("delete", {"vids": np.asarray([2])})
+    wal.close()
+    with open(path, "ab") as fh:
+        fh.write(b"\x00GARBAGE\x00" * 40)       # bad magic, no record after
+    assert [r.seqno for r in iter_wal(path)] == [0, 1]
+    wal2 = WriteAheadLog(path)                  # trims the garbage tail
+    wal2.append("delete", {"vids": np.asarray([3])})
+    wal2.close()
+    assert [r.seqno for r in iter_wal(path)] == [0, 1, 2]
+
+
+def test_wal_reopen_trims_torn_tail_then_appends(tmp_path):
+    """Reopening a log with a torn tail must trim it — otherwise new
+    appends land after the garbage and the reader never sees them."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    wal.append("delete", {"vids": np.asarray([1])})
+    wal.append("delete", {"vids": np.asarray([2])})
+    wal.close()
+    size = os.path.getsize(path)
+    with open(path, "ab") as fh:
+        fh.write(b"SPFW\x99\x00\x00\x00partial")   # torn record
+    wal2 = WriteAheadLog(path)
+    assert os.path.getsize(path) == size           # tail trimmed
+    wal2.append("delete", {"vids": np.asarray([3])})
+    wal2.close()
+    assert [r.seqno for r in iter_wal(path)] == [0, 1, 2]
+
+
+def test_wal_append_is_immediately_durable(tmp_path):
+    """The fsync-per-append contract: a record must be readable through a
+    fresh file handle the moment append() returns (no close/flush)."""
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path)
+    wal.append("insert", {"vecs": np.ones((2, 4), np.float32),
+                          "vids": np.asarray([5, 6])})
+    recs = list(iter_wal(path))      # separate fd, wal still open
+    assert len(recs) == 1 and recs[0].seqno == 0
+    wal.close()
+
+
+def test_walset_resyncs_lagging_shard_logs(tmp_path):
+    """A crash can tear the per-shard logs at different records; recovery
+    takes the longest clean log as authoritative and re-syncs the rest."""
+    ws = WalSet(str(tmp_path / "wal"), 3)
+    for i in range(4):
+        ws.append("delete", {"vids": np.asarray([i])})
+    ws.close()
+    # shard 1 lost its last record, shard 2 its last two (torn at the
+    # record boundary = fsync'd on shard 0 only)
+    for shard, keep in ((1, 3), (2, 2)):
+        path = ws.shard_path(shard)
+        with open(path, "rb") as fh:
+            blob = fh.read()
+        cut = _record_offsets(blob)[keep]
+        with open(path, "wb") as fh:
+            fh.write(blob[:cut])
+    ws2 = WalSet(str(tmp_path / "wal"), 3)
+    recs = ws2.recover_records()
+    assert [r.seqno for r in recs] == [0, 1, 2, 3]
+    assert ws2.last_seqnos() == [3, 3, 3]
+    for shard in range(3):           # every log re-synced on disk
+        assert [r.seqno for r in iter_wal(ws2.shard_path(shard))] == [0, 1, 2, 3]
+    assert ws2.append("delete", {"vids": np.asarray([9])}) == 4
+    ws2.close()
+
+
+def test_walset_salvages_one_corrupt_log_from_clean_replicas(tmp_path):
+    """Mid-file corruption in ONE shard log must not brick recovery when
+    clean replicas exist: the corrupt log is repaired from the longest
+    readable stream.  Only all-logs-corrupt raises."""
+    ws = WalSet(str(tmp_path / "wal"), 3)
+    for i in range(4):
+        ws.append("delete", {"vids": np.asarray([i])})
+    ws.close()
+    path1 = ws.shard_path(1)
+    with open(path1, "rb") as fh:
+        blob = fh.read()
+    mid = _record_offsets(blob)[1]
+    corrupt = bytearray(blob)
+    corrupt[mid:mid + 4] = b"XXXX"
+    with open(path1, "wb") as fh:
+        fh.write(bytes(corrupt))
+    ws2 = WalSet(str(tmp_path / "wal"), 3)       # salvage, no raise
+    recs = ws2.recover_records()
+    assert [r.seqno for r in recs] == [0, 1, 2, 3]
+    assert [r.seqno for r in iter_wal(path1)] == [0, 1, 2, 3]  # repaired
+    ws2.close()
+    # single-log set (local backend): corruption has no replica to heal
+    # from and must surface
+    ws3 = WalSet(str(tmp_path / "wal1"), 1)
+    ws3.append("delete", {"vids": np.asarray([0])})
+    ws3.append("delete", {"vids": np.asarray([1])})
+    ws3.close()
+    p = ws3.shard_path(0)
+    with open(p, "rb") as fh:
+        blob = fh.read()
+    corrupt = bytearray(blob)
+    corrupt[0:4] = b"XXXX"
+    with open(p, "wb") as fh:
+        fh.write(bytes(corrupt))
+    with pytest.raises(WalCorruptionError):
+        WalSet(str(tmp_path / "wal1"), 1)
+
+
+def test_snapshot_swap_never_leaves_no_snapshot(tmp_path, rng):
+    """save_snapshot rotates the old snapshot aside before the new one
+    commits; a crash between the two renames leaves ``path.old``, which
+    snapshot_exists/load_snapshot resolve — never zero snapshots."""
+    from repro.storage.snapshot import (
+        load_snapshot, save_snapshot, snapshot_exists,
+    )
+
+    snap = str(tmp_path / "snap")
+    state = {"x": np.arange(4, dtype=np.float32),
+             "y": np.ones((2, 2), np.float32)}
+    save_snapshot(snap, state, extra={"gen": 1})
+    save_snapshot(snap, state, extra={"gen": 2})
+    assert not os.path.exists(snap + ".old")     # happy path cleans up
+    # crash window: the previous snapshot was rotated aside but the new
+    # one never landed
+    os.replace(snap, snap + ".old")
+    assert snapshot_exists(snap)
+    _, manifest = load_snapshot(snap, state)
+    assert manifest["extra"]["gen"] == 2
+    # and the next save must not delete the fallback before its own
+    # commit: even simulating a crash right before that commit (the .old
+    # is all there is), a snapshot remains loadable
+    assert snapshot_exists(snap)
+    save_snapshot(snap, state, extra={"gen": 3})
+    _, manifest = load_snapshot(snap, state)
+    assert manifest["extra"]["gen"] == 3
+    assert not os.path.exists(snap + ".old")
 
 
 def test_snapshot_then_wal_replay_recovers(tmp_path, rng):

@@ -18,12 +18,16 @@ python -m pytest -q tests/test_kernels_posting_scan.py \
 echo "== maintenance round parity (batched rounds vs sequential LIRE) =="
 python -m pytest -q tests/test_maintenance_round.py
 
+echo "== service API crash-recovery parity (spfresh.open, local + 2-shard) =="
+python -m pytest -q tests/test_service_api.py
+
 echo "== pytest (tier-1, -m 'not slow') =="
 python -m pytest -q -m "not slow" \
     --ignore=tests/test_kernels_posting_scan.py \
     --ignore=tests/test_kernels_l2topk.py \
     --ignore=tests/test_search_pallas.py \
-    --ignore=tests/test_maintenance_round.py
+    --ignore=tests/test_maintenance_round.py \
+    --ignore=tests/test_service_api.py
 
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== benchmarks dry smoke =="
