@@ -1,13 +1,17 @@
 """Durability lifecycle costs (paper §4.4, the service API's recovery
 path): snapshot write/restore bandwidth, WAL append + fsync throughput,
-and end-to-end crash recovery (snapshot load + per-shard WAL replay
-through the backend's jitted dispatches) via ``spfresh.open``.
+end-to-end crash recovery (snapshot load + per-shard WAL replay through
+the backend's jitted dispatches) via ``spfresh.open`` — plus the
+durability FAST PATH: delta-checkpoint bytes as a function of churn
+(block-granular dirty tracking), fsyncs/dispatch under WAL group commit,
+and replay throughput before/after WAL compaction.
 
     PYTHONPATH=src python -m benchmarks.run --only recovery
     PYTHONPATH=src python -m benchmarks.run --json BENCH_recovery.json
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import shutil
 import tempfile
@@ -18,8 +22,8 @@ import numpy as np
 from benchmarks.common import bench_cfg
 from repro import api
 from repro.data.vectors import make_shifting_stream, make_sift_like
-from repro.storage.snapshot import load_snapshot, save_snapshot
-from repro.storage.wal import WalSet, iter_wal
+from repro.storage.snapshot import SnapshotStore, load_snapshot, save_snapshot
+from repro.storage.wal import WalSet, compact_wal_records, iter_wal
 from repro.core.types import make_empty_state
 
 
@@ -117,6 +121,137 @@ def _bench_open_recovery(root: str, n_base: int, n_updates: int,
     }
 
 
+def _bench_delta_vs_churn(root: str, n_base: int, dim: int = 16) -> dict:
+    """Checkpoint bytes vs churn: write a full base, then for each churn
+    fraction update churn·n rows and commit a DELTA unit — its on-disk
+    bytes should scale with the dirty-block count, not the index size
+    (the paper's copy-on-write block controller, measured)."""
+    svc_root = os.path.join(root, "delta_churn")
+    spec = api.ServiceSpec(
+        index=api.IndexSpec(config=bench_cfg(dim=dim)),
+        durability=api.DurabilitySpec(root=svc_root),
+    )
+    base = make_sift_like(n_base, dim, seed=43)
+    svc = api.open(spec, vectors=base)          # open-time base snapshot
+    store = SnapshotStore(spec.durability.resolved_snapshot_dir())
+    full_bytes = store.unit_bytes()
+    out = {"full_snapshot_mb": full_bytes / 1e6, "churn": []}
+    rng = np.random.default_rng(44)
+    next_id = n_base
+    for churn in (0.01, 0.05, 0.20):
+        n_upd = max(1, int(round(churn * n_base)))
+        vecs = make_shifting_stream(n_upd, dim, seed=next_id)
+        ids = np.arange(next_id, next_id + n_upd, dtype=np.int32)
+        next_id += n_upd
+        svc.insert(vecs, ids)
+        dead = rng.choice(ids, size=max(1, n_upd // 4), replace=False)
+        svc.delete(dead.astype(np.int32))
+        t0 = time.perf_counter()
+        svc.checkpoint(delta=True)
+        dt = time.perf_counter() - t0
+        delta_bytes = store.unit_bytes()
+        out["churn"].append({
+            "update_rate": churn,
+            "rows": int(n_upd),
+            "delta_mb": delta_bytes / 1e6,
+            "delta_vs_full": delta_bytes / full_bytes,
+            "write_s": dt,
+        })
+        svc.checkpoint(delta=False)             # re-base between levels
+        full_bytes = store.unit_bytes()
+    svc.close()
+    return out
+
+
+def _bench_group_commit(root: str, n_base: int, dim: int = 16,
+                        group_n: int = 32) -> dict:
+    """fsyncs per update dispatch, fsync-every-dispatch vs group commit.
+    Both runs push the same stream through ``insert_bulk`` (many padded
+    micro-batch dispatches per call); group commit closes the window once
+    per bulk call / every ``group_n`` dispatches instead of per append."""
+    base = make_sift_like(n_base, dim, seed=45)
+    stream = make_shifting_stream(1024, dim, seed=46)
+    out = {}
+    for label, gc in (("fsync_per_dispatch", 0), ("group_commit", group_n)):
+        svc_root = os.path.join(root, f"gc_{label}")
+        spec = api.ServiceSpec(
+            index=api.IndexSpec(config=bench_cfg(dim=dim)),
+            serve=api.ServeSpec(max_batch=64),
+            durability=api.DurabilitySpec(root=svc_root, group_commit=gc),
+        )
+        svc = api.open(spec, vectors=base)
+        ids = np.arange(n_base, n_base + len(stream), dtype=np.int32)
+        t0 = time.perf_counter()
+        svc.insert_bulk(stream, ids, chunk=64)
+        dt = time.perf_counter() - t0
+        st = svc.backend.wal_set.stats()
+        out[label] = {
+            "dispatches": st["appends"],
+            "fsyncs": st["fsyncs"],
+            "fsyncs_per_dispatch": st["fsyncs_per_append"],
+            "wall_s": dt,
+            "rows_s": len(stream) / max(dt, 1e-9),
+        }
+        svc.close()
+    a = out["fsync_per_dispatch"]["fsyncs_per_dispatch"]
+    b = out["group_commit"]["fsyncs_per_dispatch"]
+    out["fsync_reduction"] = a / max(b, 1e-9)
+    out["group_n"] = group_n
+    return out
+
+
+def _bench_wal_compaction(root: str, n_base: int, dim: int = 16) -> dict:
+    """Replay throughput before/after ``compact_wal_records``: a churny
+    stream (most inserted vids deleted again before the crash) leaves a
+    WAL full of dead rows; compaction masks them out of the replay."""
+    svc_root = os.path.join(root, "wal_compact")
+    spec = api.ServiceSpec(
+        index=api.IndexSpec(config=bench_cfg(dim=dim)),
+        serve=api.ServeSpec(max_batch=64),
+        durability=api.DurabilitySpec(root=svc_root),
+    )
+    base = make_sift_like(n_base, dim, seed=47)
+    svc = api.open(spec, vectors=base)
+    n_waves, wave = 24, 128
+    next_id = n_base
+    n_rows = 0
+    for w in range(n_waves):
+        vecs = make_shifting_stream(wave, dim, seed=next_id)
+        ids = np.arange(next_id, next_id + wave, dtype=np.int32)
+        next_id += wave
+        svc.insert(vecs, ids)
+        n_rows += wave
+        if w < n_waves - 2:
+            # TTL churn: whole waves expire before the crash — their
+            # insert dispatches are fully dead and compact away entirely
+            svc.delete(ids)
+            n_rows += wave
+    # crash: abandon the handle; measure the records the recovery replays
+    wal_dir = spec.durability.resolved_wal_dir()
+    records = list(iter_wal(os.path.join(wal_dir, "shard_000.wal")))
+    compacted, dropped = compact_wal_records(records)
+    out = {"records": len(records), "records_compacted": len(compacted),
+           "rows_dropped": int(dropped), "update_rows": int(n_rows)}
+    for label, compact in (("replay", False), ("replay_compacted", True)):
+        spec_r = dataclasses.replace(
+            spec, durability=dataclasses.replace(
+                spec.durability, compact_wal=compact),
+        )
+        t0 = time.perf_counter()
+        twin = api.open(spec_r)
+        dt = time.perf_counter() - t0
+        assert twin.recovered
+        out[label] = {
+            "open_s": dt,
+            "rows_s": n_rows / max(dt, 1e-9),
+        }
+        twin.engine.backend.wal_set.close()     # reopen same root next loop
+    out["replay_speedup"] = (out["replay"]["open_s"]
+                             / max(out["replay_compacted"]["open_s"], 1e-9))
+    svc.close()
+    return out
+
+
 def run_json(quick: bool = True) -> dict:
     n_base = 4000 if quick else 40000
     n_updates = 1024 if quick else 8192
@@ -129,7 +264,14 @@ def run_json(quick: bool = True) -> dict:
         wal = _bench_wal(root, batch=256, n_batches=16 if quick else 64,
                          dim=16)
         rec = _bench_open_recovery(root, n_base, n_updates)
-        return {"snapshot": snap, "wal": wal, "recovery": rec}
+        delta = _bench_delta_vs_churn(root, n_base)
+        gc = _bench_group_commit(root, n_base)
+        compact = _bench_wal_compaction(root, n_base)
+        return {
+            "snapshot": snap, "wal": wal, "recovery": rec,
+            "delta_vs_churn": delta, "group_commit": gc,
+            "wal_compaction": compact,
+        }
     finally:
         shutil.rmtree(root, ignore_errors=True)
 
@@ -137,6 +279,8 @@ def run_json(quick: bool = True) -> dict:
 def run(quick: bool = True) -> list[str]:
     r = run_json(quick=quick)
     s, w, o = r["snapshot"], r["wal"], r["recovery"]
+    d, g, c = r["delta_vs_churn"], r["group_commit"], r["wal_compaction"]
+    d1 = d["churn"][0]
     return [
         f"recovery/snapshot,{s['write_s'] * 1e6:.0f},"
         f"state_mb={s['state_mb']:.1f};write_mb_s={s['write_mb_s']:.0f};"
@@ -148,6 +292,16 @@ def run(quick: bool = True) -> list[str]:
         f"recovery/open,{o['recover_open_s'] * 1e6:.0f},"
         f"replayed_rows_s={o['replayed_rows_s']:.0f};"
         f"recover_vs_update={o['recover_vs_update']:.2f}",
+        f"recovery/delta,{d1['write_s'] * 1e6:.0f},"
+        f"delta_vs_full@{d1['update_rate']:.0%}={d1['delta_vs_full']:.3f};"
+        f"full_mb={d['full_snapshot_mb']:.1f}",
+        f"recovery/group_commit,{g['group_commit']['wall_s'] * 1e6:.0f},"
+        f"fsync_reduction={g['fsync_reduction']:.1f}x;"
+        f"fsyncs_per_dispatch={g['group_commit']['fsyncs_per_dispatch']:.3f}",
+        f"recovery/wal_compaction,"
+        f"{c['replay_compacted']['open_s'] * 1e6:.0f},"
+        f"replay_speedup={c['replay_speedup']:.2f}x;"
+        f"rows_dropped={c['rows_dropped']}",
     ]
 
 

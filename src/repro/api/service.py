@@ -11,8 +11,13 @@ Lifecycle::
                                       #   open-time snapshot (the build's
                                       #   durability point) + empty WALs
     svc.search / insert / delete      # updates are WAL-appended per
-                                      #   dispatch before they run
-    svc.checkpoint()                  # flush + atomic snapshot stamping
+                                      #   dispatch before they run; under
+                                      #   group_commit the fsync is forced
+                                      #   before the call returns (ack)
+    svc.insert_bulk(...)              # many dispatches, ONE fsync
+    svc.checkpoint()                  # flush + atomic snapshot unit
+                                      #   (delta when the spec enables
+                                      #   them, else full base) stamping
                                       #   per-shard wal_seqnos + WAL trunc
     svc.close()                       # flush (+ final checkpoint)
 
@@ -35,10 +40,8 @@ from repro.core.index import SPFreshIndex
 from repro.core.types import make_empty_state
 from repro.serve.engine import LocalBackend, ServeEngine
 from repro.storage.durability import check_replay_config
-from repro.storage.snapshot import (
-    load_snapshot, read_manifest, snapshot_exists,
-)
-from repro.storage.wal import WalSet
+from repro.storage.snapshot import SnapshotStore
+from repro.storage.wal import WalSet, compact_wal_records
 
 
 class Service:
@@ -62,7 +65,12 @@ class Service:
         self.initial_handles = initial_handles
         self.recovered = recovered
         self._updates_since_ckpt = 0
+        self._updates_since_delta = 0
         self._closed = False
+        self._store = (
+            SnapshotStore(spec.durability.resolved_snapshot_dir())
+            if spec.durability.enabled else None
+        )
 
     # ------------------------------ serving ----------------------------
     @property
@@ -87,28 +95,65 @@ class Service:
         (shard, slot) handles — pass ``vids=None`` there; the local
         backend keys the version map by caller vids, so they're required."""
         vecs = np.asarray(vecs, np.float32)
+        vids = self._resolve_vids(vecs, vids)
+        ids, landed = self.engine.submit_insert(vecs, vids).result()
+        self._wal_ack()
+        self._note_updates(len(vecs))
+        return ids, landed
+
+    def insert_bulk(
+        self, vecs: np.ndarray, vids: np.ndarray | None = None,
+        *, chunk: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Group-commit fast path: submit every ``chunk``-row micro-batch,
+        pump them all, then cross ONE fsync before collecting results —
+        many update dispatches share a single durability point while the
+        ack-after-fsync contract holds (nothing is returned pre-sync)."""
+        vecs = np.asarray(vecs, np.float32)
+        vids = self._resolve_vids(vecs, vids)
+        chunk = chunk or self.spec.serve.max_batch
+        tickets = [
+            self.engine.submit_insert(vecs[s:s + chunk], vids[s:s + chunk])
+            for s in range(0, len(vecs), chunk)
+        ]
+        self.engine.pump()
+        self._wal_ack()
+        outs = [t.result() for t in tickets]
+        ids = (np.concatenate([o[0] for o in outs])
+               if outs else np.zeros((0,), np.int32))
+        landed = (np.concatenate([o[1] for o in outs])
+                  if outs else np.zeros((0,), bool))
+        self._note_updates(len(vecs))
+        return ids, landed
+
+    def _resolve_vids(self, vecs, vids):
+        """The sharded backend assigns its own (shard, slot) handles —
+        ``vids=None`` there; the local backend requires caller vids."""
         if vids is None:
             if not self.spec.sharded:
                 raise ValueError("the local backend requires caller vids")
-            vids = np.full(len(vecs), -1, np.int32)
-        ids, landed = self.engine.submit_insert(vecs, vids).result()
-        self._note_updates(len(vecs))
-        return ids, landed
+            return np.full(len(vecs), -1, np.int32)
+        return np.asarray(vids, np.int32)
 
     def delete(self, vids: np.ndarray) -> None:
         vids = np.asarray(vids, np.int32)
         self.engine.delete(vids)
+        self._wal_ack()
         self._note_updates(len(vids))
 
     def maintain(self, jobs: int | None = None) -> int:
         """One explicit Local-Rebuilder round (background slots also run
         under the engine's MaintenancePolicy)."""
         self.flush()
-        return self.backend.maintain(jobs or self.engine.policy.budget)
+        jobs_done = self.backend.maintain(jobs or self.engine.policy.budget)
+        self._wal_ack()
+        return jobs_done
 
     def drain(self) -> int:
         """Flush the queue and run the rebuilder to quiescence."""
-        return self.engine.drain()
+        jobs = self.engine.drain()
+        self._wal_ack()
+        return jobs
 
     # ----------------------------- lifecycle ---------------------------
     @property
@@ -116,24 +161,64 @@ class Service:
         return self.spec.durability.enabled
 
     def flush(self) -> int:
-        """Process every queued micro-batch; returns batches pumped."""
-        return self.engine.pump()
+        """Process every queued micro-batch; returns batches pumped.
+        Crosses the group-commit ack point: every ticket resolvable
+        after a flush is backed by fsync'd WAL records."""
+        n = self.engine.pump()
+        self._wal_ack()
+        return n
 
-    def checkpoint(self) -> None:
-        """Flush, then commit an atomic snapshot stamping each shard's
-        applied WAL seqno; the WALs restart empty after the commit."""
+    def checkpoint(self, delta: bool | None = None) -> None:
+        """Flush, then commit an atomic snapshot unit stamping each
+        shard's applied WAL seqno; the WALs restart empty after the
+        commit.
+
+        ``delta=None`` (default) picks the cheapest correct unit: a delta
+        when the spec enables them (``delta_every > 0``), a base exists,
+        and the chain is shorter than ``compact_every`` — otherwise a
+        full base, which also folds + prunes the chain (compaction).
+        ``delta=True``/``False`` force the choice (a forced delta still
+        promotes to a base over an empty store)."""
         if not self.durable:
             raise RuntimeError("checkpoint() on a service with no "
                                "DurabilitySpec root")
         self.flush()
-        self.backend.checkpoint(self.spec.durability.resolved_snapshot_dir())
+        dur = self.spec.durability
+        store = self._store
+        if delta is None:
+            # Cadence POLICY lives here (the spec's knobs); the backend's
+            # checkpoint() owns only the mechanics, incl. demoting a
+            # forced delta over an empty store to a base.
+            delta = (
+                dur.delta_every > 0
+                and store.has_base()
+                and (dur.compact_every == 0
+                     or store.chain_len() < dur.compact_every)
+            )
+        self.backend.checkpoint(
+            dur.resolved_snapshot_dir(), delta=bool(delta)
+        )
         self._updates_since_ckpt = 0
+        self._updates_since_delta = 0
+
+    def _wal_ack(self) -> None:
+        """Ack point under group commit: updates return only after their
+        WAL records (and everything before them) are fsync'd."""
+        if self.durable:
+            self.backend.wal_sync()
 
     def _note_updates(self, rows: int) -> None:
         self._updates_since_ckpt += rows
-        every = self.spec.durability.checkpoint_every
-        if self.durable and every > 0 and self._updates_since_ckpt >= every:
-            self.checkpoint()
+        self._updates_since_delta += rows
+        if not self.durable:
+            return
+        dur = self.spec.durability
+        if (dur.checkpoint_every > 0
+                and self._updates_since_ckpt >= dur.checkpoint_every):
+            self.checkpoint(delta=False)       # scheduled full re-base
+        elif (dur.delta_every > 0
+                and self._updates_since_delta >= dur.delta_every):
+            self.checkpoint()                  # delta (or due compaction)
 
     def close(self) -> None:
         """Flush, optionally checkpoint (DurabilitySpec.checkpoint_on_close),
@@ -163,6 +248,10 @@ class Service:
             ),
             "updates_since_checkpoint": self._updates_since_ckpt,
         }
+        if self.durable:
+            if self.backend.wal_set is not None:
+                rep["durability"]["wal"] = self.backend.wal_set.stats()
+            rep["durability"]["snapshot_chain_len"] = self._store.chain_len()
         return rep
 
     def stats(self) -> dict:
@@ -225,18 +314,15 @@ def open(
     cfg = spec.lire_config()
     dur = spec.durability
     n_shards = spec.shards.n_shards
-    can_recover = (dur.enabled and not fresh
-                   and snapshot_exists(dur.resolved_snapshot_dir()))
+    store = SnapshotStore(dur.resolved_snapshot_dir()) if dur.enabled else None
+    can_recover = dur.enabled and not fresh and store.exists()
     if fresh and vectors is None:
         raise ValueError("fresh=True requires vectors to build from")
     if can_recover:
         # Validate the stamped config BEFORE building templates: a
         # geometry drift (e.g. the launcher re-run with different sizing
         # flags) must fail with field names, not a leaf-shape mismatch.
-        check_replay_config(
-            read_manifest(dur.resolved_snapshot_dir()), cfg,
-            n_shards=n_shards,
-        )
+        check_replay_config(store.read_manifest(), cfg, n_shards=n_shards)
 
     initial_handles: np.ndarray | None = None
     recovered = False
@@ -269,9 +355,7 @@ def open(
     else:
         if can_recover:
             template = make_empty_state(cfg)
-            state, manifest = load_snapshot(
-                dur.resolved_snapshot_dir(), template
-            )
+            state, manifest = store.load(template)
             backend = _local_backend(spec, SPFreshIndex(state))
             recovered = True
         else:
@@ -283,8 +367,15 @@ def open(
 
     if dur.enabled:
         wal_set = WalSet(dur.resolved_wal_dir(), n_shards)
+        if dur.group_commit > 1:
+            wal_set.set_group_commit(dur.group_commit, dur.group_commit_ms)
         if recovered:
             records = wal_set.recover_records()
+            if dur.compact_wal and not spec.sharded:
+                # Replay-speed knob: dead insert rows (vid deleted later
+                # in the log) never re-land.  Local backend only — the
+                # sharded stream's handle assignment is positional.
+                records, _dropped = compact_wal_records(records)
             after = min(manifest.get("extra", {}).get("wal_seqnos", [-1]))
             # The checkpoint truncated the logs: seqno numbering must
             # resume ABOVE the manifest stamp, or the next recovery would
@@ -300,7 +391,7 @@ def open(
             # previous incarnation intact (old snapshot + old WAL).
             backend.attach_durability(wal_set)
             if not dur.snapshot_on_open and (
-                snapshot_exists(dur.resolved_snapshot_dir())
+                store.exists()
                 or any(s >= 0 for s in wal_set.last_seqnos())
             ):
                 raise ValueError(
@@ -319,6 +410,8 @@ def open(
         # The offline build is not in the WAL; snapshot it so a crash
         # before the first checkpoint still recovers to a served state
         # (checkpoint also truncates any previous incarnation's WAL —
-        # strictly after the new snapshot commits).
-        svc.checkpoint()
+        # strictly after the new snapshot commits).  Always a FULL base:
+        # a fresh rebuild must supersede — never chain onto — whatever
+        # delta chain a previous incarnation left in the store.
+        svc.checkpoint(delta=False)
     return svc

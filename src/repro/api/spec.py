@@ -88,8 +88,28 @@ class DurabilitySpec:
     root, every update dispatch is WAL-appended (fsync'd) before it runs,
     ``checkpoint()`` writes an atomic snapshot stamping each shard's
     applied WAL seqno and truncates the logs, and ``spfresh.open`` replays
-    snapshot + WAL tails.  ``checkpoint_every=N`` auto-checkpoints after
-    every N update rows (0 = manual/close only).
+    snapshot + WAL tails.  ``checkpoint_every=N`` auto-checkpoints (full
+    base snapshot) after every N update rows (0 = manual/close only).
+
+    The durability **fast path** (paper §4.4's block-granular
+    copy-on-write):
+
+    * ``delta_every=N`` — every N update rows, auto-checkpoint as a
+      **delta** snapshot: only the blocks the pool's dirty bitmap marked
+      since the last unit, one file per shard, chained to the base.
+      Checkpoint bytes scale with churn, not index size.
+    * ``compact_every=M`` — once M deltas stack on the base, the next
+      delta-cadence checkpoint is promoted to a compaction: a fresh full
+      base folds the chain and prunes it (0 = never auto-compact).
+    * ``group_commit=N`` (+ ``group_commit_ms``) — batch up to N update
+      dispatches per WAL fsync.  The ack point does not move: the service
+      forces a sync before an update call returns, so one fsync covers
+      every dispatch that ran inside the call (retries, interleaved
+      maintenance, ``insert_bulk`` chunks).
+    * ``compact_wal=True`` — on recovery, mask insert rows whose vids
+      were later deleted before replaying (local backend; preserves the
+      live set and version map, not the physical block layout — see
+      ``storage.wal.compact_wal_records``).
     """
 
     root: str | None = None
@@ -98,6 +118,12 @@ class DurabilitySpec:
     checkpoint_every: int = 0
     snapshot_on_open: bool = True          # durability point for the build
     checkpoint_on_close: bool = True
+    # --- durability fast path ---
+    delta_every: int = 0                   # rows per auto DELTA checkpoint
+    compact_every: int = 16                # deltas per chain before re-base
+    group_commit: int = 0                  # dispatches per WAL fsync window
+    group_commit_ms: float = 0.0           # window age-out (0 = count only)
+    compact_wal: bool = False              # replay-side WAL compaction
 
     @property
     def enabled(self) -> bool:
@@ -188,6 +214,8 @@ class ServiceSpec:
         assert self.serve.policy in ("ratio", "backlog"), self.serve.policy
         assert self.durability.checkpoint_every >= 0
         dur = self.durability
+        assert dur.delta_every >= 0 and dur.compact_every >= 0
+        assert dur.group_commit >= 0 and dur.group_commit_ms >= 0
         if dur.root is None and (dur.wal_dir is None) != (
                 dur.snapshot_dir is None):
             # Half-configured durability would silently run ephemeral.

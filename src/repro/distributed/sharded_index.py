@@ -587,6 +587,9 @@ class ShardedIndex(DurableBackend):
     def _snapshot_state(self):
         return self.stacked
 
+    def _set_snapshot_state(self, state):
+        self.stacked = state
+
     def _snapshot_extra(self):
         return {"backend": "sharded", "n_shards": self.n_shards}
 
@@ -617,15 +620,16 @@ class ShardedIndex(DurableBackend):
         n_shards: int,
         **kwargs: Any,
     ) -> tuple["ShardedIndex", dict]:
-        """Load a stacked-state snapshot; returns (index, manifest).
-        WAL replay on top is the caller's move (`spfresh.open` wires
-        ``WalSet.recover_records`` → ``replay``)."""
-        from repro.storage.snapshot import load_snapshot
+        """Load a stacked-state snapshot chain (base + per-shard deltas);
+        returns (index, manifest).  WAL replay on top is the caller's
+        move (`spfresh.open` wires ``WalSet.recover_records`` →
+        ``replay``)."""
+        from repro.storage.snapshot import SnapshotStore
 
         template = stack_states(
             [make_empty_state(cfg) for _ in range(n_shards)]
         )
-        stacked, manifest = load_snapshot(snapshot_dir, template)
+        stacked, manifest = SnapshotStore(snapshot_dir).load(template)
         extra = manifest.get("extra", {})
         if extra.get("n_shards", n_shards) != n_shards:
             raise ValueError(

@@ -35,9 +35,12 @@ def _print_report(service) -> None:
           f"pad_waste={q['padding_waste_frac']:.3f} "
           f"depth_avg={q['depth_rows_avg']:.0f} depth_max={q['depth_rows_max']}")
     if d["durable"]:
+        wal = d.get("wal", {})
         print(f"durability: recovered={d['recovered']} "
               f"wal_seqnos={d['wal_seqnos']} "
-              f"since_ckpt={d['updates_since_checkpoint']}")
+              f"since_ckpt={d['updates_since_checkpoint']} "
+              f"chain_len={d.get('snapshot_chain_len', 0)} "
+              f"fsyncs/dispatch={wal.get('fsyncs_per_append', 1):.2f}")
     for op in ("search", "insert", "delete"):
         p = rep[op]
         if p:
@@ -74,6 +77,10 @@ def build_spec(args):
         maintenance=spfresh.MaintenanceSpec(jobs_per_round=jobs),
         durability=spfresh.DurabilitySpec(
             root=args.durable, checkpoint_every=args.checkpoint_every,
+            delta_every=args.delta_every, compact_every=args.compact_every,
+            group_commit=args.group_commit,
+            group_commit_ms=args.group_commit_ms,
+            compact_wal=args.compact_wal,
         ),
         shards=spfresh.ShardSpec(n_shards=args.shards),
     )
@@ -97,8 +104,26 @@ def main() -> None:
                          "under --durable and replay the per-shard WALs "
                          "instead of rebuilding")
     ap.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
-                    help="auto-checkpoint (snapshot + WAL truncate) every "
-                         "N update rows (0 = only at exit)")
+                    help="auto-checkpoint (FULL snapshot + WAL truncate) "
+                         "every N update rows (0 = only at exit)")
+    ap.add_argument("--delta-every", type=int, default=0, metavar="N",
+                    help="auto-checkpoint a DELTA snapshot (only blocks "
+                         "dirtied since the last unit, per shard) every "
+                         "N update rows (0 = full snapshots only)")
+    ap.add_argument("--compact-every", type=int, default=16, metavar="M",
+                    help="fold the delta chain into a fresh base once M "
+                         "deltas stack on it (0 = never auto-compact)")
+    ap.add_argument("--group-commit", type=int, default=0, metavar="N",
+                    help="batch up to N update dispatches per WAL fsync "
+                         "(ack still waits for the fsync; 0 = fsync "
+                         "every dispatch)")
+    ap.add_argument("--group-commit-ms", type=float, default=0.0,
+                    help="group-commit window age-out in ms (0 = close "
+                         "on count/ack only)")
+    ap.add_argument("--compact-wal", action="store_true",
+                    help="on --recover, drop insert rows whose vids were "
+                         "later deleted before replaying (faster replay; "
+                         "local backend)")
     ap.add_argument("--policy", choices=["ratio", "backlog"], default="ratio")
     ap.add_argument("--ratio", type=int, default=2,
                     help="fg update batches per bg slot (0 disables)")

@@ -67,7 +67,9 @@ class IndexBackend(Protocol):
 
     def attach_durability(self, wal_set) -> None: ...
 
-    def checkpoint(self, snapshot_dir: str) -> None: ...
+    def checkpoint(self, snapshot_dir: str, *, delta: bool = False) -> None: ...
+
+    def wal_sync(self) -> None: ...
 
     def replay(self, records, after_seqno: int = -1) -> int: ...
 
@@ -155,6 +157,9 @@ class LocalBackend(DurableBackend):
     # --------------- durability hooks (DurableBackend) -----------------
     def _snapshot_state(self):
         return self.index.state
+
+    def _set_snapshot_state(self, state):
+        self.index.state = state
 
     def _snapshot_extra(self):
         return {"backend": "local"}

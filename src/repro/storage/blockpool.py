@@ -12,6 +12,14 @@ int32 stack.  Everything is functional: each op returns a new pool pytree.
 
 Blocks carry payload + metadata per slot, mirroring the paper's on-disk tuple
 ``<vector id, version number, raw vector>``.
+
+Dirty tracking (paper §4.4, the block controller's copy-on-write ledger):
+``dirty[B_cap]`` marks every block whose payload or slot metadata changed
+since the last checkpoint cleared it.  All write paths set it — APPEND
+tail writes, PUT rewrites, GC write-backs, and block frees (a freed
+block's cleared ``block_vid`` must reach the next delta snapshot too).
+``storage.snapshot`` serializes only dirty blocks into delta snapshots,
+making checkpoint bytes proportional to churn instead of capacity.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ class BlockPool:
     posting_len: Array     # (P_cap,) i32 vectors in posting
     free_stack: Array      # (B_cap,) i32 free block ids (top at index free_top-1)
     free_top: Array        # () i32 number of free blocks
+    dirty: Array           # (B_cap,) bool — block changed since last checkpoint
 
     @property
     def posting_capacity(self) -> int:
@@ -78,7 +87,13 @@ def make_block_pool(
         posting_len=jnp.zeros((num_postings_cap,), jnp.int32),
         free_stack=jnp.arange(num_blocks, dtype=jnp.int32),
         free_top=jnp.asarray(num_blocks, jnp.int32),
+        dirty=jnp.zeros((num_blocks,), bool),
     )
+
+
+def clear_dirty(pool: BlockPool) -> BlockPool:
+    """All blocks clean — called after a checkpoint serializes the pool."""
+    return pool.replace(dirty=jnp.zeros_like(pool.dirty))
 
 
 # ---------------------------------------------------------------------------
@@ -106,10 +121,12 @@ def _free_block(pool: BlockPool, bid: Array) -> BlockPool:
     block_vid = jnp.where(
         do, pool.block_vid.at[safe].set(-1), pool.block_vid
     )
+    dirty = jnp.where(do, pool.dirty.at[safe].set(True), pool.dirty)
     return pool.replace(
         free_stack=free_stack,
         free_top=jnp.where(do, pool.free_top + 1, pool.free_top),
         block_vid=block_vid,
+        dirty=dirty,
     )
 
 
@@ -168,6 +185,7 @@ def append_one(
     posting_len = jnp.where(
         ok, pool.posting_len.at[pid].add(1), pool.posting_len
     )
+    dirty = jnp.where(ok, pool.dirty.at[safe_bid].set(True), pool.dirty)
     return (
         pool.replace(
             blocks=blocks,
@@ -175,6 +193,7 @@ def append_one(
             block_ver=block_ver,
             posting_blocks=posting_blocks,
             posting_len=posting_len,
+            dirty=dirty,
         ),
         ok,
     )
@@ -284,6 +303,7 @@ def append_scatter(
     posting_len = pool.posting_len.at[jnp.where(ok, safe, p_cap)].add(
         1, mode="drop"
     )
+    dirty = pool.dirty.at[tb].set(True, mode="drop")
     return (
         pool.replace(
             blocks=blocks,
@@ -292,6 +312,7 @@ def append_scatter(
             posting_blocks=posting_blocks,
             posting_len=posting_len,
             free_top=pool.free_top - jnp.where(have, n_new, 0),
+            dirty=dirty,
         ),
         ok,
     )
@@ -407,6 +428,9 @@ def free_postings(pool: BlockPool, pids: Array, enable: Array) -> BlockPool:
     block_vid = pool.block_vid.at[
         jnp.where(flat_do, flat_bids, nb_cap)
     ].set(-1, mode="drop")
+    dirty = pool.dirty.at[
+        jnp.where(flat_do, flat_bids, nb_cap)
+    ].set(True, mode="drop")
     row = jnp.where(enable, safe, pool.num_postings_cap)
     posting_blocks = pool.posting_blocks.at[row].set(-1, mode="drop")
     posting_len = pool.posting_len.at[row].set(0, mode="drop")
@@ -416,6 +440,7 @@ def free_postings(pool: BlockPool, pids: Array, enable: Array) -> BlockPool:
         block_vid=block_vid,
         posting_blocks=posting_blocks,
         posting_len=posting_len,
+        dirty=dirty,
     )
 
 
@@ -487,6 +512,7 @@ def put_postings(
     posting_len = pool.posting_len.at[row].set(
         ns.astype(jnp.int32), mode="drop"
     )
+    dirty = pool.dirty.at[tgt].set(True, mode="drop")
     return (
         pool.replace(
             blocks=blocks,
@@ -495,6 +521,7 @@ def put_postings(
             posting_blocks=posting_blocks,
             posting_len=posting_len,
             free_top=pool.free_top - jnp.sum(used),
+            dirty=dirty,
         ),
         ok,
     )
@@ -554,6 +581,7 @@ def put_posting(
                 block_vid=block_vid,
                 block_ver=block_ver,
                 posting_blocks=posting_blocks,
+                dirty=pool2.dirty.at[safe].set(True),
             )
 
         pool = jax.lax.cond(ok & (i < n_blocks_needed), write, lambda p: p, pool)

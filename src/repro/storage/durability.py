@@ -8,12 +8,23 @@ then WAL truncate, and the replay loop that re-applies a dispatch stream
 through the subclass's ``_apply_record``.  Backends supply only what
 differs: the state pytree to snapshot, manifest extras, the per-op
 dispatch arms, and the shard count.
+
+Checkpoints go through :class:`~repro.storage.snapshot.SnapshotStore`:
+``checkpoint(dir)`` writes a full **base** unit (which is also the chain
+compaction — the in-memory state already equals base + deltas + dirty
+tail, so folding is a fresh full write that prunes the old chain), while
+``checkpoint(dir, delta=True)`` writes a **delta** unit holding only the
+blocks the pool's dirty bitmap marked since the previous unit, one file
+per shard.  Either way the backend's in-memory state is swapped for the
+dirty-cleared twin afterwards, so the next delta starts from a clean
+ledger, and the WALs restart empty only after the unit commits.
 """
 from __future__ import annotations
 
 import dataclasses
 
-from repro.storage.snapshot import save_snapshot
+from repro.storage.blockpool import clear_dirty
+from repro.storage.snapshot import SnapshotStore
 
 
 class DurableBackend:
@@ -21,6 +32,7 @@ class DurableBackend:
 
     Subclass hooks:
       * ``_snapshot_state()``  — the pytree the checkpoint serializes
+      * ``_set_snapshot_state(state)`` — install the dirty-cleared state
       * ``_snapshot_extra()``  — backend-specific manifest fields
       * ``_apply_record(rec)`` — re-run one WAL dispatch (replay arms)
       * ``_wal_shards``        — logs in the WalSet (1 for local)
@@ -33,6 +45,9 @@ class DurableBackend:
 
     # ------------------------- subclass hooks --------------------------
     def _snapshot_state(self):
+        raise NotImplementedError
+
+    def _set_snapshot_state(self, state) -> None:
         raise NotImplementedError
 
     def _snapshot_extra(self) -> dict:
@@ -75,18 +90,34 @@ class DurableBackend:
         The snapshot is one atomic commit, so shards advance together."""
         return [self._wal_applied] * self._wal_shards
 
-    def checkpoint(self, snapshot_dir: str) -> None:
-        """Atomic snapshot stamping the applied WAL seqnos and the
+    def wal_sync(self) -> None:
+        """Force any group-commit-buffered WAL records durable — the ack
+        point the service crosses before returning an update."""
+        if self.wal_set is not None:
+            self.wal_set.sync()
+
+    def checkpoint(self, snapshot_dir: str, *, delta: bool = False) -> None:
+        """Atomic snapshot unit stamping the applied WAL seqnos and the
         replay-critical config; the WALs restart empty only after the
-        snapshot commit."""
-        save_snapshot(
-            snapshot_dir, self._snapshot_state(),
-            extra={
-                "wal_seqnos": self.wal_seqnos(),
-                "lire_config": dataclasses.asdict(self._lire_config()),
-                **self._snapshot_extra(),
-            },
-        )
+        unit commit.  ``delta=True`` writes an incremental unit (dirty
+        blocks + non-block leaves, per shard) chained onto the store's
+        head; it silently promotes to a full base when no chain exists
+        yet.  Afterwards the in-memory state is the dirty-cleared twin."""
+        if self.wal_set is not None:
+            self.wal_set.sync()    # buffered records precede the stamp
+        store = SnapshotStore(snapshot_dir)
+        state = self._snapshot_state()
+        cleared = state.replace(pool=clear_dirty(state.pool))
+        extra = {
+            "wal_seqnos": self.wal_seqnos(),
+            "lire_config": dataclasses.asdict(self._lire_config()),
+            **self._snapshot_extra(),
+        }
+        if delta and store.has_base():
+            store.save_delta(state, n_shards=self._wal_shards, extra=extra)
+        else:
+            store.save_base(cleared, extra=extra)
+        self._set_snapshot_state(cleared)
         if self.wal_set is not None:
             self.wal_set.truncate()
 

@@ -1,23 +1,37 @@
 """Snapshot store — paper §4.4 crash recovery (snapshot half).
 
-A snapshot captures the full functional index state (centroid index, version
-map, block mapping, block pool — everything is one pytree here).  Writing is
-atomic: we write to a temp dir and rename.  Restore needs a *template* state
-(built from the config) to recover the treedef; leaves are loaded by position.
+Two on-disk formats live here:
 
-The paper's block-level copy-on-write + pre-release buffer exists to keep
-*on-disk* blocks rollback-consistent between snapshots; in the functional
-design every step already produces a fresh state, so the snapshot is simply
-the latest state — we keep the pre-release semantics at the WAL level
-(truncate only after the snapshot rename commits).
+* **Legacy full snapshots** (``save_snapshot``/``load_snapshot``): one dir
+  with ``manifest.json`` + ``leaves.npz`` holding every pytree leaf,
+  committed by atomic rename with a ``path.old`` rotation fallback.  Still
+  used by the training checkpointer and ``SPFreshIndex.snapshot``.
+
+* **Chained incremental snapshots** (:class:`SnapshotStore`): the paper's
+  block-level copy-on-write made durable.  A store directory holds *units*
+  — ``base-<id>`` dirs (a full snapshot) and ``delta-<id>`` dirs (only the
+  blocks the pool's dirty bitmap marked since the previous unit, plus the
+  small non-block leaves, as one file per shard) — chained by parent links
+  in their manifests.  A ``CURRENT`` pointer file names the head unit and
+  is the commit point: it is replaced atomically only after the new unit
+  dir has fully landed, so at EVERY crash point the store resolves a
+  complete recovery chain.  Restore = base + ordered deltas; compaction
+  folds the chain back into a fresh base and only then prunes the old
+  units.
+
+Manifest format 2 adds ``kind``/``unit``/``parent``/``chain_len``/
+``n_shards``; format-1 snapshots (and states saved before the pool grew
+its ``dirty`` leaf) load through an explicit migration path: the missing
+dirty-bitmap leaf is reconstructed as all-clean from the template.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import tempfile
-from typing import Any, TypeVar
+from typing import Any, Callable, TypeVar
 
 import jax
 import numpy as np
@@ -26,7 +40,92 @@ T = TypeVar("T")
 
 _MANIFEST = "manifest.json"
 _LEAVES = "leaves.npz"
+_CURRENT = "CURRENT"
+_FORMAT = 2
 
+# Test seam: called with a named step label at every crash point of a
+# unit commit / compaction prune so tests can kill the process (raise) at
+# each step and assert the store still resolves a complete chain.
+_crash_hook: Callable[[str], None] | None = None
+
+
+def _crash_point(label: str) -> None:
+    if _crash_hook is not None:
+        _crash_hook(label)
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    """Durably commit a directory's entries (renames live here) — the WAL
+    is truncated right after a checkpoint, so the snapshot must reach the
+    platter first or power loss could destroy acknowledged updates."""
+    fd = os.open(path, getattr(os, "O_DIRECTORY", os.O_RDONLY))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_tree(d: str) -> None:
+    for name in os.listdir(d):
+        _fsync_file(os.path.join(d, name))
+    _fsync_dir(d)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers shared by both formats
+# ---------------------------------------------------------------------------
+
+def _dirty_leaf_index(template: Any) -> int | None:
+    """Leaf index of ``pool.dirty`` in ``template``'s flatten order (None
+    when the template has no block pool — e.g. a train-state dict)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    for i, (path, _leaf) in enumerate(flat):
+        names = [k.name for k in path
+                 if isinstance(k, jax.tree_util.GetAttrKey)]
+        if names[-2:] == ["pool", "dirty"]:
+            return i
+    return None
+
+
+def _block_leaf_indices(template: Any) -> dict[str, int] | None:
+    """Leaf indices of the per-block pool arrays (``pool.blocks`` /
+    ``block_vid`` / ``block_ver`` / ``dirty``) — the leaves a delta
+    snapshot stores at block granularity instead of in full."""
+    want = ("blocks", "block_vid", "block_ver", "dirty")
+    out: dict[str, int] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    for i, (path, _leaf) in enumerate(flat):
+        names = [k.name for k in path
+                 if isinstance(k, jax.tree_util.GetAttrKey)]
+        if len(names) >= 2 and names[-2] == "pool" and names[-1] in want:
+            out[names[-1]] = i
+    return out if len(out) == len(want) else None
+
+
+def _assemble(template: T, leaves_np: list[np.ndarray]) -> T:
+    tmpl_leaves, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for arr, tmpl in zip(leaves_np, tmpl_leaves):
+        want = np.asarray(tmpl)
+        if arr.shape != want.shape:
+            raise ValueError(
+                f"snapshot leaf shape {arr.shape} != template {want.shape}"
+            )
+        out.append(jax.numpy.asarray(arr, dtype=want.dtype))
+    return treedef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Legacy full snapshots (format 1)
+# ---------------------------------------------------------------------------
 
 def save_snapshot(path: str, state: Any, *, step: int = 0, extra: dict | None = None) -> None:
     """Crash-safe commit: write to a temp dir, rotate the previous
@@ -45,12 +144,15 @@ def save_snapshot(path: str, state: Any, *, step: int = 0, extra: dict | None = 
     try:
         np.savez(os.path.join(tmp, _LEAVES), **arrays)
         manifest = {
+            "format": _FORMAT,
+            "kind": "base",
             "n_leaves": len(leaves),
             "step": step,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, _MANIFEST), "w") as fh:
             json.dump(manifest, fh)
+        _fsync_tree(tmp)       # data on the platter before the renames
         if os.path.exists(path):
             # Only rotate when a live primary exists: if a prior crash
             # left the .old fallback as the ONLY snapshot, deleting it
@@ -58,6 +160,7 @@ def save_snapshot(path: str, state: Any, *, step: int = 0, extra: dict | None = 
             shutil.rmtree(old, ignore_errors=True)
             os.replace(path, old)
         os.replace(tmp, path)  # commit
+        _fsync_dir(parent)     # ...and the renames before WAL truncation
         shutil.rmtree(old, ignore_errors=True)
     finally:
         if os.path.exists(tmp):
@@ -80,28 +183,347 @@ def read_manifest(path: str) -> dict:
         return json.load(fh)
 
 
+def _load_leaves_npz(path: str, template: Any, n_leaves: int) -> list[np.ndarray]:
+    """Positional ``leaf_i`` arrays with the format-1 migration: a
+    snapshot written before the pool grew its ``dirty`` leaf is one leaf
+    short; the missing bitmap is reconstructed all-clean (zeros) from the
+    template at its flatten position."""
+    data = np.load(path)
+    tmpl_leaves = jax.tree_util.tree_leaves(template)
+    if n_leaves == len(tmpl_leaves):
+        return [data[f"leaf_{i}"] for i in range(n_leaves)]
+    dirty_at = _dirty_leaf_index(template)
+    if dirty_at is not None and n_leaves == len(tmpl_leaves) - 1:
+        out, src = [], 0
+        for i, tmpl in enumerate(tmpl_leaves):
+            if i == dirty_at:
+                out.append(np.zeros_like(np.asarray(tmpl)))
+            else:
+                out.append(data[f"leaf_{src}"])
+                src += 1
+        return out
+    raise ValueError(
+        f"snapshot has {n_leaves} leaves, template has {len(tmpl_leaves)}"
+    )
+
+
 def load_snapshot(path: str, template: T) -> tuple[T, dict]:
     """Restore a state with the same structure as ``template``."""
     path = _resolve(path)
     with open(os.path.join(path, _MANIFEST)) as fh:
         manifest = json.load(fh)
-    data = np.load(os.path.join(path, _LEAVES))
-    leaves, treedef = jax.tree_util.tree_flatten(template)
-    if manifest["n_leaves"] != len(leaves):
-        raise ValueError(
-            f"snapshot has {manifest['n_leaves']} leaves, template has {len(leaves)}"
-        )
-    new_leaves = []
-    for i, tmpl in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
-        want = np.asarray(tmpl)
-        if arr.shape != want.shape:
-            raise ValueError(
-                f"leaf {i}: snapshot shape {arr.shape} != template {want.shape}"
-            )
-        new_leaves.append(jax.numpy.asarray(arr, dtype=want.dtype))
-    return treedef.unflatten(new_leaves), manifest
+    leaves = _load_leaves_npz(
+        os.path.join(path, _LEAVES), template, manifest["n_leaves"]
+    )
+    return _assemble(template, leaves), manifest
 
 
 def snapshot_exists(path: str) -> bool:
     return os.path.exists(os.path.join(_resolve(path), _MANIFEST))
+
+
+# ---------------------------------------------------------------------------
+# SnapshotStore — chained base + delta units (format 2)
+# ---------------------------------------------------------------------------
+
+_UNIT_RE = re.compile(r"^(base|delta)-(\d{10})$")
+
+
+class SnapshotChainError(RuntimeError):
+    """The store's head chain references a unit that no longer resolves."""
+
+
+class SnapshotStore:
+    """Base + delta snapshot chain under one directory (see module doc).
+
+    The store is format-compatible with a legacy full-snapshot dir: a
+    root that holds only ``manifest.json``/``leaves.npz`` (or its
+    ``.old`` rotation) loads as an implicit base, and the first
+    ``save_base`` converts the root to the chained layout (pruning the
+    legacy files only after the new unit commits).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    # ----------------------------- resolve -----------------------------
+    def _units(self) -> list[str]:
+        if not os.path.isdir(self.path):
+            return []
+        return sorted(
+            d for d in os.listdir(self.path)
+            if _UNIT_RE.match(d)
+            and os.path.exists(os.path.join(self.path, d, _MANIFEST))
+        )
+
+    def _unit_manifest(self, unit: str) -> dict:
+        with open(os.path.join(self.path, unit, _MANIFEST)) as fh:
+            return json.load(fh)
+
+    def _chain(self, head: str) -> list[str]:
+        """``[base, delta, ..., head]`` oldest-first; raises
+        :class:`SnapshotChainError` on a broken parent link."""
+        chain = []
+        unit: str | None = head
+        while unit is not None:
+            if not os.path.exists(os.path.join(self.path, unit, _MANIFEST)):
+                raise SnapshotChainError(
+                    f"{self.path}: chain references missing unit {unit!r}"
+                )
+            chain.append(unit)
+            unit = self._unit_manifest(unit).get("parent")
+        if not chain or not chain[-1].startswith("base-"):
+            raise SnapshotChainError(
+                f"{self.path}: chain from {head!r} has no base"
+            )
+        return chain[::-1]
+
+    def _head(self) -> str | None:
+        """The committed head unit: ``CURRENT`` when it resolves, else the
+        newest unit with a complete chain (crash between unit rename and
+        the CURRENT update — both states are consistent recovery points
+        because the WAL is truncated strictly after the commit)."""
+        cur = os.path.join(self.path, _CURRENT)
+        if os.path.exists(cur):
+            with open(cur) as fh:
+                head = fh.read().strip()
+            try:
+                self._chain(head)
+                return head
+            except SnapshotChainError:
+                pass
+        for unit in reversed(self._units()):
+            try:
+                self._chain(unit)
+                return unit
+            except SnapshotChainError:
+                continue
+        return None
+
+    def _legacy_exists(self) -> bool:
+        return os.path.exists(os.path.join(_resolve(self.path), _MANIFEST))
+
+    def exists(self) -> bool:
+        return self._head() is not None or self._legacy_exists()
+
+    def has_base(self) -> bool:
+        """True when a chained-layout head exists to hang a delta on (a
+        legacy-layout root must be rebased by a full save first)."""
+        return self._head() is not None
+
+    def read_manifest(self) -> dict:
+        head = self._head()
+        if head is not None:
+            return self._unit_manifest(head)
+        return read_manifest(self.path)
+
+    def chain_len(self) -> int:
+        """Deltas stacked on the current base (0 = head is a base)."""
+        head = self._head()
+        if head is None:
+            return 0
+        return int(self._unit_manifest(head).get("chain_len", 0))
+
+    # ------------------------------ write ------------------------------
+    def _next_unit(self, kind: str) -> str:
+        ids = [int(_UNIT_RE.match(u).group(2)) for u in self._units()]
+        return f"{kind}-{(max(ids) + 1 if ids else 1):010d}"
+
+    def _commit_unit(self, tmp: str, unit: str) -> None:
+        """tmp dir → unit dir → CURRENT, with crash points between; every
+        data file, the unit dir, and the store dir are fsync'd so the
+        commit is on the platter BEFORE the caller truncates the WAL."""
+        _fsync_tree(tmp)
+        _crash_point("pre_commit")
+        os.replace(tmp, os.path.join(self.path, unit))
+        _fsync_dir(self.path)
+        _crash_point("post_commit")
+        cur_tmp = os.path.join(self.path, f".current_tmp_{unit}")
+        with open(cur_tmp, "w") as fh:
+            fh.write(unit)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(cur_tmp, os.path.join(self.path, _CURRENT))
+        _fsync_dir(self.path)
+        _crash_point("post_current")
+
+    def _prune(self, keep: set[str]) -> None:
+        """Drop every unit outside ``keep`` plus any legacy files — only
+        reachable after the new head committed, so each deletion is safe
+        at every crash point."""
+        for unit in self._units():
+            if unit not in keep:
+                _crash_point(f"prune:{unit}")
+                shutil.rmtree(os.path.join(self.path, unit),
+                              ignore_errors=True)
+        for legacy in (_MANIFEST, _LEAVES):
+            p = os.path.join(self.path, legacy)
+            if os.path.exists(p):
+                _crash_point(f"prune:{legacy}")
+                os.remove(p)
+        old = self.path + ".old"
+        if os.path.exists(old):
+            _crash_point("prune:old")
+            shutil.rmtree(old, ignore_errors=True)
+
+    def save_base(self, state: Any, *, step: int = 0,
+                  extra: dict | None = None) -> str:
+        """Full snapshot as a new base unit; prunes the entire previous
+        chain (and any legacy-layout files) after the commit — this IS
+        the chain compaction: the in-memory state already equals
+        base + deltas + dirty tail, so folding is a fresh full write."""
+        os.makedirs(self.path, exist_ok=True)
+        unit = self._next_unit("base")
+        leaves = jax.tree_util.tree_leaves(state)
+        tmp = tempfile.mkdtemp(dir=self.path, prefix=".unit_tmp_")
+        try:
+            np.savez(
+                os.path.join(tmp, _LEAVES),
+                **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)},
+            )
+            manifest = {
+                "format": _FORMAT,
+                "kind": "base",
+                "unit": unit,
+                "parent": None,
+                "chain_len": 0,
+                "n_leaves": len(leaves),
+                "step": step,
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, _MANIFEST), "w") as fh:
+                json.dump(manifest, fh)
+            self._commit_unit(tmp, unit)
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._prune(keep={unit})
+        return unit
+
+    def save_delta(self, state: Any, *, n_shards: int = 1, step: int = 0,
+                   extra: dict | None = None) -> str:
+        """Delta unit: per shard, only the blocks marked dirty in
+        ``state.pool.dirty`` (payload + slot metadata) plus every
+        non-block leaf in full.  Chained onto the current head; restore
+        applies the chain oldest-first.  Requires an existing head (the
+        first checkpoint of a durable root is always a base)."""
+        head = self._head()
+        if head is None:
+            raise SnapshotChainError(
+                f"{self.path}: save_delta with no base snapshot to chain to"
+            )
+        blk = _block_leaf_indices(state)
+        if blk is None:
+            raise ValueError("save_delta needs a state with a block pool")
+        head_m = self._unit_manifest(head)
+        unit = self._next_unit("delta")
+        leaves = jax.tree_util.tree_leaves(state)
+        if head_m["n_leaves"] != len(leaves):
+            raise ValueError(
+                f"delta over a {head_m['n_leaves']}-leaf chain, state has "
+                f"{len(leaves)} (mixed-format chain?)"
+            )
+        # One device→host conversion per leaf, OUTSIDE the shard loop —
+        # re-materializing the stacked block arrays per shard would make
+        # the delta cost O(n_shards × full state) in transfers.
+        dirty = np.asarray(leaves[blk["dirty"]])
+        blk_np = {
+            name: np.asarray(leaves[blk[name]])
+            for name in ("blocks", "block_vid", "block_ver")
+        }
+        dense_np = {
+            j: np.asarray(leaf) for j, leaf in enumerate(leaves)
+            if j not in blk.values()
+        }
+        tmp = tempfile.mkdtemp(dir=self.path, prefix=".unit_tmp_")
+        try:
+            for s in range(n_shards):
+                sl = (lambda x: x[s]) if n_shards > 1 else (lambda x: x)
+                idx = np.flatnonzero(sl(dirty)).astype(np.int32)
+                arrays: dict[str, np.ndarray] = {"dirty_idx": idx}
+                for name, whole in blk_np.items():
+                    arrays[f"blk_{name}"] = sl(whole)[idx]
+                for j, whole in dense_np.items():
+                    arrays[f"leaf_{j}"] = sl(whole)
+                np.savez(os.path.join(tmp, f"shard_{s:03d}.npz"), **arrays)
+            manifest = {
+                "format": _FORMAT,
+                "kind": "delta",
+                "unit": unit,
+                "parent": head,
+                "chain_len": int(head_m.get("chain_len", 0)) + 1,
+                "n_leaves": len(leaves),
+                "n_shards": n_shards,
+                "block_leaves": blk,
+                "step": step,
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, _MANIFEST), "w") as fh:
+                json.dump(manifest, fh)
+            self._commit_unit(tmp, unit)
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+        return unit
+
+    # ------------------------------ read -------------------------------
+    def _apply_delta(self, leaves: list[np.ndarray], unit: str,
+                     manifest: dict) -> None:
+        blk = manifest["block_leaves"]
+        n_shards = int(manifest.get("n_shards", 1))
+        blk_idx = set(blk.values())
+        for s in range(n_shards):
+            data = np.load(os.path.join(self.path, unit, f"shard_{s:03d}.npz"))
+            idx = data["dirty_idx"]
+            for name in ("blocks", "block_vid", "block_ver"):
+                tgt = leaves[blk[name]]
+                if n_shards > 1:
+                    tgt[s][idx] = data[f"blk_{name}"]
+                else:
+                    tgt[idx] = data[f"blk_{name}"]
+            for j in range(len(leaves)):
+                if j in blk_idx:
+                    continue
+                arr = data[f"leaf_{j}"]
+                if n_shards > 1:
+                    leaves[j][s] = arr
+                else:
+                    leaves[j] = arr
+
+    def load(self, template: T) -> tuple[T, dict]:
+        """Resolve the head, walk to its base, and fold the deltas in
+        order.  The head unit's manifest (whose ``extra`` stamps the WAL
+        seqnos of the LAST checkpoint) is returned.  Falls back to the
+        legacy full-snapshot layout."""
+        head = self._head()
+        if head is None:
+            if self._legacy_exists():
+                return load_snapshot(self.path, template)
+            raise FileNotFoundError(f"{self.path}: no snapshot to load")
+        chain = self._chain(head)
+        base_m = self._unit_manifest(chain[0])
+        leaves = _load_leaves_npz(
+            os.path.join(self.path, chain[0], _LEAVES), template,
+            base_m["n_leaves"],
+        )
+        leaves = [np.array(x) for x in leaves]  # writable fold buffers
+        for unit in chain[1:]:
+            self._apply_delta(leaves, unit, self._unit_manifest(unit))
+        dirty_at = _dirty_leaf_index(template)
+        if dirty_at is not None:
+            # post-restore the state is by definition in sync with the
+            # chain head: nothing is dirty until the next update lands
+            leaves[dirty_at] = np.zeros_like(leaves[dirty_at])
+        return _assemble(template, leaves), self._unit_manifest(head)
+
+    # --------------------------- accounting ----------------------------
+    def unit_bytes(self, unit: str | None = None) -> int:
+        """On-disk bytes of one unit (default: head) — the benchmark's
+        checkpoint-cost metric."""
+        unit = unit or self._head()
+        if unit is None:
+            return 0
+        d = os.path.join(self.path, unit)
+        return sum(
+            os.path.getsize(os.path.join(d, f)) for f in os.listdir(d)
+        )

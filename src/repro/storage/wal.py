@@ -6,6 +6,20 @@ msgpack blobs with numpy payloads, fsync'd on every ``append`` (the paper's
 durability point is the SSD write; ours is the fsync — a record is
 acknowledged only after ``os.fsync`` returns).
 
+Group commit relaxes the per-append fsync without moving the ack point:
+with a ``(group_commit_n, group_commit_ms)`` window set, ``append`` only
+buffers (write + flush) and the fsync fires when the window fills, ages
+out, or a caller forces ``sync()``.  Because the log is append-only, one
+fsync covers every buffered record before it — a crash can only lose a
+contiguous UNSYNCED tail, so the service acks a dispatch after the next
+``sync()`` and replay determinism is preserved (the durable stream is
+always a prefix of the dispatched stream).
+
+``compact_wal_records`` is the replay-side compaction: insert rows whose
+vids are deleted later in the same stream are masked out (and fully-dead
+dispatch records dropped) before replay — the deletes themselves are kept
+because they must still kill snapshot-resident versions.
+
 Corruption policy: a *torn tail* (crash mid-append: short header, short
 body, or garbage bytes where the final record should be — a multi-page
 append may persist later pages without the first) is tolerated and treated
@@ -25,6 +39,7 @@ from __future__ import annotations
 import io
 import os
 import struct
+import time
 from dataclasses import dataclass
 from typing import Iterator
 
@@ -76,6 +91,7 @@ class WriteAheadLog:
         a caller that already scanned the file (WalSet's salvage pass) —
         skips the open-time rescan."""
         self.path = path
+        self.n_fsyncs = 0
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._seqno, clean_end = tail if tail is not None else self._scan_tail()
         if os.path.exists(path) and os.path.getsize(path) > clean_end:
@@ -104,11 +120,19 @@ class WriteAheadLog:
         self.append_encoded(_encode(rec))
         return self._seqno
 
-    def append_encoded(self, blob: bytes) -> None:
-        """Durability point: the append is acknowledged only post-fsync."""
+    def append_encoded(self, blob: bytes, *, sync: bool = True) -> None:
+        """Durability point: the append is acknowledged only post-fsync.
+        ``sync=False`` (group commit) defers the fsync to a later
+        ``sync()`` — the record is written + flushed but NOT durable yet."""
         self._fh.write(blob)
         self._fh.flush()
+        if sync:
+            self.sync()
+
+    def sync(self) -> None:
+        """fsync the log file (the group-commit window boundary)."""
         os.fsync(self._fh.fileno())
+        self.n_fsyncs += 1
 
     def truncate(self) -> None:
         """Called after a successful snapshot: the log restarts empty.
@@ -216,11 +240,22 @@ class WalSet:
     longest cleanly-readable prefix as authoritative (a crash can tear
     different logs at different records), re-syncs the laggards, and
     returns the authoritative record list.
+
+    ``set_group_commit(n, ms)`` arms the group-commit window: appends
+    buffer (write + flush, no fsync) until ``n`` records are pending or
+    the oldest pending record is ``ms`` old, then one ``sync()`` round
+    fsyncs every shard log.  ``pending`` counts buffered-but-not-durable
+    records; the service forces ``sync()`` before acknowledging updates.
     """
 
     def __init__(self, wal_dir: str, n_shards: int):
         self.wal_dir = wal_dir
         self.n_shards = n_shards
+        self.n_appends = 0
+        self.group_n = 0            # 0/1 = fsync every append (legacy)
+        self.group_ms = 0.0         # 0 = no age-out, count/force only
+        self._pending = 0
+        self._pending_since = 0.0
         os.makedirs(wal_dir, exist_ok=True)
         # Salvage pass: a mid-file-corrupt shard log is repaired from the
         # longest readable stream (the logs are replicas) instead of
@@ -270,14 +305,55 @@ class WalSet:
         """Last durable seqno per shard log (the snapshot manifest entry)."""
         return [log.next_seqno - 1 for log in self.logs]
 
+    def set_group_commit(self, n: int, ms: float = 0.0) -> None:
+        """Arm (n>1) or disarm (n<=1) the group-commit window."""
+        self.group_n = int(n)
+        self.group_ms = float(ms)
+
+    @property
+    def grouped(self) -> bool:
+        return self.group_n > 1
+
+    @property
+    def pending(self) -> int:
+        """Records written but not yet covered by an fsync."""
+        return self._pending
+
+    @property
+    def n_fsyncs(self) -> int:
+        """Total os.fsync calls across the shard logs' append/sync path."""
+        return sum(log.n_fsyncs for log in self.logs)
+
     def append(self, op: str, payload: dict[str, np.ndarray]) -> int:
         seqno = self.next_seqno
         blob = _encode(WalRecord(op=op, payload=payload, seqno=seqno))
         self._boot_streams = None
+        self.n_appends += 1
         for log in self.logs:
             log._seqno = seqno
-            log.append_encoded(blob)
+            log.append_encoded(blob, sync=not self.grouped)
+        if self.grouped:
+            if self._pending == 0:
+                self._pending_since = time.monotonic()
+            self._pending += 1
+            aged = (
+                self.group_ms > 0
+                and (time.monotonic() - self._pending_since) * 1e3
+                >= self.group_ms
+            )
+            if self._pending >= self.group_n or aged:
+                self.sync()
         return seqno
+
+    def sync(self) -> None:
+        """Force the group-commit window closed: one fsync round over all
+        shard logs; every previously buffered record becomes durable (the
+        ack point for the dispatches it covers).  No-op when clean."""
+        if self._pending == 0:
+            return
+        for log in self.logs:
+            log.sync()
+        self._pending = 0
 
     def recover_records(self) -> list[WalRecord]:
         """Authoritative post-crash record stream (see class docstring)."""
@@ -298,6 +374,16 @@ class WalSet:
             log._seqno = best[-1].seqno if best else -1
         return best
 
+    def stats(self) -> dict:
+        return {
+            "appends": self.n_appends,
+            "fsyncs": self.n_fsyncs,
+            "pending": self._pending,
+            "fsyncs_per_append": (
+                self.n_fsyncs / self.n_appends if self.n_appends else 0.0
+            ),
+        }
+
     def ensure_seqno_floor(self, seqno: int) -> None:
         """Never hand out a seqno ≤ ``seqno`` again.  Recovery calls this
         with the snapshot's stamped seqno: the checkpoint truncated the
@@ -309,9 +395,67 @@ class WalSet:
 
     def truncate(self) -> None:
         self._boot_streams = None
+        self._pending = 0          # truncation supersedes buffered records
         for log in self.logs:
             log.truncate()
 
     def close(self) -> None:
+        self.sync()                # buffered records stay durable
         for log in self.logs:
             log.close()
+
+
+# ---------------------------------------------------------------------------
+# Replay-side compaction
+# ---------------------------------------------------------------------------
+
+def compact_wal_records(
+    records: list[WalRecord],
+) -> tuple[list[WalRecord], int]:
+    """Mask insert rows whose vid is deleted later in ``records`` (and
+    drop dispatch records with no surviving rows); returns the compacted
+    stream and the number of rows dropped.
+
+    Only dispatch-level LOCAL records participate (insert payloads with
+    caller ``vids`` + ``valid`` masks); delete records are always kept —
+    they must still kill versions resident in the snapshot the stream
+    replays over.  Sharded streams (handle-assigning inserts without
+    ``vids``) pass through untouched.
+
+    Compaction preserves the recovered LIVE SET and the version map of
+    every surviving vid exactly; it does NOT preserve the physical block
+    layout bit-for-bit (a netted insert+delete pair's stale rows never
+    land), so it is an opt-in recovery-speed knob
+    (``DurabilitySpec.compact_wal``) rather than the default path.
+    """
+    last_del: dict[int, int] = {}
+    for t, rec in enumerate(records):
+        if rec.op == "delete" and "vids" in rec.payload:
+            vids = np.asarray(rec.payload["vids"]).reshape(-1)
+            valid = rec.payload.get("valid")
+            mask = (np.ones(vids.shape[0], bool) if valid is None
+                    else np.asarray(valid, bool).reshape(-1))
+            for v in vids[mask & (vids >= 0)].tolist():
+                last_del[int(v)] = t
+    if not last_del:
+        return list(records), 0
+    out: list[WalRecord] = []
+    dropped = 0
+    for t, rec in enumerate(records):
+        if (rec.op == "insert" and "vids" in rec.payload
+                and "valid" in rec.payload):
+            vids = np.asarray(rec.payload["vids"]).reshape(-1)
+            mask = np.asarray(rec.payload["valid"], bool).reshape(-1)
+            dead = mask & np.asarray(
+                [last_del.get(int(v), -1) > t for v in vids]
+            )
+            if dead.any():
+                dropped += int(dead.sum())
+                mask = mask & ~dead
+                if not mask.any():
+                    continue           # the whole dispatch is dead rows
+                payload = dict(rec.payload)
+                payload["valid"] = mask
+                rec = WalRecord(op=rec.op, payload=payload, seqno=rec.seqno)
+        out.append(rec)
+    return out, dropped

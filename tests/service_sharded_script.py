@@ -126,4 +126,36 @@ assert svc3.backlog() == 0
 svc3.close()
 print("PASS sharded_checkpoint_tail_replay")
 
+# ---- delta-snapshot cycle: base → delta (per-shard files) → crash ----
+from repro.storage.snapshot import SnapshotStore
+
+store = SnapshotStore(SPEC.durability.resolved_snapshot_dir())
+svc4 = spfresh.open(SPEC)          # recover from the clean close (a base)
+assert store.has_base() and store.chain_len() == 0
+more2 = make_clustered(rng, 24, 16, n_clusters=2)
+h3, landed3 = svc4.insert(more2)
+assert landed3.all()
+svc4.checkpoint(delta=True)
+assert store.chain_len() == 1
+unit_dir = os.path.join(SPEC.durability.resolved_snapshot_dir(),
+                        store._head())
+shard_files = sorted(f for f in os.listdir(unit_dir) if f.endswith(".npz"))
+assert shard_files == ["shard_000.npz", "shard_001.npz"], shard_files
+more3 = make_clustered(rng, 12, 16, n_clusters=2)
+svc4.insert(more3)                 # WAL tail on top of the delta
+want3 = svc4.search(more2[:8], k=5)
+
+svc5 = spfresh.open(SPEC)          # crash → base + delta + tail replay
+assert svc5.recovered
+got3 = svc5.search(more2[:8], k=5)
+np.testing.assert_array_equal(want3[1], got3[1])
+np.testing.assert_allclose(want3[0], got3[0], rtol=1e-5)
+assert svc5.stats() == svc4.stats(), "delta-chain recovery stats diverged"
+_, hit3 = svc5.search(more2[:8], k=1)
+assert (hit3[:, 0] == h3[:8]).all(), "delta-chain recovery lost handles"
+svc5.checkpoint(delta=False)       # compaction folds + prunes the chain
+assert store.chain_len() == 0
+svc5.close()
+print("PASS sharded_delta_chain_cycle")
+
 print("ALL_SERVICE_SHARDED_PASS")

@@ -126,3 +126,89 @@ def test_disabled_append_is_noop(rng):
     assert not bool(ok)
     assert int(pool2.posting_len[0]) == 0
     assert int(pool2.free_top) == int(pool.free_top)
+
+
+# ---------------------------------------------------------------------------
+# Dirty tracking (delta-snapshot ledger)
+# ---------------------------------------------------------------------------
+
+def _changed_blocks(before, after):
+    """Block ids whose payload or slot metadata differ between pools."""
+    diff = (
+        (np.asarray(before.blocks) != np.asarray(after.blocks)).any((1, 2))
+        | (np.asarray(before.block_vid) != np.asarray(after.block_vid)).any(1)
+        | (np.asarray(before.block_ver) != np.asarray(after.block_ver)).any(1)
+    )
+    return set(np.flatnonzero(diff).tolist())
+
+
+def test_dirty_starts_clean_and_append_marks(rng):
+    pool = make_pool()
+    assert not np.asarray(pool.dirty).any()
+    before = pool
+    pool, ok = _append(pool, 2, rng.normal(size=8), 7)
+    assert bool(ok)
+    marked = set(np.flatnonzero(np.asarray(pool.dirty)).tolist())
+    assert _changed_blocks(before, pool) <= marked and marked
+    pool2 = bp.clear_dirty(pool)
+    assert not np.asarray(pool2.dirty).any()
+
+
+def test_dirty_covers_every_write_path(rng):
+    """Every block whose content changed since clear_dirty must be marked
+    — the delta-snapshot correctness invariant (a changed-but-clean block
+    would silently vanish from the recovery chain)."""
+    pool = make_pool(num_blocks=64, num_postings_cap=16)
+    cap = pool.posting_capacity
+    # seed three postings through different paths, then clear the ledger
+    vecs = rng.normal(size=(cap, 8)).astype(np.float32)
+    vids = np.arange(cap, dtype=np.int32)
+    for pid in (0, 1, 2):
+        pool, ok = bp.put_posting(
+            pool, jnp.asarray(pid), jnp.asarray(vecs),
+            jnp.asarray(vids + 100 * pid),
+            jnp.zeros(cap, jnp.uint8), jnp.asarray(10), jnp.asarray(True),
+        )
+        assert bool(ok)
+    pool = bp.clear_dirty(pool)
+    before = pool
+
+    # batched appends (scatter), bulk PUT rewrite, batched frees
+    pool, oks = bp.append_scatter(
+        pool, jnp.asarray([0, 0, 1], jnp.int32),
+        jnp.asarray(rng.normal(size=(3, 8)), jnp.float32),
+        jnp.asarray([500, 501, 502], jnp.int32),
+        jnp.zeros(3, jnp.uint8), jnp.ones(3, bool),
+    )
+    assert np.asarray(oks).all()
+    pool, ok = bp.put_postings(
+        pool, jnp.asarray([2], jnp.int32),
+        jnp.asarray(vecs[None], jnp.float32),
+        jnp.asarray(vids[None] + 900, jnp.int32),
+        jnp.zeros((1, cap), jnp.uint8), jnp.asarray([6], jnp.int32),
+        jnp.ones(1, bool),
+    )
+    assert np.asarray(ok).all()
+    pool = bp.free_postings(
+        pool, jnp.asarray([1], jnp.int32), jnp.ones(1, bool)
+    )
+    marked = set(np.flatnonzero(np.asarray(pool.dirty)).tolist())
+    changed = _changed_blocks(before, pool)
+    assert changed <= marked, f"changed-but-clean blocks {changed - marked}"
+    assert marked, "write paths marked nothing dirty"
+
+
+def test_dirty_scatter_matches_sequential_appends(rng):
+    """append_scatter and append_batch mark the same dirty set for the
+    same landed rows (parity of the ledger, not just the payload)."""
+    pids = jnp.asarray([0, 1, 0, 2, 1, 0], jnp.int32)
+    vecs = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    vids = jnp.arange(6, dtype=jnp.int32)
+    vers = jnp.zeros(6, jnp.uint8)
+    en = jnp.ones(6, bool)
+    p_seq, ok_a = bp.append_batch(make_pool(), pids, vecs, vids, vers, en)
+    p_sc, ok_b = bp.append_scatter(make_pool(), pids, vecs, vids, vers, en)
+    np.testing.assert_array_equal(np.asarray(ok_a), np.asarray(ok_b))
+    np.testing.assert_array_equal(
+        np.asarray(p_seq.dirty), np.asarray(p_sc.dirty)
+    )

@@ -14,6 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# check.sh runs this suite as its own explicit gate step; the tier-1
+# step excludes it via the marker (no hand-maintained --ignore list).
+pytestmark = pytest.mark.gate
+
 from repro.core import lire
 from repro.core.index import SPFreshIndex
 from tests.conftest import make_clustered

@@ -18,6 +18,10 @@ import sys
 import numpy as np
 import pytest
 
+# check.sh runs this suite as its own explicit gate step; the tier-1
+# step excludes it via the marker (no hand-maintained --ignore list).
+pytestmark = pytest.mark.gate
+
 import spfresh
 from repro.core.types import LireConfig
 from repro.storage.wal import iter_wal
@@ -372,3 +376,128 @@ def test_service_crash_recovery_over_two_shard_mesh(tmp_path):
     sys.stderr.write(proc.stderr[-4000:])
     assert proc.returncode == 0
     assert "ALL_SERVICE_SHARDED_PASS" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Durability fast path: delta snapshots, group commit, WAL compaction
+# ---------------------------------------------------------------------------
+
+def test_delta_checkpoint_crash_cycle_exact_parity(tmp_path, rng):
+    """The tentpole acceptance gate (local backend): stream → base →
+    delta → delta → compaction → more stream → crash.  Every reopen along
+    the way must answer queries exactly like the uncrashed twin — the
+    delta chain folds block-granular dirty writes back into the same
+    state the full snapshot would have captured."""
+    base = make_clustered(rng, 800, 16, n_clusters=6)
+    spec = tiny_spec(tmp_path / "svc", delta_every=30, compact_every=2)
+    svc = spfresh.open(spec, vectors=base)     # open-time FULL base
+
+    from repro.storage.snapshot import SnapshotStore
+    store = SnapshotStore(spec.durability.resolved_snapshot_dir())
+    assert store.has_base() and store.chain_len() == 0
+
+    # _stream inserts in 30-row chunks: the delta_every=30 cadence fires
+    # an auto-checkpoint per chunk; compact_every=2 folds the chain after
+    # two deltas, so the cycle base→delta→delta→compact happens by itself
+    vecs, ids, dead = _stream(svc, rng, n=90)
+    assert store.chain_len() <= 2              # compaction kept it bounded
+    chain_seen = svc.report()["durability"]["snapshot_chain_len"]
+    assert chain_seen == store.chain_len()
+
+    queries = np.concatenate([vecs[:12], base[:12]])
+    want_d, want_v = svc.search(queries, k=10)
+
+    twin = spfresh.open(spec)                  # crash: WAL tail over chain
+    assert twin.recovered
+    got_d, got_v = twin.search(queries, k=10)
+    np.testing.assert_array_equal(want_v, got_v)
+    np.testing.assert_allclose(want_d, got_d, rtol=1e-5)
+    assert twin.stats() == svc.stats()
+    leaked = set(got_v.reshape(-1).tolist()) & set(dead.tolist())
+    assert not leaked, f"delta-chain recovery resurrected {leaked}"
+
+    # keep going through another delta→crash cycle on the recovered twin
+    more = make_clustered(rng, 30, 16)
+    twin.insert(more, np.arange(5000, 5030, dtype=np.int32))
+    want2 = twin.search(more[:8], k=5)
+    third = spfresh.open(spec)
+    got2 = third.search(more[:8], k=5)
+    np.testing.assert_array_equal(want2[1], got2[1])
+    np.testing.assert_allclose(want2[0], got2[0], rtol=1e-5)
+
+
+def test_explicit_delta_and_compaction_checkpoints(tmp_path, rng):
+    """checkpoint(delta=True/False) force the unit kind; a delta with no
+    chain promotes to a base instead of failing; compaction prunes."""
+    base = make_clustered(rng, 500, 16)
+    spec = tiny_spec(tmp_path / "svc", snapshot_on_open=False)
+    from repro.storage.snapshot import SnapshotStore
+    store = SnapshotStore(spec.durability.resolved_snapshot_dir())
+
+    svc = spfresh.open(spec, vectors=base)
+    assert not store.exists()                  # no open-time snapshot
+    svc.checkpoint(delta=True)                 # promotes: nothing to chain to
+    assert store.has_base() and store.chain_len() == 0
+    svc.insert(make_clustered(rng, 20, 16),
+               np.arange(2000, 2020, dtype=np.int32))
+    svc.checkpoint(delta=True)
+    assert store.chain_len() == 1
+    full = store.unit_bytes(store._chain(store._head())[0])
+    assert store.unit_bytes() < 0.5 * full     # delta ≪ base on disk
+    svc.checkpoint(delta=False)                # explicit compaction
+    assert store.chain_len() == 0 and len(store._units()) == 1
+    want = svc.search(base[:6], k=5)
+    twin = spfresh.open(spec)
+    got = twin.search(base[:6], k=5)
+    np.testing.assert_array_equal(want[1], got[1])
+
+
+def test_group_commit_acks_then_recovers_exactly(tmp_path, rng):
+    """Group commit: many insert dispatches share one fsync through
+    ``insert_bulk``; everything acknowledged must survive a crash."""
+    base = make_clustered(rng, 600, 16)
+    spec = tiny_spec(tmp_path / "svc", group_commit=16)
+    svc = spfresh.open(spec, vectors=base)
+    stream = make_clustered(rng, 96, 16, n_clusters=3)
+    ids = np.arange(3000, 3096, dtype=np.int32)
+    got_ids, landed = svc.insert_bulk(stream, ids, chunk=32)
+    assert landed.all() and (got_ids == ids).all()
+    st = svc.report()["durability"]["wal"]
+    assert st["pending"] == 0                  # acked ⇒ fsync'd
+    assert st["fsyncs_per_append"] < 0.5, st   # ≥2 dispatches per fsync
+    svc.delete(ids[:5])
+    want = svc.search(stream[:10], k=5)
+
+    twin = spfresh.open(spec)                  # crash after the acks
+    got = twin.search(stream[:10], k=5)
+    np.testing.assert_array_equal(want[1], got[1])
+    np.testing.assert_allclose(want[0], got[0], rtol=1e-5)
+    _, hit = twin.search(stream[10:20], k=1)
+    assert (hit[:, 0] == ids[10:20]).all(), "acked insert lost post-crash"
+
+
+def test_wal_compaction_recovery_preserves_live_set(tmp_path, rng):
+    """compact_wal=True recovery: dead insert rows never re-land, the
+    live set and deletions are preserved, and the recovered service
+    recalls every surviving vector."""
+    base = make_clustered(rng, 600, 16)
+    spec = tiny_spec(tmp_path / "svc", compact_wal=True)
+    svc = spfresh.open(spec, vectors=base)
+    wave1 = make_clustered(rng, 30, 16)
+    ids1 = np.arange(2000, 2030, dtype=np.int32)
+    svc.insert(wave1, ids1)
+    svc.delete(ids1)                           # whole wave dies pre-crash
+    wave2 = make_clustered(rng, 30, 16)
+    ids2 = np.arange(4000, 4030, dtype=np.int32)
+    svc.insert(wave2, ids2)
+
+    twin = spfresh.open(spec)
+    assert twin.recovered
+    _, hit = twin.search(wave2[:10], k=1)
+    assert (hit[:, 0] == ids2[:10]).all(), "live insert lost by compaction"
+    _, got = twin.search(wave1[:10], k=10)
+    leaked = set(got.reshape(-1).tolist()) & set(ids1.tolist())
+    assert not leaked, f"compaction resurrected deleted vids {leaked}"
+    # compaction really skipped replay work: fewer physical appends than
+    # the uncrashed service performed
+    assert twin.stats()["n_appends"] < svc.stats()["n_appends"]
