@@ -1,13 +1,17 @@
 """Paper Fig. 2 + Fig. 10: data-distribution-shift micro-benchmark.
 
-Four systems on the same shifted workload:
+Four systems on the same shifted workload, ALL driven through the
+unified Service API (``spfresh.open`` + :class:`ServiceSpec`) — the
+ablation axis is the spec's LIRE feature flags, not hand-wired indexes:
+
   * static          — index rebuilt from scratch over base+inserts (ideal)
   * spann+          — in-place appends only (no Local Rebuilder)
   * +split          — appends + splits, NO reassignment
   * spfresh         — full LIRE (splits + merges + reassignment)
 
-Reported per system: recall@10, measured search latency, and the paper's
-latency driver (p99 posting length = candidates scanned).
+Reported per system: recall@10, measured search latency through the
+serving surface, and the paper's latency driver (p99 posting length =
+candidates scanned).
 """
 from __future__ import annotations
 
@@ -15,9 +19,26 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_cfg, posting_stats, recall_at, timed_search
-from repro.core.index import SPFreshIndex
+from benchmarks.common import (
+    bench_cfg,
+    brute_force_gt,
+    posting_stats,
+    service_recall,
+    timed_service_search,
+)
 from repro.data.vectors import make_shifting_stream, make_sift_like
+
+
+def _open(cfg, vectors, max_insert_retries: int = 4):
+    import spfresh
+
+    spec = spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=cfg),
+        serve=spfresh.ServeSpec(
+            search_k=10, max_insert_retries=max_insert_retries,
+        ),
+    )
+    return spfresh.open(spec, vectors=vectors, fresh=True)
 
 
 def run(quick: bool = True) -> list[str]:
@@ -31,8 +52,7 @@ def run(quick: bool = True) -> list[str]:
     rng = np.random.default_rng(3)
     qsel = rng.integers(n_base, len(all_vecs), size=128)  # query the hot region
     queries = all_vecs[qsel] + 0.01 * rng.normal(size=(128, dim)).astype(np.float32)
-    d = ((queries[:, None, :] - all_vecs[None]) ** 2).sum(-1)
-    gt = all_ids[np.argsort(d, axis=1)[:, :10]]
+    gt = brute_force_gt(queries, all_vecs, all_ids)
 
     ins_ids = np.arange(n_base, len(all_vecs)).astype(np.int32)
 
@@ -40,39 +60,40 @@ def run(quick: bool = True) -> list[str]:
 
     # static (global rebuild — the paper's ideal reference)
     t0 = time.perf_counter()
-    static = SPFreshIndex.build(bench_cfg(), all_vecs)
+    static = _open(bench_cfg(), all_vecs)
     systems["static"] = (static, time.perf_counter() - t0)
 
     # spann+ (append only, larger posting capacity so postings can grow)
     t0 = time.perf_counter()
-    sp = SPFreshIndex.build(
+    sp = _open(
         bench_cfg(max_blocks_per_posting=32, num_blocks=32768,
                   enable_split=False, enable_merge=False,
                   enable_reassign=False),
-        base,
+        base, max_insert_retries=0,
     )
-    sp.insert(inserts, ins_ids, max_retries=0)
+    sp.insert(inserts, ins_ids)
     systems["spann+"] = (sp, time.perf_counter() - t0)
 
     # +split only
     t0 = time.perf_counter()
-    so = SPFreshIndex.build(bench_cfg(enable_reassign=False), base)
+    so = _open(bench_cfg(enable_reassign=False), base)
     so.insert(inserts, ins_ids)
-    so.maintain()
+    so.drain()
     systems["split_only"] = (so, time.perf_counter() - t0)
 
     # full LIRE
     t0 = time.perf_counter()
-    fl = SPFreshIndex.build(bench_cfg(), base)
+    fl = _open(bench_cfg(), base)
     fl.insert(inserts, ins_ids)
-    fl.maintain()
+    fl.drain()
     systems["spfresh"] = (fl, time.perf_counter() - t0)
 
     out = []
-    for name, (idx, build_s) in systems.items():
-        r = recall_at(idx, queries, gt)
-        lat = timed_search(idx, queries)
-        ps = posting_stats(idx)
+    for name, (svc, build_s) in systems.items():
+        r = service_recall(svc, queries, gt)
+        lat = timed_service_search(svc, queries)
+        ps = posting_stats(svc.index)
+        svc.close()
         out.append(
             f"shift/{name},{lat['mean_ms'] * 1e3:.1f},"
             f"recall={r:.3f};scan_p99={ps['scan_cost_p99']:.0f};"

@@ -67,6 +67,48 @@ def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
+# ---------------------------------------------------------------------------
+# Service-API helpers (benchmarks driven through ``spfresh.open``)
+# ---------------------------------------------------------------------------
+
+def brute_force_gt(queries: np.ndarray, vecs: np.ndarray, ids: np.ndarray,
+                   k: int = 10) -> np.ndarray:
+    """Exact k-NN ids over a host-tracked live set."""
+    d = ((queries[:, None, :].astype(np.float32)
+          - vecs[None].astype(np.float32)) ** 2).sum(-1)
+    return np.asarray(ids)[np.argsort(d, axis=1)[:, :k]]
+
+
+def service_recall(service, queries: np.ndarray, gt: np.ndarray,
+                   k: int = 10) -> float:
+    """recall@k through the serving surface (micro-batched search)."""
+    _, got = service.search(queries, k=k)
+    hits = 0
+    for row_gt, row_got in zip(gt, got):
+        hits += len(set(row_gt.tolist()) & set(row_got.tolist()))
+    return hits / (gt.shape[0] * gt.shape[1])
+
+
+def timed_service_search(service, queries: np.ndarray, k: int = 10,
+                         chunk: int = 64) -> dict:
+    """Per-chunk search wall times through the service → percentiles."""
+    service.search(queries[:chunk], k=k)  # warmup/compile
+    lats = []
+    for s in range(0, len(queries), chunk):
+        q = queries[s:s + chunk]
+        if len(q) < chunk:
+            break
+        t0 = time.perf_counter()
+        service.search(q, k=k)
+        lats.append((time.perf_counter() - t0) * 1e3 / chunk)
+    arr = np.asarray(lats) if lats else np.asarray([0.0])
+    return {
+        "mean_ms": float(arr.mean()),
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+    }
+
+
 def scan_traffic(state, queries, nprobe: int) -> dict:
     """Page-granular scan traffic model for a query micro-batch — the
     quantities the paged posting-scan schedules move per query:

@@ -21,6 +21,7 @@ import traceback
 
 BENCHES = [
     ("shift", "benchmarks.bench_shift"),                 # Fig. 2 / Fig. 10
+    ("scenarios", "benchmarks.bench_scenarios"),         # serving gauntlet
     ("update_sim", "benchmarks.bench_update_sim"),       # Fig. 7 (workload A/B)
     ("stress", "benchmarks.bench_stress"),               # Fig. 9 (workload C)
     ("reassign_range", "benchmarks.bench_reassign_range"),  # Fig. 11
@@ -44,11 +45,13 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable report to PATH and exit")
     ap.add_argument("--report",
-                    choices=["auto", "search", "maintenance", "recovery"],
+                    choices=["auto", "search", "maintenance", "recovery",
+                             "scenarios"],
                     default="auto",
                     help="which --json report to write; 'auto' picks "
                          "maintenance for paths containing 'update'/'maint', "
-                         "recovery for 'recover', else search")
+                         "recovery for 'recover', scenarios for "
+                         "'scenario', else search")
     args = ap.parse_args()
 
     if args.json:
@@ -61,8 +64,21 @@ def main() -> None:
                 which = "maintenance"
             elif "recover" in base:
                 which = "recovery"
+            elif "scenario" in base:
+                which = "scenarios"
             else:
                 which = "search"
+        if which == "scenarios":
+            from benchmarks.bench_scenarios import run_json
+
+            report = run_json(quick=not args.full)
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            shift = report["scenarios"]["shift"]
+            print(f"# wrote {args.json}: shift drift_minus_size="
+                  f"{shift['drift_minus_size']:+.3f} at "
+                  f"jobs_per_round={shift['jobs_per_round']}")
+            return
         if which == "recovery":
             from benchmarks.bench_recovery import run_json
 

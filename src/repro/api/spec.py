@@ -78,6 +78,13 @@ class MaintenanceSpec:
     reassign_budget: int | None = None
     maintain_budget: int | None = None     # jobs per background SLOT
                                            # (None -> jobs_per_round)
+    # Job selection: "size" (top-K longest / bottom-K shortest — the
+    # parity baseline) or "drift" (Ada-IVF-style cost model over the
+    # per-posting access/update/drift telemetry).  None defers to
+    # IndexSpec.config; alpha/beta weigh the access-rate and drift terms.
+    policy: str | None = None              # "size" | "drift"
+    alpha: float | None = None
+    beta: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,6 +182,9 @@ class ServiceSpec:
             ("jobs_per_round", m.jobs_per_round),
             ("merge_fanout", m.merge_fanout),
             ("reassign_budget", m.reassign_budget),
+            ("maintain_policy", m.policy),
+            ("maintain_alpha", m.alpha),
+            ("maintain_beta", m.beta),
         ):
             if value is not None:
                 over[field] = value

@@ -47,6 +47,12 @@ CONFIG = LireConfig(
     # round, one fused reassign GEMM (1% daily churn on 2M live vectors
     # per shard ≈ a handful of oversized postings per serving slot).
     jobs_per_round=8,
+    # Drift-aware job selection: at 8 jobs over 65k postings the round
+    # budget is scarce, so rank by access rate × imbalance + centroid
+    # drift instead of size alone (BENCH_scenarios.json shift cell).
+    maintain_policy="drift",
+    maintain_alpha=4.0,
+    maintain_beta=1.0,
 )
 
 SMOKE = LireConfig(
@@ -103,6 +109,9 @@ def service_spec(*, paged: bool = True, smoke: bool = False,
         scan=spfresh.ScanSpec(probe_chunk=PROBE_CHUNK),
         maintenance=spfresh.MaintenanceSpec(
             jobs_per_round=base.jobs_per_round,
+            policy=base.maintain_policy,
+            alpha=base.maintain_alpha,
+            beta=base.maintain_beta,
         ),
         durability=spfresh.DurabilitySpec(root=durable_root),
         shards=spfresh.ShardSpec(n_shards=n_shards),

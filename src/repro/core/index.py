@@ -173,17 +173,21 @@ def search_step(
     probe_chunk: int = 0,
     use_pallas_scan: bool | None = None,
     scan_schedule: str | None = None,
+    with_access: bool = False,
 ):
     """jitted ``(state, queries (B, d)) -> (dists (B, k), vids (B, k))``.
 
     ``probe_chunk`` / ``use_pallas_scan`` / ``scan_schedule`` select the
     posting-scan data path (None defers to the state's config flags) —
     the serving pipeline threads them through from ``EngineConfig``.
+    ``with_access`` adds the per-posting probe histogram as a third
+    output (the serving backend's access-telemetry source).
     """
     return jax.jit(
         functools.partial(
             lire.search, k=k, nprobe=nprobe, probe_chunk=probe_chunk,
             use_pallas_scan=use_pallas_scan, scan_schedule=scan_schedule,
+            with_access=with_access,
         )
     )
 
@@ -238,10 +242,12 @@ def fused_maintenance_round(jobs: int):
 
     Constant work regardless of how many jobs fire — the TPU idiom for the
     paper's background job queue; the host pays one dispatch and reads one
-    did-work scalar per round."""
+    did-work scalar per round.  The second operand is the (P_cap,) i32
+    access histogram folded into the telemetry before job selection (all
+    zeros when the caller has none — an exact no-op fold)."""
 
-    def f(state):
-        return lire.maintenance_round(state, jobs)
+    def f(state, access):
+        return lire.maintenance_round(state, jobs, access)
 
     return jax.jit(f, donate_argnums=(0,))
 
@@ -333,13 +339,15 @@ class SPFreshIndex:
     # ------------------------- Local Rebuilder -------------------------
     def maintain(
         self, max_steps: int | None = None, jobs_per_round: int | None = None,
+        access: np.ndarray | None = None,
     ) -> int:
         """Drain split/merge/reassign jobs in batched rounds (one did-work
         readback per round); returns jobs executed.  ``jobs_per_round``
         defaults to ``cfg.jobs_per_round``; the round count of the last
-        drain is kept in ``last_drain_rounds``."""
+        drain is kept in ``last_drain_rounds``.  ``access`` (optional
+        probe histogram) folds into the first round's selection."""
         self.state, jobs, rounds = lire.rebuild_drain(
-            self.state, max_steps, jobs_per_round, donate=True
+            self.state, max_steps, jobs_per_round, donate=True, access=access
         )
         self.last_drain_rounds = rounds
         return jobs
@@ -374,12 +382,21 @@ class SPFreshIndex:
     def search_padded(
         self, queries: np.ndarray, k: int, *, nprobe: int | None = None,
         probe_chunk: int = 0, use_pallas_scan: bool | None = None,
-        scan_schedule: str | None = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        d, v = search_step(
-            k, nprobe, probe_chunk, use_pallas_scan, scan_schedule
-        )(self.state, jnp.asarray(queries))
-        return np.asarray(d), np.asarray(v)
+        scan_schedule: str | None = None, with_access: bool = False,
+        qvalid: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, ...]:
+        step = search_step(
+            k, nprobe, probe_chunk, use_pallas_scan, scan_schedule,
+            with_access,
+        )
+        if qvalid is None:
+            out = step(self.state, jnp.asarray(queries))
+        else:
+            out = step(
+                self.state, jnp.asarray(queries),
+                qvalid=jnp.asarray(qvalid, bool),
+            )
+        return tuple(np.asarray(x) for x in out)
 
     def insert_padded(
         self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray,
@@ -396,11 +413,21 @@ class SPFreshIndex:
             self.state, jnp.asarray(vids), jnp.asarray(valid)
         )
 
-    def maintain_round(self, jobs: int | None = None) -> int:
+    def maintain_round(
+        self, jobs: int | None = None, access: np.ndarray | None = None,
+    ) -> int:
         """One fused rebuilder round (``jobs`` split+merge jobs + one
-        fused reassign pass, one dispatch); returns how many jobs acted."""
+        fused reassign pass, one dispatch); returns how many jobs acted.
+        ``access`` is the serving backend's pending probe histogram
+        (None folds zeros — an exact no-op)."""
         jobs = jobs or self.state.cfg.jobs_per_round
-        self.state, did = fused_maintenance_round(jobs)(self.state)
+        if access is None:
+            access = np.zeros(
+                (self.state.cfg.num_postings_cap,), np.int32
+            )
+        self.state, did = fused_maintenance_round(jobs)(
+            self.state, jnp.asarray(access, jnp.int32)
+        )
         return int(did)
 
     # Pre-round name for the one-dispatch maintenance slot; the budget is
@@ -473,6 +500,18 @@ class SPFreshIndex:
         out["n_postings"] = int(self.state.n_postings)
         out["used_blocks"] = int(
             self.state.pool.num_blocks_cap - self.state.pool.free_top
+        )
+        # Telemetry aggregates read the STATE leaves only — never the
+        # serving backend's host-side pending-access buffer — so two
+        # services whose WALs replayed identically report identical stats.
+        tel = self.state.telemetry
+        valid = np.asarray(self.state.centroid_valid)
+        out["access_total"] = int(np.asarray(tel.access_count)[valid].sum())
+        out["update_total"] = int(np.asarray(tel.update_count)[valid].sum())
+        out["drift_norm_total"] = float(
+            np.linalg.norm(
+                np.asarray(tel.drift_vec)[valid], axis=-1
+            ).sum()
         )
         return out
 

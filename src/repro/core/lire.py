@@ -78,6 +78,41 @@ def route(
 
 
 # ---------------------------------------------------------------------------
+# Per-posting telemetry (Ada-IVF cost-model inputs, bumped in jitted steps)
+# ---------------------------------------------------------------------------
+
+def _bump_append_telemetry(
+    state: IndexState, pids: Array, vecs: Array, landed: Array
+):
+    """Update/drift accounting for a batch of physical appends (insert
+    replicas, reassign re-appends, merge moves): every landed row bumps its
+    posting's ``update_count`` and accumulates its displacement from the
+    CURRENT centroid into ``drift_vec``.  Runs inside the jitted update
+    steps, so WAL replay reproduces the leaves bit-exactly."""
+    tel = state.telemetry
+    cap = state.cfg.num_postings_cap
+    safe = jnp.maximum(pids, 0)
+    tgt = jnp.where(landed, safe, cap)
+    disp = vecs.astype(jnp.float32) - state.centroids[safe]
+    disp = jnp.where(landed[:, None], disp, 0.0)
+    return tel.replace(
+        update_count=tel.update_count.at[tgt].add(1, mode="drop"),
+        drift_vec=tel.drift_vec.at[tgt].add(disp, mode="drop"),
+    )
+
+
+def probe_histogram(cfg, pids: Array, probe_valid: Array) -> Array:
+    """Per-posting probe counts for one search micro-batch — the access
+    signal of the drift-aware maintenance policy.  Searches are NOT
+    WAL-logged, so this histogram never touches ``IndexState`` here: the
+    serving backend accumulates it host-side and folds it in as an operand
+    of the next WAL-logged maintenance dispatch (replay stays bit-exact)."""
+    cap = cfg.num_postings_cap
+    tgt = jnp.where(probe_valid, pids, cap).reshape(-1)
+    return jnp.zeros((cap,), jnp.int32).at[tgt].add(1, mode="drop")
+
+
+# ---------------------------------------------------------------------------
 # External interface: Insert / Delete (the foreground Updater, §4.1)
 # ---------------------------------------------------------------------------
 
@@ -125,13 +160,16 @@ def insert_batch(
     )
     oks2 = oks.reshape(-1, cfg.replica_count)
     landed = oks2[:, 0] | ~valid  # primary append succeeded (or not requested)
+    telemetry = _bump_append_telemetry(state, flat_pids, flat_vecs, oks)
     stats = state.stats
     stats = bump_stat(stats, "n_inserts", jnp.sum(valid))
     stats = bump_stat(stats, "n_appends", jnp.sum(oks))
     stats = bump_stat(
         stats, "n_append_drops", jnp.sum(flat_enable & (flat_pids >= 0)) - jnp.sum(oks)
     )
-    return state.replace(pool=pool, stats=stats, step=state.step + 1), landed
+    return state.replace(
+        pool=pool, stats=stats, telemetry=telemetry, step=state.step + 1
+    ), landed
 
 
 @jax.jit
@@ -452,7 +490,8 @@ def scan_and_reduce(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "nprobe", "probe_chunk", "use_pallas_scan", "scan_schedule"
+        "k", "nprobe", "probe_chunk", "use_pallas_scan", "scan_schedule",
+        "with_access",
     ),
 )
 def search(
@@ -464,7 +503,9 @@ def search(
     probe_chunk: int = 0,
     use_pallas_scan: bool | None = None,
     scan_schedule: str | None = None,
-) -> tuple[Array, Array]:
+    with_access: bool = False,
+    qvalid: Array | None = None,
+) -> tuple[Array, ...]:
     """ANN search: centroid navigation → posting scan → dedup top-k.
 
     Returns ``(dists (Q, k), vids (Q, k))``; missing results are ``-1`` with
@@ -476,16 +517,26 @@ def search(
     ``use_pallas_scan`` / ``scan_schedule`` — ``None`` defers to the
     config flags.  See ``scan_and_reduce`` for the probe_chunk semantics
     of the oracle path.
+
+    ``with_access=True`` additionally returns the per-posting probe
+    histogram (``probe_histogram``) as a third output; the ``(dists,
+    vids)`` numerics are untouched.  ``qvalid (Q,)`` masks padded query
+    rows out of the histogram ONLY (their dists/vids rows are computed
+    regardless and discarded by the caller, as before).
     """
     cfg = state.cfg
     nprobe = cfg.nprobe if nprobe is None else nprobe
     nav_d, pids = navigate(state, queries, nprobe)  # (Q, nprobe)
     probe_valid = nav_d < MASK_DISTANCE / 2
-    return scan_and_reduce(
+    d, v = scan_and_reduce(
         state, queries, pids, probe_valid,
         k=k, probe_chunk=probe_chunk,
         use_pallas_scan=use_pallas_scan, scan_schedule=scan_schedule,
     )
+    if not with_access:
+        return d, v
+    counted = probe_valid if qvalid is None else probe_valid & qvalid[:, None]
+    return d, v, probe_histogram(cfg, pids, counted)
 
 
 # ---------------------------------------------------------------------------
@@ -626,7 +677,8 @@ def _execute_reassigns(
     landed = oks.reshape(-1, cfg.replica_count)[:, 0]
     commit = m_need & landed
     versions = vm.bump_version(state.versions, m_safe_vids, commit)
-    state = state.replace(versions=versions)
+    telemetry = _bump_append_telemetry(state, flat_pids, flat_vecs, oks)
+    state = state.replace(versions=versions, telemetry=telemetry)
 
     stats = state.stats
     stats = bump_stat(stats, "n_reassign_candidates", n_cand)
@@ -699,6 +751,7 @@ def _split_jobs(
     state = free_pids(state, new_pids, jnp.repeat(want & ~ok, 2))
 
     old_centroid = state.centroids[safe]                 # (K, d)
+    old_access = state.telemetry.access_count[safe]      # (K,) read pre-free
 
     # Retire the old postings (blocks + centroids + ids) in one scatter.
     pool = bp.free_postings(state.pool, safe, ok)
@@ -738,6 +791,23 @@ def _split_jobs(
     state = state.replace(pool=pool)
     state = set_centroids(state, pid1, new_centroids[:, 0], ok)
     state = set_centroids(state, pid2, new_centroids[:, 1], ok)
+
+    # Telemetry transfer: the two fresh halves inherit the split posting's
+    # access count proportionally to their live sizes (integer shares that
+    # conserve the total exactly); update_count/drift_vec measure "since
+    # last split", so the halves restart at zero — fresh pids come off the
+    # free stack already zeroed (`free_pids`).
+    tot = jnp.maximum(n0 + n1, 1)
+    share1 = (old_access * n0) // tot
+    share2 = old_access - share1
+    cap_p = cfg.num_postings_cap
+    t1 = jnp.where(ok, jnp.maximum(pid1, 0), cap_p)
+    t2 = jnp.where(ok, jnp.maximum(pid2, 0), cap_p)
+    acc = state.telemetry.access_count.at[t1].set(share1, mode="drop")
+    acc = acc.at[t2].set(share2, mode="drop")
+    state = state.replace(
+        telemetry=state.telemetry.replace(access_count=acc)
+    )
 
     # ---- Reassignment candidates (the heart of LIRE) ----
     # Neighbors: reassign_range nearest postings to each *old* centroid,
@@ -903,6 +973,25 @@ def _merge_jobs(
     all_moved = jnp.all(oks.reshape(k, -1) == move, axis=1)
     do = do & all_moved
     gone = do | retire_empty
+
+    # Telemetry: the moves are fresh appends on the target (+1 update,
+    # += displacement vs the TARGET centroid, which a merge never moves);
+    # an absorbed source's access count transfers into its target — a
+    # scatter-add, since two jobs may share one target — BEFORE the source
+    # pid is freed (free_pids zeroes the source rows).  retire_empty
+    # sources have nothing left to describe; their access just drops.
+    tel = _bump_append_telemetry(
+        state, tgt_rows.reshape(-1), vecs.reshape(-1, cfg.dim), oks
+    )
+    src_access = tel.access_count[safe]
+    t_acc = jnp.where(do, jnp.maximum(target, 0), cfg.num_postings_cap)
+    tel = tel.replace(
+        access_count=tel.access_count.at[t_acc].add(
+            jnp.where(do, src_access, 0), mode="drop"
+        )
+    )
+    state = state.replace(telemetry=tel)
+
     pool = bp.free_postings(state.pool, safe, gone)
     state = state.replace(pool=pool)
     state = free_pids(state, pids, gone)
@@ -975,39 +1064,118 @@ def maintenance_step(state: IndexState) -> tuple[IndexState, Array]:
     return state, (split_acted | merge_acted)
 
 
+def _select_jobs(
+    state: IndexState, k: int
+) -> tuple[Array, Array, Array, Array]:
+    """Job selection for one maintenance round, per ``cfg.maintain_policy``.
+
+    ``"size"`` is the original selection, kept **bit-identical**: top-K
+    longest postings split, bottom-K shortest merge.  ``"drift"`` is the
+    Ada-IVF-style cost model over the telemetry leaves: *eligibility* is
+    unchanged (only oversized postings may split, only undersized merge),
+    but the *ranking* among eligible postings weighs access rate and
+    centroid drift —
+
+    * split priority = ``imbalance · (1 + alpha·access_rate) +
+      beta·drift_rel`` where ``imbalance = len/split_limit``,
+      ``access_rate`` is the posting's share of probes normalized so a
+      uniformly-probed index scores 1 everywhere, and ``drift_rel`` is the
+      mean displacement of appends since the last split relative to the
+      centroid norm;
+    * merge priority = ``len · (1 + alpha·access_rate)`` ascending —
+      coldest+smallest first, so rarely-read runts are compacted before
+      hot ones whose vectors searches still want cheap to find.
+
+    With all-zero telemetry both formulas reduce to a monotone function of
+    ``len`` — the drift policy cold-starts to the size ordering exactly
+    (including ``top_k``'s lowest-index tie-breaking).
+
+    Returns ``(split_pids, split_enable, merge_pids, merge_enable)``.
+    """
+    cfg = state.cfg
+    lens = state.pool.posting_len
+    valid = state.centroid_valid
+
+    if cfg.maintain_policy == "size":
+        # One length scan selects both job sets.
+        split_scores = jnp.where(valid, lens, -1)
+        top_l, split_pids = jax.lax.top_k(split_scores, k)
+        split_enable = top_l > cfg.split_limit
+
+        merge_scores = jnp.where(
+            valid & (lens < cfg.merge_limit), lens, jnp.iinfo(jnp.int32).max
+        )
+        neg_l, merge_pids = jax.lax.top_k(-merge_scores, k)
+        merge_enable = (-neg_l) < cfg.merge_limit
+        return split_pids, split_enable, merge_pids, merge_enable
+
+    tel = state.telemetry
+    alpha = jnp.float32(cfg.maintain_alpha)
+    beta = jnp.float32(cfg.maintain_beta)
+    lens_f = lens.astype(jnp.float32)
+    acc = jnp.where(valid, tel.access_count, 0).astype(jnp.float32)
+    n_valid = jnp.sum(valid.astype(jnp.int32)).astype(jnp.float32)
+    access_rate = acc * n_valid / jnp.maximum(jnp.sum(acc), 1.0)
+    mean_disp = jnp.linalg.norm(tel.drift_vec, axis=-1) / jnp.maximum(
+        tel.update_count.astype(jnp.float32), 1.0
+    )
+    drift_rel = mean_disp / jnp.sqrt(state.centroid_sqn + 1e-6)
+
+    imbalance = lens_f / jnp.float32(cfg.split_limit)
+    split_pri = imbalance * (1.0 + alpha * access_rate) + beta * drift_rel
+    s_scores = jnp.where(
+        valid & (lens > cfg.split_limit), split_pri, -jnp.inf
+    )
+    top_s, split_pids = jax.lax.top_k(s_scores, k)
+    split_enable = top_s > -jnp.inf
+
+    merge_pri = lens_f * (1.0 + alpha * access_rate)
+    m_scores = jnp.where(
+        valid & (lens < cfg.merge_limit), merge_pri, jnp.inf
+    )
+    neg_m, merge_pids = jax.lax.top_k(-m_scores, k)
+    merge_enable = -neg_m < jnp.inf
+    return split_pids, split_enable, merge_pids, merge_enable
+
+
 @functools.partial(jax.jit, static_argnames=("jobs_per_round",))
 def maintenance_round(
-    state: IndexState, jobs_per_round: int | None = None
+    state: IndexState,
+    jobs_per_round: int | None = None,
+    access: Array | None = None,
 ) -> tuple[IndexState, Array]:
-    """One batched rebuild round: the top-K oversized postings are split and
-    the bottom-K undersized merged (disjoint pid sets — ``merge_limit <
-    split_limit``), both selected by ONE length scan, then every job's
-    reassign candidates are concatenated into ONE `_execute_reassigns`
-    call — one ``route`` GEMM and one ``append_batch`` for the whole round
-    instead of two per job.
+    """One batched rebuild round: K split + K merge jobs selected by
+    ``cfg.maintain_policy`` (see `_select_jobs`; disjoint pid sets —
+    ``merge_limit < split_limit``), then every job's reassign candidates
+    are concatenated into ONE `_execute_reassigns` call — one ``route``
+    GEMM and one ``append_batch`` for the whole round instead of two per
+    job.
 
     Returns ``(state, n_did_work)`` — the number of jobs that acted, ONE
     device scalar for the host drain loop to read back per round (the
     sequential driver synced on a bool per step).  ``jobs_per_round=None``
     defers to ``cfg.jobs_per_round``.
+
+    ``access`` is an optional ``(P_cap,) i32`` probe histogram (the
+    serving backend's host-accumulated search telemetry, WAL-logged with
+    this dispatch) folded into ``telemetry.access_count`` BEFORE
+    selection.  ``None`` skips the fold entirely — an empty pytree keys
+    its own jit cache entry, so pre-telemetry call sites and old WAL
+    records trace byte-identical graphs.
     """
     cfg = state.cfg
     k = int(jobs_per_round or cfg.jobs_per_round)
     k = max(1, min(k, cfg.num_postings_cap // 2))
 
-    lens = state.pool.posting_len
-    valid = state.centroid_valid
+    if access is not None:
+        tel = state.telemetry
+        state = state.replace(
+            telemetry=tel.replace(
+                access_count=tel.access_count + access.astype(jnp.int32)
+            )
+        )
 
-    # One length scan selects both job sets.
-    split_scores = jnp.where(valid, lens, -1)
-    top_l, split_pids = jax.lax.top_k(split_scores, k)
-    split_enable = top_l > cfg.split_limit
-
-    merge_scores = jnp.where(
-        valid & (lens < cfg.merge_limit), lens, jnp.iinfo(jnp.int32).max
-    )
-    neg_l, merge_pids = jax.lax.top_k(-merge_scores, k)
-    merge_enable = (-neg_l) < cfg.merge_limit
+    split_pids, split_enable, merge_pids, merge_enable = _select_jobs(state, k)
     if not cfg.enable_merge:
         merge_enable = jnp.zeros_like(merge_enable)
 
@@ -1052,12 +1220,22 @@ def _donating_round(jobs: int):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _donating_round_access(jobs: int):
+    """`_donating_round` with the access-histogram operand (first round of
+    a drain folds the backend's pending probe counts)."""
+    return jax.jit(
+        lambda s, a: maintenance_round(s, jobs, a), donate_argnums=(0,)
+    )
+
+
 def rebuild_drain(
     state: IndexState,
     max_steps: int | None = None,
     jobs_per_round: int | None = None,
     *,
     donate: bool = False,
+    access: Array | None = None,
 ) -> tuple[IndexState, int, int]:
     """Host-driven Local Rebuilder loop in batched rounds: run
     `maintenance_round` until quiescent, reading back ONE ``did_work``
@@ -1069,6 +1247,8 @@ def rebuild_drain(
     budget; the last round may overshoot by up to ``jobs_per_round - 1``).
     ``donate=True`` lets XLA mutate the caller's state buffers in place —
     only for callers that own them exclusively (`SPFreshIndex.maintain`).
+    ``access`` (optional probe histogram) folds into the FIRST round's
+    selection; later rounds of the same drain see it via the state.
     Returns ``(state, jobs_done, rounds)``.
     """
     cfg = state.cfg
@@ -1077,10 +1257,17 @@ def rebuild_drain(
     step = _donating_round(jobs) if donate else (
         lambda s: maintenance_round(s, jobs)
     )
+    step_a = _donating_round_access(jobs) if donate else (
+        lambda s, a: maintenance_round(s, jobs, a)
+    )
     done = 0
     rounds = 0
     while done < cap_jobs:
-        state, did = step(state)
+        if access is not None:
+            state, did = step_a(state, jnp.asarray(access, jnp.int32))
+            access = None
+        else:
+            state, did = step(state)
         rounds += 1
         d = int(did)  # the round's single device→host sync
         done += d

@@ -45,6 +45,19 @@ class LireConfig:
     # job's reassign candidates routed by a single GEMM.  1 degenerates to
     # the sequential `maintenance_step` work shape.
     jobs_per_round: int = 4
+    # --- maintenance job selection (drift-aware cost model) ---
+    # "size":  top-K longest / bottom-K shortest — the original selection,
+    #          kept bit-identical as the parity baseline.
+    # "drift": Ada-IVF-style cost-model ranking over the per-posting
+    #          telemetry leaves: split priority ~ imbalance ×
+    #          (1 + alpha·access_rate) + beta·drift, merge priority ~
+    #          len × (1 + alpha·access_rate) ascending.  Eligibility is
+    #          unchanged (only oversized postings split, only undersized
+    #          merge); with all-zero telemetry the ranking degrades to the
+    #          size ordering exactly.
+    maintain_policy: str = "size"
+    maintain_alpha: float = 1.0      # access-rate weight (drift policy)
+    maintain_beta: float = 1.0       # centroid-drift weight (drift policy)
     # --- search ---
     nprobe: int = 8                  # postings probed per query (paper: 64)
     # --- split clustering ---
@@ -91,6 +104,9 @@ class LireConfig:
         )
         assert self.replica_count >= 1
         assert self.nprobe >= 1
+        assert self.maintain_policy in ("size", "drift"), self.maintain_policy
+        assert self.maintain_alpha >= 0.0
+        assert self.maintain_beta >= 0.0
         assert self.scan_schedule in ("per_query", "batched"), self.scan_schedule
         assert self.scan_page_budget >= 0
 
@@ -119,6 +135,31 @@ class LireStats:
 
 
 @pytree_dataclass
+class LireTelemetry:
+    """Per-posting maintenance telemetry (Ada-IVF cost-model inputs).
+
+    All three leaves live in ``IndexState`` and are bumped ONLY inside the
+    jitted update/maintenance steps, so WAL replay reproduces them
+    bit-exactly.  Search probes are the one externally-sourced signal:
+    they accumulate host-side in the serving backend and enter the state
+    as an explicit operand of the next WAL-logged maintenance dispatch.
+    """
+
+    access_count: Array  # (P_cap,) i32 — search probes, folded at dispatch
+    update_count: Array  # (P_cap,) i32 — appends landed since (re)creation
+    drift_vec: Array     # (P_cap, d) f32 — summed x - centroid[pid] since split
+
+    @staticmethod
+    def zeros(cfg: "LireConfig") -> "LireTelemetry":
+        p = cfg.num_postings_cap
+        return LireTelemetry(
+            access_count=jnp.zeros((p,), jnp.int32),
+            update_count=jnp.zeros((p,), jnp.int32),
+            drift_vec=jnp.zeros((p, cfg.dim), jnp.float32),
+        )
+
+
+@pytree_dataclass
 class IndexState:
     cfg: LireConfig = field(static=True)
     pool: BlockPool
@@ -132,6 +173,10 @@ class IndexState:
     step: Array             # () i32 monotonically increasing op counter
     next_vid: Array         # () i32 — local slot allocator (distributed insert)
     stats: LireStats
+    # NOTE: keep `telemetry` LAST — snapshots written before it existed are
+    # migrated by reconstructing the missing trailing leaves as zeros
+    # (storage/snapshot.py).
+    telemetry: LireTelemetry
 
     @property
     def n_postings(self) -> Array:
@@ -164,6 +209,7 @@ def make_empty_state(cfg: LireConfig, seed: int = 0) -> IndexState:
         step=jnp.asarray(0, jnp.int32),
         next_vid=jnp.asarray(0, jnp.int32),
         stats=LireStats.zeros(),
+        telemetry=LireTelemetry.zeros(cfg),
     )
 
 
@@ -180,19 +226,35 @@ def alloc_pid(state: IndexState, enable: Array) -> tuple[IndexState, Array]:
 
 def free_pid(state: IndexState, pid: Array, enable: Array) -> IndexState:
     do = enable & (pid >= 0)
+    safe = jnp.maximum(pid, 0)
     stack = jnp.where(
         do,
         state.pid_free_stack.at[state.pid_free_top].set(pid.astype(jnp.int32)),
         state.pid_free_stack,
     )
     valid = jnp.where(
-        do, state.centroid_valid.at[jnp.maximum(pid, 0)].set(False),
+        do, state.centroid_valid.at[safe].set(False),
         state.centroid_valid,
+    )
+    # Freed pids come back off the stack with zero telemetry — the leaves
+    # always describe the CURRENT posting living at a pid.
+    tel = state.telemetry
+    tel = tel.replace(
+        access_count=jnp.where(
+            do, tel.access_count.at[safe].set(0), tel.access_count
+        ),
+        update_count=jnp.where(
+            do, tel.update_count.at[safe].set(0), tel.update_count
+        ),
+        drift_vec=jnp.where(
+            do, tel.drift_vec.at[safe].set(0.0), tel.drift_vec
+        ),
     )
     return state.replace(
         pid_free_stack=stack,
         pid_free_top=jnp.where(do, state.pid_free_top + 1, state.pid_free_top),
         centroid_valid=valid,
+        telemetry=tel,
     )
 
 
@@ -222,13 +284,19 @@ def free_pids(state: IndexState, pids: Array, enable: Array) -> IndexState:
     stack = state.pid_free_stack.at[jnp.where(do, pos, cap)].set(
         pids.astype(jnp.int32), mode="drop"
     )
-    valid = state.centroid_valid.at[
-        jnp.where(do, jnp.maximum(pids, 0), cap)
-    ].set(False, mode="drop")
+    tgt = jnp.where(do, jnp.maximum(pids, 0), cap)
+    valid = state.centroid_valid.at[tgt].set(False, mode="drop")
+    tel = state.telemetry
+    tel = tel.replace(
+        access_count=tel.access_count.at[tgt].set(0, mode="drop"),
+        update_count=tel.update_count.at[tgt].set(0, mode="drop"),
+        drift_vec=tel.drift_vec.at[tgt].set(0.0, mode="drop"),
+    )
     return state.replace(
         pid_free_stack=stack,
         pid_free_top=state.pid_free_top + jnp.sum(do),
         centroid_valid=valid,
+        telemetry=tel,
     )
 
 

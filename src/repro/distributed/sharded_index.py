@@ -495,7 +495,13 @@ class ShardedIndex(DurableBackend):
     # --------------------------- backend ops ---------------------------
     def search(
         self, queries: np.ndarray, k: int, nprobe: int | None = None,
+        valid: np.ndarray | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
+        # ``valid`` (padded-row mask) is accepted for backend-protocol
+        # parity but unused: the sharded backend does not accumulate
+        # access telemetry (see ARCHITECTURE.md — the drift policy on
+        # shards ranks by the update/drift leaves, which the jitted steps
+        # bump deterministically; access_count stays zero).
         key = (k, nprobe)
         step = self._search_steps.get(key)
         if step is None:
@@ -657,5 +663,13 @@ class ShardedIndex(DurableBackend):
         out["used_blocks"] = int(
             self.n_shards * self.stacked.pool.num_blocks_cap
             - np.asarray(self.stacked.pool.free_top).sum()
+        )
+        # Telemetry aggregates summed over shards (state leaves only, same
+        # keys as the local backend).
+        tel = self.stacked.telemetry
+        out["access_total"] = int(np.asarray(tel.access_count)[valid].sum())
+        out["update_total"] = int(np.asarray(tel.update_count)[valid].sum())
+        out["drift_norm_total"] = float(
+            np.linalg.norm(np.asarray(tel.drift_vec)[valid], axis=-1).sum()
         )
         return out

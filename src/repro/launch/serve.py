@@ -74,7 +74,9 @@ def build_spec(args):
             use_pallas_scan=None if args.scan == "oracle" else True,
             scan_schedule=None if args.scan == "oracle" else args.scan,
         ),
-        maintenance=spfresh.MaintenanceSpec(jobs_per_round=jobs),
+        maintenance=spfresh.MaintenanceSpec(
+            jobs_per_round=jobs, policy=args.maintain_policy,
+        ),
         durability=spfresh.DurabilitySpec(
             root=args.durable, checkpoint_every=args.checkpoint_every,
             delta_every=args.delta_every, compact_every=args.compact_every,
@@ -134,6 +136,13 @@ def main() -> None:
                     help="jobs per fused maintenance round (top-K splits "
                          "+ bottom-K merges per slot, one dispatch); "
                          "overrides --budget")
+    ap.add_argument("--maintain-policy", choices=["size", "drift"],
+                    default=None,
+                    help="maintenance job selection: 'size' ranks by "
+                         "posting length alone; 'drift' ranks by the "
+                         "Ada-IVF-style cost model over per-posting "
+                         "access/update/drift telemetry (default: the "
+                         "LireConfig default, 'size')")
     ap.add_argument("--threshold", type=int, default=1,
                     help="BacklogPolicy firing threshold")
     ap.add_argument("--shards", type=int, default=1,

@@ -45,7 +45,8 @@ class IndexBackend(Protocol):
     an atomic snapshot stamping per-shard WAL seqnos, and `replay`
     re-applies a WAL tail through the same jitted dispatches)."""
 
-    def search(self, queries: np.ndarray, k: int, nprobe: int | None
+    def search(self, queries: np.ndarray, k: int, nprobe: int | None,
+               valid: np.ndarray | None = None,
                ) -> tuple[np.ndarray, np.ndarray]: ...
 
     def insert(self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray
@@ -100,18 +101,48 @@ class LocalBackend(DurableBackend):
         probe_chunk: int = 0,
         use_pallas_scan: bool | None = None,
         scan_schedule: str | None = None,
+        track_access: bool = True,
     ):
         self.index = index
         self.probe_chunk = probe_chunk
         self.use_pallas_scan = use_pallas_scan
         self.scan_schedule = scan_schedule
+        self.track_access = track_access
+        # Per-posting probe counts accumulated since the last maintenance
+        # dispatch.  Searches are NOT WAL-logged, so this buffer must never
+        # touch the index state directly: it is drained into the payload of
+        # the next logged maintain/drain dispatch and folded inside that
+        # jitted round — live and on replay alike (bit-exact recovery).
+        self._pending_access = np.zeros(
+            (index.state.cfg.num_postings_cap,), np.int64
+        )
 
-    def search(self, queries, k, nprobe):
-        return self.index.search_padded(
+    def search(self, queries, k, nprobe, valid=None):
+        if not self.track_access:
+            return self.index.search_padded(
+                queries, k, nprobe=nprobe, probe_chunk=self.probe_chunk,
+                use_pallas_scan=self.use_pallas_scan,
+                scan_schedule=self.scan_schedule,
+            )
+        d, v, hist = self.index.search_padded(
             queries, k, nprobe=nprobe, probe_chunk=self.probe_chunk,
             use_pallas_scan=self.use_pallas_scan,
             scan_schedule=self.scan_schedule,
+            with_access=True, qvalid=valid,
         )
+        self._pending_access += hist
+        return d, v
+
+    def _take_access(self) -> np.ndarray:
+        """Drain the pending probe counts for a maintenance dispatch.
+        Access accumulated after the LAST logged dispatch is lost on a
+        crash (it never entered the WAL) — deterministically so: the
+        recovered twin replays exactly the folds the WAL saw."""
+        acc = np.minimum(
+            self._pending_access, np.iinfo(np.int32).max
+        ).astype(np.int32)
+        self._pending_access[:] = 0
+        return acc
 
     def insert(self, vecs, vids, valid):
         self._log("insert", {
@@ -140,12 +171,16 @@ class LocalBackend(DurableBackend):
             self.index._wal_applied = self.index.wal.append(op, payload)
 
     def maintain(self, jobs):
-        self._log("maintain", {"jobs": np.asarray(jobs, np.int32)})
-        return self.index.maintain_round(jobs)
+        access = self._take_access()
+        self._log("maintain", {
+            "jobs": np.asarray(jobs, np.int32), "access": access,
+        })
+        return self.index.maintain_round(jobs, access=access)
 
     def drain(self):
-        self._log("drain", {})
-        jobs = self.index.maintain()
+        access = self._take_access()
+        self._log("drain", {"access": access})
+        jobs = self.index.maintain(access=access)
         return jobs, self.index.last_drain_rounds
 
     def backlog(self):
@@ -174,9 +209,11 @@ class LocalBackend(DurableBackend):
         elif rec.op == "delete":
             self.index.delete_padded(p["vids"], p["valid"])
         elif rec.op == "maintain":
-            self.index.maintain_round(int(p["jobs"]))
+            # Old records (pre-telemetry) carry no "access" — .get(None)
+            # folds zeros, tracing the same graph those dispatches ran.
+            self.index.maintain_round(int(p["jobs"]), access=p.get("access"))
         elif rec.op == "drain":
-            self.index.maintain()
+            self.index.maintain(access=p.get("access"))
         else:
             raise ValueError(f"unknown WAL op {rec.op!r}")
 
@@ -363,7 +400,11 @@ class ServeEngine:
     def _process(self, batch: MicroBatch) -> None:
         if batch.op == SEARCH:
             k, nprobe = batch.key
-            d, v = self.backend.search(batch.arrays["queries"], k, nprobe)
+            # batch.valid masks padded rows out of the access telemetry
+            # (their result rows are computed and discarded, as before).
+            d, v = self.backend.search(
+                batch.arrays["queries"], k, nprobe, batch.valid
+            )
             batch.scatter({"dists": d, "ids": v})
         elif batch.op == INSERT:
             self._process_insert(batch)

@@ -153,6 +153,9 @@ REPLAY_CRITICAL_FIELDS = (
     "split_limit", "merge_limit", "merge_fanout",
     "reassign_range", "reassign_budget", "replica_count", "replica_rng",
     "kmeans_iters", "enable_split", "enable_merge", "enable_reassign",
+    # Job SELECTION shapes which postings every logged maintenance round
+    # touches, so replaying under a different policy/weighting diverges.
+    "maintain_policy", "maintain_alpha", "maintain_beta",
 )
 
 

@@ -95,6 +95,21 @@ def _dirty_leaf_index(template: Any) -> int | None:
     return None
 
 
+def _telemetry_leaf_indices(template: Any) -> list[int]:
+    """Leaf indices of the ``state.telemetry`` sub-tree (empty when the
+    template has no telemetry — e.g. a train-state dict).  ``telemetry``
+    is the LAST IndexState field, so these are trailing in flatten order;
+    snapshots written before it existed reconstruct them as zeros."""
+    out: list[int] = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    for i, (path, _leaf) in enumerate(flat):
+        names = [k.name for k in path
+                 if isinstance(k, jax.tree_util.GetAttrKey)]
+        if len(names) >= 2 and names[-2] == "telemetry":
+            out.append(i)
+    return out
+
+
 def _block_leaf_indices(template: Any) -> dict[str, int] | None:
     """Leaf indices of the per-block pool arrays (``pool.blocks`` /
     ``block_vid`` / ``block_ver`` / ``dirty``) — the leaves a delta
@@ -184,19 +199,31 @@ def read_manifest(path: str) -> dict:
 
 
 def _load_leaves_npz(path: str, template: Any, n_leaves: int) -> list[np.ndarray]:
-    """Positional ``leaf_i`` arrays with the format-1 migration: a
-    snapshot written before the pool grew its ``dirty`` leaf is one leaf
-    short; the missing bitmap is reconstructed all-clean (zeros) from the
-    template at its flatten position."""
+    """Positional ``leaf_i`` arrays with the older-format migrations: a
+    snapshot written before the pool grew its ``dirty`` leaf and/or the
+    state grew its ``telemetry`` sub-tree is short those leaves; each
+    missing leaf is reconstructed as zeros (all-clean bitmap, zeroed
+    counters) from the template at its flatten position.  Valid deficits:
+    1 (dirty), 3 (telemetry), or 4 (dirty + telemetry)."""
     data = np.load(path)
     tmpl_leaves = jax.tree_util.tree_leaves(template)
     if n_leaves == len(tmpl_leaves):
         return [data[f"leaf_{i}"] for i in range(n_leaves)]
     dirty_at = _dirty_leaf_index(template)
-    if dirty_at is not None and n_leaves == len(tmpl_leaves) - 1:
+    tel_at = _telemetry_leaf_indices(template)
+    missing = len(tmpl_leaves) - n_leaves
+    reconstruct: set[int] = set()
+    if missing == 1 and dirty_at is not None:
+        reconstruct = {dirty_at}
+    elif missing == len(tel_at) and tel_at:
+        reconstruct = set(tel_at)
+    elif (dirty_at is not None and tel_at
+          and missing == len(tel_at) + 1):
+        reconstruct = {dirty_at, *tel_at}
+    if reconstruct:
         out, src = [], 0
         for i, tmpl in enumerate(tmpl_leaves):
-            if i == dirty_at:
+            if i in reconstruct:
                 out.append(np.zeros_like(np.asarray(tmpl)))
             else:
                 out.append(data[f"leaf_{src}"])

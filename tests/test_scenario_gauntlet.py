@@ -1,0 +1,98 @@
+"""Tiny-N gate versions of the scenario gauntlet cells.
+
+The benchmark (``benchmarks/bench_scenarios.py``) runs the real-size
+cells and emits ``BENCH_scenarios.json``; these tests re-run shrunken
+versions of all four so CI proves every cell's *mechanics* — recall
+floors, live-set conservation, exact job accounting, and fixed-seed
+determinism of the size vs drift job selection — in minutes, not hours.
+"""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.gate
+
+from benchmarks.bench_scenarios import (
+    burst_cell,
+    churn_cell,
+    shift_cell,
+    shift_compare,
+    skew_cell,
+)
+
+
+TINY_SHIFT = dict(n_base=600, steps=3, n_hot=30, n_cold=60,
+                  n_queries=24, jobs=1)
+
+
+def _check_series(series: dict, steps: int) -> None:
+    for key in ("step", "recall", "search_ms", "jobs", "n_live",
+                "n_postings"):
+        assert len(series[key]) == steps, key
+    assert series["step"] == list(range(steps))
+    assert all(0.0 <= r <= 1.0 for r in series["recall"])
+    assert all(ms >= 0.0 for ms in series["search_ms"])
+
+
+def test_burst_cell_recall_floor_and_accounting():
+    cell = burst_cell(n_base=600, steps=4, quiet=40, burst=200,
+                      burst_every=2, jobs=2, n_queries=24)
+    _check_series(cell["series"], 4)
+    s = cell["summary"]
+    # recall-over-time floor: bursts may dip but must never crater
+    assert s["min_recall"] >= 0.5
+    assert s["final_recall"] >= 0.6
+    # background slots are suppressed -> jobs never exceed the budget
+    # (a budget of k ranks k split AND k merge candidates per round)
+    assert all(j <= 2 * 2 for j in cell["series"]["jobs"])
+    assert s["total_jobs"] == sum(cell["series"]["jobs"])
+    assert s["access_total"] > 0, "search path did not bump telemetry"
+
+
+def test_churn_cell_conserves_live_set():
+    cell = churn_cell(n_base=600, steps=4, churn=80, jobs=2, n_queries=24)
+    _check_series(cell["series"], 4)
+    s = cell["summary"]
+    assert s["live_set_conserved"], "tombstoned vid surfaced in results"
+    assert s["final_recall"] >= 0.5
+    # sliding window: insert N / delete N — the live ledger never grows
+    # (it can shrink when a full posting drops an un-landed insert)
+    assert all(0 < n <= 600 for n in cell["series"]["n_live"])
+
+
+def test_skew_cell_concentrates_access():
+    cell = skew_cell(n_base=800, steps=3, trickle=30, n_queries=48,
+                     jobs=2)
+    _check_series(cell["series"], 3)
+    s = cell["summary"]
+    assert s["final_recall"] >= 0.5
+    # Zipfian reads must concentrate probes well above the uniform share
+    assert s["access_top5pct_share"] > 0.10
+    assert s["access_total"] > 0
+
+
+def test_shift_cell_deterministic_under_fixed_seed():
+    """Same seed + same policy -> bit-identical series (the WAL-replay
+    story depends on job selection being a pure function of state)."""
+    for policy in ("size", "drift"):
+        a = shift_cell(policy=policy, **TINY_SHIFT)
+        b = shift_cell(policy=policy, **TINY_SHIFT)
+        for key in ("step", "recall", "jobs", "n_live", "n_postings"):
+            assert a["series"][key] == b["series"][key], (policy, key)
+        sa = {k: v for k, v in a["summary"].items()}
+        sb = {k: v for k, v in b["summary"].items()}
+        assert sa == sb, policy
+
+
+def test_shift_compare_equal_budget_accounting():
+    cmp = shift_compare(**TINY_SHIFT)
+    size = cmp["policies"]["size"]["summary"]
+    drift = cmp["policies"]["drift"]["summary"]
+    # the comparison is only meaningful at EQUAL jobs-per-round budget
+    assert cmp["jobs_per_round"] == 1
+    assert size["total_jobs"] == drift["total_jobs"]
+    assert cmp["drift_minus_size"] == round(
+        drift["mean_recall"] - size["mean_recall"], 4
+    )
+    # both runs saw the byte-identical stream
+    assert (cmp["policies"]["size"]["series"]["n_live"]
+            == cmp["policies"]["drift"]["series"]["n_live"])

@@ -501,3 +501,86 @@ def test_wal_compaction_recovery_preserves_live_set(tmp_path, rng):
     # compaction really skipped replay work: fewer physical appends than
     # the uncrashed service performed
     assert twin.stats()["n_appends"] < svc.stats()["n_appends"]
+
+
+# ---------------------------------------------------------------------------
+# Maintenance-policy telemetry through the WAL
+# ---------------------------------------------------------------------------
+
+def _drift_spec(root) -> spfresh.ServiceSpec:
+    return dataclasses.replace(
+        tiny_spec(root),
+        maintenance=spfresh.MaintenanceSpec(
+            policy="drift", alpha=4.0, beta=1.0
+        ),
+    )
+
+
+def test_crash_recovery_replays_telemetry_bit_exactly(tmp_path, rng):
+    """Access/update/drift telemetry leaves are STATE: searches feed the
+    pending access buffer, maintain logs it with the round dispatch, and
+    replay must reproduce every leaf bit-exactly — under the drift policy
+    the counters also decide job selection, so any divergence would show
+    up as different postings being split."""
+    import jax
+
+    base = make_clustered(rng, 800, 16, n_clusters=2)   # skewed: splits fire
+    spec = _drift_spec(tmp_path / "svc")
+    svc = spfresh.open(spec, vectors=base)
+    vecs, ids, _ = _stream(svc, rng, n=90)
+    # searches between maintains: the probe histogram lands in the NEXT
+    # logged round's payload, in several installments
+    for qs in (base[:32], vecs[:32], base[100:132]):
+        svc.search(qs, k=10)
+        svc.maintain(2)
+    st = svc.stats()
+    assert st["access_total"] > 0 and st["update_total"] > 0
+
+    twin = spfresh.open(spec)                  # crash: full WAL replay
+    assert twin.recovered
+    assert twin.stats() == st                  # incl. telemetry totals
+    for a, b in zip(
+        jax.tree_util.tree_leaves(svc.index.state.telemetry),
+        jax.tree_util.tree_leaves(twin.index.state.telemetry),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the full state agrees, not just the telemetry
+    q = np.concatenate([vecs[:10], base[:10]])
+    want, got = svc.search(q, k=10), twin.search(q, k=10)
+    np.testing.assert_array_equal(want[1], got[1])
+
+
+def test_pending_access_is_not_state_until_logged(tmp_path, rng):
+    """Probes accumulated since the last maintain live in a host-side
+    buffer, NOT the state: a crash before the next round loses them, and
+    the recovered twin must agree with the state (zero), not the buffer."""
+    base = make_clustered(rng, 500, 16)
+    spec = _drift_spec(tmp_path / "svc")
+    svc = spfresh.open(spec, vectors=base)
+    svc.search(base[:64], k=10)                # buffered, never logged
+    assert svc.stats()["access_total"] == 0    # stats read STATE only
+
+    twin = spfresh.open(spec)
+    assert twin.recovered
+    assert twin.stats()["access_total"] == 0
+    assert twin.stats() == svc.stats()
+
+
+def test_recovery_rejects_maintain_policy_drift(tmp_path, rng):
+    """maintain_policy/alpha/beta shape which postings every logged round
+    touches, so they are replay-critical: reopening under a different
+    policy must fail loudly instead of replaying a diverged history."""
+    base = make_clustered(rng, 400, 16)
+    spec = _drift_spec(tmp_path / "svc")
+    spfresh.open(spec, vectors=base).close()
+
+    with pytest.raises(ValueError, match="maintain_policy"):
+        spfresh.open(tiny_spec(tmp_path / "svc"))   # default: size
+    reweighted = dataclasses.replace(
+        spec, maintenance=spfresh.MaintenanceSpec(
+            policy="drift", alpha=8.0, beta=1.0
+        ),
+    )
+    with pytest.raises(ValueError, match="maintain_alpha"):
+        spfresh.open(reweighted)
+    assert spfresh.open(spec).recovered        # same policy: fine

@@ -21,6 +21,12 @@ python -m pytest -q tests/test_maintenance_round.py
 echo "== service API crash-recovery parity (spfresh.open, local + 2-shard) =="
 python -m pytest -q tests/test_service_api.py
 
+echo "== maintenance policy ranking + telemetry conservation =="
+python -m pytest -q tests/test_maintenance_policy.py
+
+echo "== scenario gauntlet (tiny-N cells) =="
+python -m pytest -q tests/test_scenario_gauntlet.py
+
 # The parity suites above carry ``pytestmark = pytest.mark.gate``; the
 # tier-1 step excludes them BY MARKER, so adding a gated suite is one
 # marker + one explicit step — the old hand-maintained --ignore list
