@@ -38,14 +38,19 @@ PATHS = (
      dict(use_pallas_scan=True, scan_schedule="batched")),
 )
 
+# (codec, rerank_factor) cells: lossy codecs over-fetch rerank_factor×k
+# quantized candidates and rerank them against the exact fp32 tier
+CODEC_CELLS = (("fp32", 1), ("bf16", 4), ("int8", 4))
 
-def _build(quick: bool):
+
+def _build(quick: bool, codec: str = "fp32", rerank_factor: int = 1):
     n = 6000 if quick else 60000
     dim = 16
     base = make_sift_like(n, dim, seed=71)
     idx = SPFreshIndex.build(
         bench_cfg(num_blocks=16384, num_postings_cap=2048,
-                  num_vectors_cap=max(65536, 2 * n)),
+                  num_vectors_cap=max(65536, 2 * n),
+                  codec=codec, rerank_factor=rerank_factor),
         base,
     )
     rng = np.random.default_rng(72)
@@ -57,7 +62,7 @@ def _build(quick: bool):
     hot = hot_centers[rng.integers(0, 4, q_n - q_n // 2)]
     queries = np.concatenate([uni, hot]) \
         + 0.02 * rng.normal(size=(q_n, dim)).astype(np.float32)
-    return idx, jnp.asarray(queries, jnp.float32)
+    return idx, jnp.asarray(queries, jnp.float32), base
 
 
 def _traffic_model(state, queries, nprobe: int) -> dict:
@@ -92,8 +97,32 @@ def _timed(fn, reps: int) -> dict:
     }
 
 
+def _codec_cell(state, queries, gt, nprobe: int, k: int) -> dict:
+    """One per-codec BENCH cell: the traffic model's page bytes (actual
+    hot-tier payload itemsize + scale/zero DMA) and recall@k through the
+    quantized batched Pallas path (rerank included when configured)."""
+    from benchmarks.common import scan_traffic
+
+    t = scan_traffic(state, queries, nprobe)
+    _, got = lire.search(
+        state, queries, k=k, nprobe=nprobe,
+        use_pallas_scan=True, scan_schedule="batched",
+    )
+    got = np.asarray(got)
+    hits = sum(
+        len(set(a.tolist()) & set(b.tolist())) for a, b in zip(gt, got)
+    )
+    ppq = t["unique_pages"] / t["q_n"]
+    return {
+        "page_bytes": t["page_bytes"],
+        "pages_per_query": ppq,
+        "scan_bytes_per_query": ppq * t["page_bytes"],
+        "recall_at_k": hits / gt.size,
+    }
+
+
 def run_json(quick: bool = True) -> dict:
-    idx, queries = _build(quick)
+    idx, queries, base = _build(quick)
     state = idx.state
     nprobe = 8
     k = 10
@@ -136,6 +165,33 @@ def run_json(quick: bool = True) -> dict:
     b = out["paths"]["pallas_batched"]["scan_bytes_per_query"]
     p = out["paths"]["pallas_per_query"]["scan_bytes_per_query"]
     out["batched_traffic_saving"] = p / max(b, 1e-12)
+
+    # per-codec cells: same workload + probe/page budgets, hot tier
+    # re-encoded per codec; savings/recall compared against the fp32 cell
+    from benchmarks.common import brute_force_gt
+
+    gt = brute_force_gt(
+        np.asarray(queries), base, np.arange(len(base)), k=k
+    )
+    cells: dict[str, dict] = {}
+    for codec, rf in CODEC_CELLS:
+        st = state if codec == "fp32" else _build(
+            quick, codec=codec, rerank_factor=rf
+        )[0].state
+        cells[codec] = {
+            "rerank_factor": rf,
+            **_codec_cell(st, queries, gt, nprobe, k),
+        }
+    fp = cells["fp32"]
+    for cell in cells.values():
+        cell["scan_bytes_saving_vs_fp32"] = (
+            fp["scan_bytes_per_query"]
+            / max(cell["scan_bytes_per_query"], 1e-12)
+        )
+        cell["recall_delta_vs_fp32"] = (
+            cell["recall_at_k"] - fp["recall_at_k"]
+        )
+    out["codecs"] = cells
     return out
 
 
@@ -153,6 +209,13 @@ def run(quick: bool = True) -> list[str]:
         f"probe_multiplicity={res['probe_multiplicity']:.2f}x;"
         f"batched_saving={res['batched_traffic_saving']:.2f}x"
     )
+    for codec, c in res["codecs"].items():
+        lines.append(
+            f"search_path/codec_{codec},0.0,"
+            f"scan_bytes_per_query={c['scan_bytes_per_query']:.0f};"
+            f"saving_vs_fp32={c['scan_bytes_saving_vs_fp32']:.2f}x;"
+            f"recall_delta={c['recall_delta_vs_fp32']:+.4f}"
+        )
     return lines
 
 

@@ -128,9 +128,16 @@ def scan_traffic(state, queries, nprobe: int) -> dict:
     total_pages = int(present.sum())
     unique_pages = len(np.unique(table[present]))
     q_n = table.shape[0]
-    page_bytes = (
-        cfg.block_size * cfg.dim * np.dtype(cfg.vector_dtype).itemsize
-    )
+    # Traffic is what the scan ACTUALLY moves: the pool's hot-tier payload
+    # itemsize (int8 = 1 B, bf16 = 2 B — not the logical vector_dtype),
+    # plus the per-page scale/zero-point pair that rides the DMA when the
+    # payload is quantized.
+    from repro.storage import codec as pcodec
+
+    payload_item = np.dtype(state.pool.blocks.dtype).itemsize
+    page_bytes = cfg.block_size * cfg.dim * payload_item
+    if pcodec.is_quantized(state.pool.codec):
+        page_bytes += 2 * 4  # f32 (scale, zero) per page
     return {
         "q_n": q_n,
         "page_table": table,

@@ -53,6 +53,12 @@ class ScanSpec:
     scan_schedule: str | None = None       # "per_query" | "batched" | None
     scan_page_budget: int | None = None
     pallas_interpret: bool | None = None
+    # Posting payload codec (storage/codec.py): "fp32" | "bf16" | "int8";
+    # None defers to IndexSpec.config.  Lossy codecs over-fetch
+    # rerank_factor×k quantized candidates and rerank them against the
+    # exact tier (see LireConfig.codec / .rerank_factor).
+    codec: str | None = None
+    rerank_factor: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +185,8 @@ class ServiceSpec:
             ("scan_schedule", s.scan_schedule),
             ("scan_page_budget", s.scan_page_budget),
             ("pallas_interpret", s.pallas_interpret),
+            ("codec", s.codec),
+            ("rerank_factor", s.rerank_factor),
             ("jobs_per_round", m.jobs_per_round),
             ("merge_fanout", m.merge_fanout),
             ("reassign_budget", m.reassign_budget),
@@ -235,6 +243,10 @@ class ServiceSpec:
             )
         if self.scan.scan_schedule is not None:
             assert self.scan.scan_schedule in ("per_query", "batched")
+        if self.scan.codec is not None:
+            assert self.scan.codec in ("fp32", "bf16", "int8"), self.scan.codec
+        if self.scan.rerank_factor is not None:
+            assert self.scan.rerank_factor >= 1
 
     # ------------------------------------------------------------------
     def with_durability(self, root: str, **kw) -> "ServiceSpec":

@@ -29,6 +29,7 @@ from repro.core import lire
 from repro.core.clustering import hierarchical_balanced_kmeans
 from repro.core.distance import pairwise_sql2
 from repro.core.types import IndexState, LireConfig, make_empty_state
+from repro.storage import codec as pcodec
 from repro.storage.snapshot import load_snapshot, save_snapshot, snapshot_exists
 from repro.storage.wal import WriteAheadLog, iter_wal
 
@@ -102,7 +103,20 @@ def build_state(
 
     bs, mb = cfg.block_size, cfg.max_blocks_per_posting
     cap = cfg.posting_capacity
-    blocks = np.zeros((cfg.num_blocks, bs, d), np.dtype(cfg.vector_dtype))
+    quant = cfg.codec == "int8"
+    # hot tier staged at fp32 for fp32/bf16 (converted to the payload dtype
+    # below); int8 encodes per posting during the fill
+    blocks = np.zeros(
+        (cfg.num_blocks, bs, d),
+        np.int8 if quant else np.dtype(cfg.vector_dtype),
+    )
+    exact = (
+        np.zeros((cfg.num_blocks, bs, d), np.float32)
+        if pcodec.has_exact_tier(cfg.codec)
+        else None
+    )
+    post_scale = np.ones((cfg.num_postings_cap,), np.float32)
+    post_zero = np.zeros((cfg.num_postings_cap,), np.float32)
     block_vid = np.full((cfg.num_blocks, bs), -1, np.int32)
     block_ver = np.zeros((cfg.num_blocks, bs), np.uint8)
     posting_blocks = np.full((cfg.num_postings_cap, mb), -1, np.int32)
@@ -115,12 +129,23 @@ def build_state(
         nb = math.ceil(len(mem) / bs) if mem else 0
         if next_block + nb > cfg.num_blocks:
             raise ValueError("num_blocks too small for the build")
+        if mem:
+            scale, zero = pcodec.np_train_scale_zero(vectors[mem])
+            post_scale[pid] = scale
+            post_zero[pid] = zero
         for b in range(nb):
             bid = next_block
             next_block += 1
             posting_blocks[pid, b] = bid
             rows = mem[b * bs : (b + 1) * bs]
-            blocks[bid, : len(rows)] = vectors[rows]
+            raw = vectors[rows]
+            blocks[bid, : len(rows)] = (
+                pcodec.np_encode(raw, post_scale[pid], post_zero[pid])
+                if quant
+                else raw
+            )
+            if exact is not None:
+                exact[bid, : len(rows)] = raw
             block_vid[bid, : len(rows)] = rows
 
     state = make_empty_state(cfg, seed=seed)
@@ -139,13 +164,18 @@ def build_state(
     cvalid[:p] = True
 
     pool = state.pool.replace(
-        blocks=jnp.asarray(blocks),
+        blocks=jnp.asarray(blocks).astype(state.pool.blocks.dtype),
+        blocks_exact=(
+            jnp.asarray(exact) if exact is not None else None
+        ),
         block_vid=jnp.asarray(block_vid),
         block_ver=jnp.asarray(block_ver),
         posting_blocks=jnp.asarray(posting_blocks),
         posting_len=jnp.asarray(posting_len),
         free_stack=jnp.asarray(free_stack),
         free_top=jnp.asarray(free_blocks.size, jnp.int32),
+        post_scale=jnp.asarray(post_scale),
+        post_zero=jnp.asarray(post_zero),
     )
     return state.replace(
         pool=pool,
@@ -517,7 +547,11 @@ class SPFreshIndex:
 
     def memory_bytes(self) -> dict:
         """Resource accounting analogous to paper Fig. 7(d): what must sit in
-        'DRAM' (centroids + mappings + versions) vs 'disk' (block payloads)."""
+        'DRAM' (centroids + mappings + versions) vs 'disk' (block payloads).
+
+        ``hot`` is the scan-path payload (codec dtype + per-posting quant
+        params); ``cold`` the exact tier a lossy codec carries; ``disk``
+        their sum plus slot metadata."""
         st = self.state
         in_mem = (
             st.centroids.size * 4
@@ -529,9 +563,20 @@ class SPFreshIndex:
             + st.pool.free_stack.size * 4
             + st.pid_free_stack.size * 4
         )
-        on_disk = (
+        hot = (
             st.pool.blocks.size * st.pool.blocks.dtype.itemsize
+            + st.pool.post_scale.size * 4
+            + st.pool.post_zero.size * 4
+        )
+        cold = (
+            st.pool.blocks_exact.size * st.pool.blocks_exact.dtype.itemsize
+            if st.pool.blocks_exact is not None
+            else 0
+        )
+        on_disk = (
+            hot
+            + cold
             + st.pool.block_vid.size * 4
             + st.pool.block_ver.size
         )
-        return {"memory": in_mem, "disk": on_disk}
+        return {"memory": in_mem, "disk": on_disk, "hot": hot, "cold": cold}

@@ -220,9 +220,9 @@ def _dedup_prefilter(cfg, k: int, n: int) -> int:
     return max(k, min(n, max(4 * k, 2 * k * cfg.replica_count)))
 
 
-def _dedup_topk_1d(
+def _dedup_topk_1d_full(
     dists: Array, vids: Array, live: Array, k: int, prefilter: int
-) -> tuple[Array, Array]:
+) -> tuple[Array, Array, Array]:
     """Top-k smallest with duplicate-vid suppression (replicas!).
 
     Replaces the lexsort reduce (see ``_dedup_topk_1d_ref``): one
@@ -238,6 +238,10 @@ def _dedup_topk_1d(
     Exact vs the reference whenever each vid has ≤ prefilter/k live
     replicas (callers size ``prefilter`` via ``_dedup_prefilter``); only
     exact cross-vid distance ties can reorder equal-distance results.
+
+    Returns ``(top_d (k,), out_vids (k,), orig_idx (k,))`` — ``orig_idx``
+    is each winner's index into the input candidate array (-1 for masked
+    rows), which the rerank uses to recover candidate pool positions.
     """
     n = dists.shape[0]
     m = min(max(prefilter, k), n)
@@ -249,7 +253,17 @@ def _dedup_topk_1d(
     earlier_dup = (sv[:, None] == sv[None, :]) & (idx[:, None] > idx[None, :])
     keep = ~jnp.any(earlier_dup, axis=1) & (sd < MASK_DISTANCE / 2)
     top_d, s2 = masked_topk(sd, keep, k)
-    out_vids = jnp.where(top_d < MASK_DISTANCE / 2, sv[s2], -1)
+    ok = top_d < MASK_DISTANCE / 2
+    out_vids = jnp.where(ok, sv[s2], -1)
+    orig_idx = jnp.where(ok, sel[s2], -1)
+    return top_d, out_vids, orig_idx
+
+
+def _dedup_topk_1d(
+    dists: Array, vids: Array, live: Array, k: int, prefilter: int
+) -> tuple[Array, Array]:
+    """`_dedup_topk_1d_full` without the candidate-index output."""
+    top_d, out_vids, _ = _dedup_topk_1d_full(dists, vids, live, k, prefilter)
     return top_d, out_vids
 
 
@@ -284,14 +298,20 @@ def _page_slot_live(state: IndexState, pages: Array) -> tuple[Array, Array]:
 def _pallas_scan_candidates(
     state: IndexState, queries: Array, pids: Array, probe_valid: Array,
     *, k: int, schedule: str,
-) -> tuple[Array, Array, Array]:
+) -> tuple[Array, Array, Array, Array]:
     """Paged Pallas posting scan → reduced candidate set.
 
     Streams SSD-block-sized pages through the ``posting_scan`` kernels and
     keeps only the per-page ``min(k, BS)`` nearest live candidates, so
     neither the (Q, nprobe·cap, d) gather buffer nor the (Q, nprobe·MB·BS)
     distance matrix ever exists in HBM.  Returns ``(dists (Q, n),
-    vids (Q, n), live (Q, n))`` with n = pages·kpage.
+    vids (Q, n), pos (Q, n), live (Q, n))`` with n = pages·kpage; ``pos``
+    is each candidate's pool position (``block_id·BS + slot``, -1 dead),
+    which the exact rerank gathers from the cold tier.
+
+    With the ``int8`` codec the dequant-fused kernel variants run instead:
+    the probed posting's scale/zero ride the block-table DMA and the page
+    is reconstructed on the VPU, so the page stream stays 1 byte/dim.
 
     ``schedule="per_query"`` streams every probed page once per query
     (paper-faithful ParallelGET).  ``schedule="batched"`` dedups the whole
@@ -305,28 +325,65 @@ def _pallas_scan_candidates(
     pool = state.pool
     q, nprobe = pids.shape
     mb = pool.max_blocks_per_posting
+    bs = pool.block_size
     kpage = min(k, pool.block_size)
     interp = cfg.pallas_interpret
+    quant = pool.codec == "int8"
     flat = _page_table(state, pids, probe_valid)        # (Q, NB)
+    # posting owning each page row: pages j of probe i are i*MB..i*MB+MB-1
+    page_pid = jnp.repeat(pids, mb, axis=1)             # (Q, NB)
+    safe_pp = jnp.maximum(page_pid, 0)
 
     if schedule == "per_query":
         pvids, live = _page_slot_live(state, flat)      # (Q, NB, BS)
-        d, slots = scan_ops.scan_posting_blocks_topk(
-            queries, flat, live, pool.blocks, k=kpage, interpret=interp
-        )                                               # (Q, NB, kpage)
+        if quant:
+            d, slots = scan_ops.scan_posting_blocks_topk_q8(
+                queries, flat, live, pool.blocks,
+                pool.post_scale[safe_pp], pool.post_zero[safe_pp],
+                k=kpage, interpret=interp,
+            )                                           # (Q, NB, kpage)
+        else:
+            d, slots = scan_ops.scan_posting_blocks_topk(
+                queries, flat, live, pool.blocks, k=kpage, interpret=interp
+            )                                           # (Q, NB, kpage)
         cand_v = jnp.take_along_axis(pvids, slots, axis=2)
+        cand_p = jnp.where(
+            (flat >= 0)[:, :, None], flat[:, :, None] * bs + slots, -1
+        )
         cand_d = d.reshape(q, -1)
         cand_v = cand_v.reshape(q, -1)
+        cand_p = cand_p.reshape(q, -1)
     elif schedule == "batched":
         budget = cfg.scan_page_budget or min(q * nprobe * mb, cfg.num_blocks)
         uniq, member_pos, _, _ = scan_ops.dedup_pages(
             flat.reshape(-1), budget=budget, num_blocks=cfg.num_blocks
         )
         pvids, live = _page_slot_live(state, uniq)      # (budget, BS)
-        d, slots = scan_ops.scan_unique_blocks_topk(
-            queries, uniq, live, pool.blocks, k=kpage, interpret=interp
-        )                                               # (budget, Q, kpage)
+        if quant:
+            # invert the dedup: every original probe scatters its posting's
+            # scale/zero onto its unique-page row (one posting owns each
+            # block, so colliding writers carry identical values)
+            fscale = pool.post_scale[safe_pp].reshape(-1)
+            fzero = pool.post_zero[safe_pp].reshape(-1)
+            tgt = jnp.where(member_pos >= 0, member_pos, budget)
+            u_scale = jnp.ones((budget,), jnp.float32).at[tgt].set(
+                fscale, mode="drop"
+            )
+            u_zero = jnp.zeros((budget,), jnp.float32).at[tgt].set(
+                fzero, mode="drop"
+            )
+            d, slots = scan_ops.scan_unique_blocks_topk_q8(
+                queries, uniq, live, pool.blocks, u_scale, u_zero,
+                k=kpage, interpret=interp,
+            )                                           # (budget, Q, kpage)
+        else:
+            d, slots = scan_ops.scan_unique_blocks_topk(
+                queries, uniq, live, pool.blocks, k=kpage, interpret=interp
+            )                                           # (budget, Q, kpage)
         page_v = jnp.take_along_axis(pvids[:, None, :], slots, axis=2)
+        page_p = jnp.where(
+            (uniq >= 0)[:, None, None], uniq[:, None, None] * bs + slots, -1
+        )
         # gather each query's own probed pages back out of the unique-page
         # tiles (parity with the per-query schedule: a page another query
         # probed must not leak in) — the reduce then sees the per-query
@@ -338,11 +395,14 @@ def _pallas_scan_candidates(
             (mp >= 0)[:, :, None], d[safe_mp, qi], MASK_DISTANCE
         ).reshape(q, -1)
         cand_v = page_v[safe_mp, qi].reshape(q, -1)
+        cand_p = jnp.where(
+            (mp >= 0)[:, :, None], page_p[safe_mp, qi], -1
+        ).reshape(q, -1)
     else:
         raise ValueError(
             f"scan_schedule must be 'per_query' or 'batched', got {schedule!r}"
         )
-    return cand_d, cand_v, cand_d < MASK_DISTANCE / 2
+    return cand_d, cand_v, cand_p, cand_d < MASK_DISTANCE / 2
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "scan_page_budget"))
@@ -384,20 +444,39 @@ def scan_page_stats(
     }
 
 
+def _posting_positions(pool, flat_pids: Array) -> Array:
+    """Pool positions (``block_id·BS + slot``) of every capacity slot of
+    the given postings: ``(m,)`` pids → ``(m, cap)``, -1 for absent
+    blocks.  The rerank gathers exact payloads by these positions."""
+    bids = pool.posting_blocks[flat_pids]               # (m, MB)
+    slot = jnp.arange(pool.block_size, dtype=jnp.int32)
+    pos = bids[..., None] * pool.block_size + slot[None, None, :]
+    pos = jnp.where(bids[..., None] >= 0, pos, -1)
+    return pos.reshape(flat_pids.shape[0], -1)
+
+
 def _scan_probe_chunk(
     state: IndexState, queries: Array, pids: Array, probe_valid: Array
-) -> tuple[Array, Array, Array]:
+) -> tuple[Array, Array, Array, Array]:
     """Score one chunk of probed postings.  queries (Q, d); pids (Q, c).
-    Returns (dists (Q, c*cap), vids, live)."""
+    Returns (dists (Q, c*cap), vids, pos, live).
+
+    Payloads come off the HOT tier (decoded through the posting codec) so
+    the oracle computes the same distances as the dequant-fused Pallas
+    scan — quantization error shows up identically on both data paths and
+    the exact rerank removes it on both.
+    """
     cfg = state.cfg
     q, c = pids.shape
     cap = cfg.posting_capacity
     flat_pids = jnp.maximum(pids.reshape(-1), 0)
-    vecs, vids, vers, slot_valid = bp.parallel_get(state.pool, flat_pids)
+    vecs, vids, vers, slot_valid = bp.parallel_get_hot(state.pool, flat_pids)
+    pos = _posting_positions(state.pool, flat_pids)
     stale = vm.is_stale(state.versions, vids, vers)
     live = slot_valid & ~stale & probe_valid.reshape(-1)[:, None]
     vecs = vecs.reshape(q, c * cap, -1)
     vids = vids.reshape(q, c * cap)
+    pos = pos.reshape(q, c * cap)
     live = live.reshape(q, c * cap)
     # scan math in cfg.scan_dtype (bf16 on TPU) with f32 accumulation —
     # halves the upcast traffic of int8 payloads (§Perf spfresh iter 2)
@@ -408,7 +487,37 @@ def _scan_probe_chunk(
     dists = jnp.sum(
         (diff * diff).astype(jnp.float32), axis=-1
     )
-    return dists, vids, live
+    return dists, vids, pos, live
+
+
+def _rerank_exact(
+    state: IndexState, queries: Array, cand_d: Array, cand_v: Array,
+    cand_pos: Array, k: int,
+) -> tuple[Array, Array]:
+    """Exact fp32 rerank of an over-fetched, already-deduped candidate set.
+
+    ``cand_pos (Q, k')`` are pool positions; the cold exact tier is
+    gathered (k'·d fp32 values per query — tiny next to the scan) and the
+    final top-k runs on true distances.  Candidates arrive vid-deduped,
+    so a plain top_k suffices.
+    """
+    pool = state.pool
+    tier = pool.blocks_exact if pool.blocks_exact is not None else pool.blocks
+    flat = tier.reshape(-1, pool.dim)
+    safe = jnp.maximum(cand_pos, 0)
+    vecs = flat[safe].astype(jnp.float32)               # (Q, k', d)
+    qf = queries.astype(jnp.float32)
+    diff = vecs - qf[:, None, :]
+    dist = jnp.sum(diff * diff, axis=-1)
+    dist = jnp.where((cand_pos >= 0) & (cand_v >= 0), dist, MASK_DISTANCE)
+    neg, sel = jax.lax.top_k(-dist, k)
+    top_d = -neg
+    out_v = jnp.where(
+        top_d < MASK_DISTANCE / 2,
+        jnp.take_along_axis(cand_v, sel, axis=1),
+        -1,
+    )
+    return top_d, out_v
 
 
 def scan_and_reduce(
@@ -433,58 +542,78 @@ def scan_and_reduce(
       k-min candidates; the reduce then works on (Q, pages·kpage)
       candidates.  ``probe_chunk`` is ignored — the kernel grid already
       streams page-at-a-time, and the candidate buffer is k-reduced.
-    * **XLA gather oracle** (default): ``bp.parallel_get`` materializes
-      the (Q, nprobe·cap, d) probe buffer; ``probe_chunk > 0`` processes
-      the probes in chunks with a running candidate set so the buffer is
-      O(Q · chunk · cap · d).
+    * **XLA gather oracle** (default): ``bp.parallel_get_hot`` materializes
+      the (Q, nprobe·cap, d) probe buffer (decoded hot tier);
+      ``probe_chunk > 0`` processes the probes in chunks with a running
+      candidate set so the buffer is O(Q · chunk · cap · d).
+
+    With a lossy codec and ``cfg.rerank_factor > 1``, both data paths
+    over-fetch ``rerank_factor × k`` deduped candidates from the
+    quantized scan, then rerank them against the cold exact-fp32 tier
+    before the final top-k (the two-tier search closing the accuracy
+    gap).
     """
     cfg = state.cfg
     q, nprobe = pids.shape
     cap = cfg.posting_capacity
     pallas = cfg.use_pallas_scan if use_pallas_scan is None else use_pallas_scan
     schedule = scan_schedule if scan_schedule is not None else cfg.scan_schedule
+    rerank = cfg.rerank_factor > 1 and state.pool.blocks_exact is not None
+    kq = k * cfg.rerank_factor if rerank else k
+
+    def reduce_and_rerank(cand_d, cand_v, cand_p, live):
+        n = cand_d.shape[1]
+        kk = min(kq, n) if rerank else k
+        m = _dedup_prefilter(cfg, kk, n)
+        d, v, oi = jax.vmap(
+            lambda dd, vv, mm: _dedup_topk_1d_full(dd, vv, mm, kk, m)
+        )(cand_d, cand_v, live)
+        if not rerank:
+            return d, v
+        pos = jnp.take_along_axis(cand_p, jnp.maximum(oi, 0), axis=1)
+        pos = jnp.where(oi >= 0, pos, -1)
+        return _rerank_exact(state, queries, d, v, pos, k)
 
     if pallas:
-        cand_d, cand_v, live = _pallas_scan_candidates(
-            state, queries, pids, probe_valid, k=k, schedule=schedule
+        cand_d, cand_v, cand_p, live = _pallas_scan_candidates(
+            state, queries, pids, probe_valid, k=kq, schedule=schedule
         )
-        m = _dedup_prefilter(cfg, k, cand_d.shape[1])
-        return jax.vmap(lambda d, v, mm: _dedup_topk_1d(d, v, mm, k, m))(
-            cand_d, cand_v, live
-        )
+        return reduce_and_rerank(cand_d, cand_v, cand_p, live)
 
     if probe_chunk <= 0 or nprobe % probe_chunk != 0 or nprobe == probe_chunk:
-        dists, vids, live = _scan_probe_chunk(state, queries, pids, probe_valid)
-        m = _dedup_prefilter(cfg, k, dists.shape[1])
-        return jax.vmap(lambda d, v, mm: _dedup_topk_1d(d, v, mm, k, m))(
-            dists, vids, live
+        dists, vids, pos, live = _scan_probe_chunk(
+            state, queries, pids, probe_valid
         )
+        return reduce_and_rerank(dists, vids, pos, live)
 
     nc = nprobe // probe_chunk
-    keep = min(max(4 * k, 64), probe_chunk * cap)
+    keep = min(max(4 * kq, 64), probe_chunk * cap)
     pids_c = pids.reshape(q, nc, probe_chunk).transpose(1, 0, 2)
     pvalid_c = probe_valid.reshape(q, nc, probe_chunk).transpose(1, 0, 2)
 
     def body(carry, inp):
-        best_d, best_v = carry  # (Q, keep)
+        best_d, best_v, best_p = carry  # (Q, keep)
         pc, vc = inp
-        d, v, live = _scan_probe_chunk(state, queries, pc, vc)
+        d, v, p, live = _scan_probe_chunk(state, queries, pc, vc)
         d = jnp.where(live, d, MASK_DISTANCE)
         cat_d = jnp.concatenate([best_d, d], axis=1)
         cat_v = jnp.concatenate([best_v, v], axis=1)
+        cat_p = jnp.concatenate([best_p, p], axis=1)
         neg, sel = jax.lax.top_k(-cat_d, keep)
-        return (-neg, jnp.take_along_axis(cat_v, sel, axis=1)), None
+        return (
+            -neg,
+            jnp.take_along_axis(cat_v, sel, axis=1),
+            jnp.take_along_axis(cat_p, sel, axis=1),
+        ), None
 
     init = (
         jnp.full((q, keep), MASK_DISTANCE, jnp.float32),
         jnp.full((q, keep), -1, jnp.int32),
+        jnp.full((q, keep), -1, jnp.int32),
     )
-    (best_d, best_v), _ = jax.lax.scan(body, init, (pids_c, pvalid_c))
+    (best_d, best_v, best_p), _ = jax.lax.scan(body, init, (pids_c, pvalid_c))
     live = best_d < MASK_DISTANCE / 2
-    m = _dedup_prefilter(cfg, k, keep)
-    return jax.vmap(lambda d, v, mm: _dedup_topk_1d(d, v, mm, k, m))(
-        best_d, best_v, live
-    )
+    return reduce_and_rerank(best_d, best_v, best_p, live)
 
 
 @functools.partial(

@@ -31,6 +31,16 @@ class LireConfig:
     num_vectors_cap: int = 65536     # N_cap (version map size)
     vector_dtype: str = "float32"    # storage dtype for posting payloads
     scan_dtype: str = "float32"      # distance-scan compute dtype (f32 accum)
+    # --- tiered posting codec (storage/codec.py) ---
+    # "fp32": hot tier stores vector_dtype verbatim (pre-codec behavior).
+    # "bf16"/"int8": hot tier stores bf16 / per-posting-quantized int8
+    #   (scan bytes ÷2 / ÷4) and a cold exact-fp32 tier serves maintenance
+    #   reads and the search rerank.
+    codec: str = "fp32"
+    # Quantized scans over-fetch rerank_factor×k candidates, then rerank
+    # the survivors against the exact tier before the final top-k.  1 =
+    # no rerank (exact codecs don't need one).
+    rerank_factor: int = 1
     # --- LIRE protocol ---
     split_limit: int = 96            # split when live length exceeds this
     merge_limit: int = 12            # merge when 0 < live length below this
@@ -109,6 +119,8 @@ class LireConfig:
         assert self.maintain_beta >= 0.0
         assert self.scan_schedule in ("per_query", "batched"), self.scan_schedule
         assert self.scan_page_budget >= 0
+        assert self.codec in ("fp32", "bf16", "int8"), self.codec
+        assert self.rerank_factor >= 1
 
 
 @pytree_dataclass
@@ -193,6 +205,7 @@ def make_empty_state(cfg: LireConfig, seed: int = 0) -> IndexState:
         num_postings_cap=cfg.num_postings_cap,
         max_blocks_per_posting=cfg.max_blocks_per_posting,
         dtype=dtype,
+        codec=cfg.codec,
     )
     p = cfg.num_postings_cap
     return IndexState(

@@ -396,7 +396,11 @@ def gather_live_vectors(
         st = unstack_state(stacked, s)
         vids = np.asarray(st.pool.block_vid).reshape(-1)
         vers = np.asarray(st.pool.block_ver).reshape(-1)
-        vecs = np.asarray(st.pool.blocks).reshape(-1, st.pool.dim)
+        # re-sharding rebuilds the index from these rows, so read the
+        # exact fp32 tier when the codec keeps one (no requant error)
+        tier = (st.pool.blocks_exact if st.pool.blocks_exact is not None
+                else st.pool.blocks)
+        vecs = np.asarray(tier, dtype=np.float32).reshape(-1, st.pool.dim)
         stale = np.asarray(
             vm.is_stale(st.versions, jnp.asarray(vids), jnp.asarray(vers))
         )

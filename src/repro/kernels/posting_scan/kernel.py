@@ -201,6 +201,69 @@ def scan_per_query_topk(
     )(block_table, queries, blocks, slot_bias)
 
 
+def _scan_per_query_topk_q8_kernel(
+    table_ref, q_ref, blk_ref, bias_ref, sz_ref, out_d_ref, out_i_ref, *, k: int
+):
+    # Dequant-fused variant: blk_ref holds int8 codes; sz_ref (1, 1, 2)
+    # carries the page's posting [scale, zero], riding the block-table DMA
+    # exactly like the liveness bias — the page streams at 1 byte/dim and
+    # is reconstructed on the VPU before the distance math.
+    q = q_ref[0, :].astype(jnp.float32)
+    scale = sz_ref[0, 0, 0]
+    zero = sz_ref[0, 0, 1]
+    b = blk_ref[0].astype(jnp.float32) * scale + zero   # (BS, d) dequant
+    bsq = jnp.sum(b * b, axis=1)                  # (BS,)
+    cross = jnp.dot(b, q, preferred_element_type=jnp.float32)  # (BS,)
+    qsq = jnp.sum(q * q)
+    d = jnp.maximum(qsq - 2.0 * cross + bsq, 0.0) + bias_ref[0, 0, :]
+    kd, ki = _kmin_rows(d[None, :], k=k)          # (1, k)
+    out_d_ref[0] = kd
+    out_i_ref[0] = ki
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_per_query_topk_q8(
+    block_table: jax.Array,  # (Q, NB) i32 — block pool indices (clamped >=0)
+    queries: jax.Array,      # (Q, d)
+    blocks: jax.Array,       # (B, BS, d) int8 codes
+    slot_bias: jax.Array,    # (Q, NB, BS) f32 — 0 live, +BIG dead
+    page_sz: jax.Array,      # (Q, NB, 2) f32 — per-page [scale, zero]
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query paged scan over int8 codes with in-kernel dequant.
+
+    Same contract as `scan_per_query_topk`; distances are computed on the
+    reconstructed ``code * scale + zero`` values."""
+    q_n, nb = block_table.shape
+    _, bs, dim = blocks.shape
+    assert k <= bs, (k, bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n, nb),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda q, j, table: (q, 0)),
+            pl.BlockSpec((1, bs, dim), lambda q, j, table: (table[q, j], 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda q, j, table: (q, j, 0)),
+            pl.BlockSpec((1, 1, 2), lambda q, j, table: (q, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda q, j, table: (q, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda q, j, table: (q, j, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scan_per_query_topk_q8_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_table, queries, blocks, slot_bias, page_sz)
+
+
 def _scan_batched_topk_kernel(
     ids_ref, q_ref, blk_ref, bias_ref, out_d_ref, out_i_ref, *, k: int
 ):
@@ -260,3 +323,69 @@ def scan_batched_topk(
         ],
         interpret=interpret,
     )(unique_blocks, queries, blocks, slot_bias)
+
+
+def _scan_batched_topk_q8_kernel(
+    ids_ref, q_ref, blk_ref, bias_ref, sz_ref, out_d_ref, out_i_ref, *, k: int
+):
+    # Batched dequant-fused variant: sz_ref (1, 2) carries the unique
+    # page's [scale, zero] (one posting owns each block, so the page has a
+    # single parameter pair no matter how many queries probe it).
+    q = q_ref[...].astype(jnp.float32)            # (Q, d)
+    scale = sz_ref[0, 0]
+    zero = sz_ref[0, 1]
+    b = blk_ref[0].astype(jnp.float32) * scale + zero   # (BS, d) dequant
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)   # (Q, 1)
+    bsq = jnp.sum(b * b, axis=1)                  # (BS,)
+    cross = jax.lax.dot_general(
+        q, b, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (Q, BS)
+    d = jnp.maximum(qsq - 2.0 * cross + bsq[None, :], 0.0)
+    d = d + bias_ref[0, :][None, :]
+    kd, ki = _kmin_rows(d, k=k)                   # (Q, k)
+    out_d_ref[0] = kd
+    out_i_ref[0] = ki
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_batched_topk_q8(
+    unique_blocks: jax.Array,  # (NB,) i32 unique block pool indices (>=0)
+    queries: jax.Array,        # (Q, d)
+    blocks: jax.Array,         # (B, BS, d) int8 codes
+    slot_bias: jax.Array,      # (NB, BS) f32 — 0 live, +BIG dead
+    page_sz: jax.Array,        # (NB, 2) f32 — per-page [scale, zero]
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batch-dedup paged scan over int8 codes with in-kernel dequant.
+
+    Same contract as `scan_batched_topk`."""
+    nb = unique_blocks.shape[0]
+    q_n, dim = queries.shape
+    _, bs, _ = blocks.shape
+    assert k <= bs, (k, bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((q_n, dim), lambda i, ids: (0, 0)),
+            pl.BlockSpec((1, bs, dim), lambda i, ids: (ids[i], 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, ids: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i, ids: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_n, k), lambda i, ids: (i, 0, 0)),
+            pl.BlockSpec((1, q_n, k), lambda i, ids: (i, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_scan_batched_topk_q8_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, q_n, k), jnp.float32),
+            jax.ShapeDtypeStruct((nb, q_n, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(unique_blocks, queries, blocks, slot_bias, page_sz)

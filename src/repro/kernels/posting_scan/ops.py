@@ -106,6 +106,59 @@ def scan_unique_blocks_topk(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_posting_blocks_topk_q8(
+    queries: jax.Array,      # (Q, d)
+    page_table: jax.Array,   # (Q, NB) i32 block ids, -1 = absent/not probed
+    slot_live: jax.Array,    # (Q, NB, BS) bool — live slots of each page
+    blocks: jax.Array,       # (B, BS, d) int8 codes
+    page_scale: jax.Array,   # (Q, NB) f32 — per-page posting scale
+    page_zero: jax.Array,    # (Q, NB) f32 — per-page posting zero-point
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """`scan_posting_blocks_topk` over int8 codes: the per-page scale/zero
+    ride the DMA and the page is dequantized inside the kernel."""
+    bias = jnp.where(
+        slot_live & (page_table >= 0)[:, :, None], jnp.float32(0), BIG
+    )
+    page_sz = jnp.stack(
+        [page_scale.astype(jnp.float32), page_zero.astype(jnp.float32)],
+        axis=-1,
+    )                                                   # (Q, NB, 2)
+    return K.scan_per_query_topk_q8(
+        jnp.maximum(page_table, 0), queries, blocks, bias, page_sz,
+        k=k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def scan_unique_blocks_topk_q8(
+    queries: jax.Array,       # (Q, d)
+    unique_blocks: jax.Array,  # (NB,) i32, -1 = padding
+    slot_live: jax.Array,     # (NB, BS) bool — live slots of each page
+    blocks: jax.Array,        # (B, BS, d) int8 codes
+    page_scale: jax.Array,    # (NB,) f32 — per-unique-page posting scale
+    page_zero: jax.Array,     # (NB,) f32 — per-unique-page zero-point
+    *,
+    k: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """`scan_unique_blocks_topk` over int8 codes with in-kernel dequant."""
+    bias = jnp.where(
+        slot_live & (unique_blocks >= 0)[:, None], jnp.float32(0), BIG
+    )
+    page_sz = jnp.stack(
+        [page_scale.astype(jnp.float32), page_zero.astype(jnp.float32)],
+        axis=-1,
+    )                                                   # (NB, 2)
+    return K.scan_batched_topk_q8(
+        jnp.maximum(unique_blocks, 0), queries, blocks, bias, page_sz,
+        k=k, interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("budget", "num_blocks"))
 def dedup_pages(
     pages: jax.Array,         # (N,) i32 probed block ids, -1 = invalid

@@ -49,3 +49,30 @@ def scan_batched_topk_ref(
     d = scan_unique_blocks_ref(unique_blocks, queries, blocks)
     d = d + slot_bias[:, None, :]
     return _kmin_ref(d, k)
+
+
+def scan_per_query_topk_q8_ref(
+    block_table: jax.Array, queries: jax.Array, blocks: jax.Array,
+    slot_bias: jax.Array, page_sz: jax.Array, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Dequant-fused per-query oracle: reconstruct ``code*scale+zero``
+    per page ((Q, NB, 2) params) before the distance math."""
+    g = blocks[block_table].astype(jnp.float32)           # (Q, NB, BS, d)
+    g = g * page_sz[..., 0][:, :, None, None] + page_sz[..., 1][:, :, None, None]
+    q = queries.astype(jnp.float32)[:, None, None, :]
+    diff = g - q
+    d = jnp.sum(diff * diff, axis=-1) + slot_bias
+    return _kmin_ref(d, k)
+
+
+def scan_batched_topk_q8_ref(
+    unique_blocks: jax.Array, queries: jax.Array, blocks: jax.Array,
+    slot_bias: jax.Array, page_sz: jax.Array, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Dequant-fused batched oracle ((NB, 2) per-unique-page params)."""
+    g = blocks[unique_blocks].astype(jnp.float32)         # (NB, BS, d)
+    g = g * page_sz[:, 0][:, None, None] + page_sz[:, 1][:, None, None]
+    q = queries.astype(jnp.float32)
+    diff = g[:, None, :, :] - q[None, :, None, :]
+    d = jnp.sum(diff * diff, axis=-1) + slot_bias[:, None, :]
+    return _kmin_ref(d, k)

@@ -73,6 +73,8 @@ def build_spec(args):
             probe_chunk=args.probe_chunk,
             use_pallas_scan=None if args.scan == "oracle" else True,
             scan_schedule=None if args.scan == "oracle" else args.scan,
+            codec=args.codec,
+            rerank_factor=args.rerank_factor,
         ),
         maintenance=spfresh.MaintenanceSpec(
             jobs_per_round=jobs, policy=args.maintain_policy,
@@ -153,6 +155,19 @@ def main() -> None:
                     default="oracle",
                     help="posting-scan data path (per_query/batched = "
                          "Pallas paged kernels, interpret mode on CPU)")
+    ap.add_argument("--codec", choices=["fp32", "bf16", "int8"],
+                    default=None,
+                    help="hot-tier posting payload codec: int8 stores "
+                         "per-posting scale/zero-point and dequantizes "
+                         "inside the page scan (~4x fewer scan bytes); "
+                         "bf16 halves them; lossy codecs keep a cold "
+                         "exact fp32 tier for maintenance + rerank "
+                         "(default: the LireConfig default, fp32)")
+    ap.add_argument("--rerank-factor", type=int, default=None,
+                    help="with a lossy codec: over-fetch N*k candidates "
+                         "from the quantized scan and rerank them against "
+                         "the exact fp32 tier before the final top-k "
+                         "(1 = no rerank; default: LireConfig default)")
     args = ap.parse_args()
     args.durable = args.durable or args.snapshot
 

@@ -20,6 +20,16 @@ tail writes, PUT rewrites, GC write-backs, and block frees (a freed
 block's cleared ``block_vid`` must reach the next delta snapshot too).
 ``storage.snapshot`` serializes only dirty blocks into delta snapshots,
 making checkpoint bytes proportional to churn instead of capacity.
+
+Tiered payload (``storage.codec``): the hot tier ``blocks`` stores the
+scan payload in the codec's dtype (fp32 passthrough / bf16 / int8 with
+per-posting ``post_scale``/``post_zero``); lossy codecs additionally
+carry a cold exact-fp32 tier ``blocks_exact`` (same geometry, same dirty
+bitmap) that serves maintenance reads and the search rerank.  Every
+write path encodes into the hot tier and mirrors raw fp32 into the cold
+tier; PUT retrains the posting's scale/zero from the rows it writes,
+APPEND reuses the posting's current parameters (first-ever append
+trains them from that row).
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.storage import codec as pc
 from repro.utils.tree import field, pytree_dataclass
 
 Array = jax.Array
@@ -38,8 +49,9 @@ class BlockPool:
     # --- static geometry ---
     block_size: int = field(static=True)           # BS vectors per block
     max_blocks_per_posting: int = field(static=True)  # MB
+    codec: str = field(static=True)                # fp32 | bf16 | int8
     # --- device state ---
-    blocks: Array        # (B_cap, BS, d) payload
+    blocks: Array        # (B_cap, BS, d) hot-tier payload (codec dtype)
     block_vid: Array     # (B_cap, BS) i32 vector ids, -1 empty
     block_ver: Array     # (B_cap, BS) u8 version written with the data
     posting_blocks: Array  # (P_cap, MB) i32 block ids, -1 unused
@@ -47,6 +59,9 @@ class BlockPool:
     free_stack: Array      # (B_cap,) i32 free block ids (top at index free_top-1)
     free_top: Array        # () i32 number of free blocks
     dirty: Array           # (B_cap,) bool — block changed since last checkpoint
+    post_scale: Array      # (P_cap,) f32 per-posting quant scale (1 untrained)
+    post_zero: Array       # (P_cap,) f32 per-posting quant zero-point
+    blocks_exact: Array | None  # (B_cap, BS, d) f32 cold tier (lossy codecs)
 
     @property
     def posting_capacity(self) -> int:
@@ -73,12 +88,20 @@ def make_block_pool(
     num_postings_cap: int,
     max_blocks_per_posting: int,
     dtype=jnp.float32,
+    codec: str = "fp32",
 ) -> BlockPool:
-    """Fresh, empty pool: every block free, every posting empty."""
+    """Fresh, empty pool: every block free, every posting empty.
+
+    ``dtype`` is the *configured* vector dtype; the hot-tier payload is
+    stored at ``codec.payload_dtype(codec, dtype)`` and lossy codecs get
+    a cold exact-fp32 tier alongside.
+    """
+    pay = pc.payload_dtype(codec, dtype)
     return BlockPool(
         block_size=block_size,
         max_blocks_per_posting=max_blocks_per_posting,
-        blocks=jnp.zeros((num_blocks, block_size, dim), dtype),
+        codec=codec,
+        blocks=jnp.zeros((num_blocks, block_size, dim), pay),
         block_vid=jnp.full((num_blocks, block_size), -1, jnp.int32),
         block_ver=jnp.zeros((num_blocks, block_size), jnp.uint8),
         posting_blocks=jnp.full(
@@ -88,7 +111,19 @@ def make_block_pool(
         free_stack=jnp.arange(num_blocks, dtype=jnp.int32),
         free_top=jnp.asarray(num_blocks, jnp.int32),
         dirty=jnp.zeros((num_blocks,), bool),
+        post_scale=jnp.ones((num_postings_cap,), jnp.float32),
+        post_zero=jnp.zeros((num_postings_cap,), jnp.float32),
+        blocks_exact=(
+            jnp.zeros((num_blocks, block_size, dim), jnp.float32)
+            if pc.has_exact_tier(codec)
+            else None
+        ),
     )
+
+
+def _encode_rows(pool: BlockPool, vecs: Array, scale, zero) -> Array:
+    """fp32 rows -> hot-tier payload under (scale, zero) (broadcasting)."""
+    return pc.encode_payload(pool.codec, vecs, scale, zero, pool.blocks.dtype)
 
 
 def clear_dirty(pool: BlockPool) -> BlockPool:
@@ -169,11 +204,31 @@ def append_one(
         pool.posting_blocks.at[pid, safe_idx].set(bid.astype(jnp.int32)),
         pool.posting_blocks,
     )
+    # First-ever append trains the posting's quant params from this row;
+    # later appends reuse them (out-of-range values clip — the exact tier
+    # plus rerank bound the damage until the next PUT retrains).
+    fresh = ok & (length == 0)
+    scale0, zero0 = pc.train_scale_zero(vec[None, :], jnp.ones((1,), bool))
+    scale = jnp.where(fresh, scale0, pool.post_scale[pid])
+    zero = jnp.where(fresh, zero0, pool.post_zero[pid])
+    post_scale = jnp.where(
+        fresh, pool.post_scale.at[pid].set(scale0), pool.post_scale
+    )
+    post_zero = jnp.where(
+        fresh, pool.post_zero.at[pid].set(zero0), pool.post_zero
+    )
     blocks = jnp.where(
         ok,
-        pool.blocks.at[safe_bid, slot].set(vec.astype(pool.blocks.dtype)),
+        pool.blocks.at[safe_bid, slot].set(_encode_rows(pool, vec, scale, zero)),
         pool.blocks,
     )
+    blocks_exact = pool.blocks_exact
+    if blocks_exact is not None:
+        blocks_exact = jnp.where(
+            ok,
+            blocks_exact.at[safe_bid, slot].set(vec.astype(jnp.float32)),
+            blocks_exact,
+        )
     block_vid = jnp.where(
         ok, pool.block_vid.at[safe_bid, slot].set(vid.astype(jnp.int32)),
         pool.block_vid,
@@ -189,11 +244,14 @@ def append_one(
     return (
         pool.replace(
             blocks=blocks,
+            blocks_exact=blocks_exact,
             block_vid=block_vid,
             block_ver=block_ver,
             posting_blocks=posting_blocks,
             posting_len=posting_len,
             dirty=dirty,
+            post_scale=post_scale,
+            post_zero=post_zero,
         ),
         ok,
     )
@@ -291,9 +349,30 @@ def append_scatter(
     ok = ok_cap & (bid >= 0)
 
     tb = jnp.where(ok, bid, nb_cap)
+    # Rows landing in a previously-empty posting (global slot 0) train its
+    # quant params from their own row; later ranks of the same posting in
+    # this batch read the freshly scattered value.
+    fresh = ok & (slot_g == 0)
+    rs, rz = pc.train_scale_zero(
+        vecs[:, None, :], jnp.ones((n, 1), bool)
+    )                                                    # (n,) per-row
+    post_scale = pool.post_scale.at[
+        jnp.where(fresh, safe, p_cap)
+    ].set(rs, mode="drop")
+    post_zero = pool.post_zero.at[
+        jnp.where(fresh, safe, p_cap)
+    ].set(rz, mode="drop")
     blocks = pool.blocks.at[tb, slot].set(
-        vecs.astype(pool.blocks.dtype), mode="drop"
+        _encode_rows(
+            pool, vecs, post_scale[safe][:, None], post_zero[safe][:, None]
+        ),
+        mode="drop",
     )
+    blocks_exact = pool.blocks_exact
+    if blocks_exact is not None:
+        blocks_exact = blocks_exact.at[tb, slot].set(
+            vecs.astype(jnp.float32), mode="drop"
+        )
     block_vid = pool.block_vid.at[tb, slot].set(
         vids.astype(jnp.int32), mode="drop"
     )
@@ -307,12 +386,15 @@ def append_scatter(
     return (
         pool.replace(
             blocks=blocks,
+            blocks_exact=blocks_exact,
             block_vid=block_vid,
             block_ver=block_ver,
             posting_blocks=posting_blocks,
             posting_len=posting_len,
             free_top=pool.free_top - jnp.where(have, n_new, 0),
             dirty=dirty,
+            post_scale=post_scale,
+            post_zero=post_zero,
         ),
         ok,
     )
@@ -328,11 +410,40 @@ def gather_posting(
     """Read a whole posting into fixed-capacity buffers.
 
     Returns ``(vecs (MB*BS, d), vids (MB*BS,), vers (MB*BS,), valid (MB*BS,))``.
-    Slots past ``posting_len`` are masked invalid.
+    Slots past ``posting_len`` are masked invalid.  Lossy codecs serve
+    the cold exact tier so maintenance rewrites never accumulate
+    requantization error.
     """
     bids = pool.posting_blocks[pid]  # (MB,)
     safe = jnp.maximum(bids, 0)
-    vecs = pool.blocks[safe]         # (MB, BS, d)
+    payload = pool.blocks_exact if pool.blocks_exact is not None else pool.blocks
+    vecs = payload[safe]             # (MB, BS, d)
+    vids = pool.block_vid[safe]
+    vers = pool.block_ver[safe]
+    cap = pool.posting_capacity
+    d = pool.dim
+    vecs = vecs.reshape(cap, d)
+    vids = vids.reshape(cap)
+    vers = vers.reshape(cap)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    valid = (idx < pool.posting_len[pid]) & (vids >= 0)
+    return vecs, vids, vers, valid
+
+
+def gather_posting_hot(
+    pool: BlockPool, pid: Array
+) -> tuple[Array, Array, Array, Array]:
+    """`gather_posting`, but decoding the HOT tier (codec payload).
+
+    The oracle search path uses this so its distances match what the
+    dequant-fused Pallas scan computes — bit-for-bit the same decoded
+    values, never the exact tier (which only the rerank reads).
+    """
+    bids = pool.posting_blocks[pid]  # (MB,)
+    safe = jnp.maximum(bids, 0)
+    vecs = pc.decode_payload(
+        pool.codec, pool.blocks[safe], pool.post_scale[pid], pool.post_zero[pid]
+    )
     vids = pool.block_vid[safe]
     vers = pool.block_ver[safe]
     cap = pool.posting_capacity
@@ -351,6 +462,13 @@ def parallel_get(
     """Paper's ParallelGET: batched posting fetch, ``pids (m,)`` →
     ``(m, MB*BS, ...)`` buffers."""
     return jax.vmap(lambda p: gather_posting(pool, p))(pids)
+
+
+def parallel_get_hot(
+    pool: BlockPool, pids: Array
+) -> tuple[Array, Array, Array, Array]:
+    """Batched `gather_posting_hot` — the oracle search path's fetch."""
+    return jax.vmap(lambda p: gather_posting_hot(pool, p))(pids)
 
 
 def gather_postings(
@@ -401,7 +519,18 @@ def free_posting(pool: BlockPool, pid: Array, enable: Array) -> BlockPool:
     posting_len = jnp.where(
         enable, pool.posting_len.at[pid].set(0), pool.posting_len
     )
-    return pool.replace(posting_blocks=posting_blocks, posting_len=posting_len)
+    post_scale = jnp.where(
+        enable, pool.post_scale.at[pid].set(1.0), pool.post_scale
+    )
+    post_zero = jnp.where(
+        enable, pool.post_zero.at[pid].set(0.0), pool.post_zero
+    )
+    return pool.replace(
+        posting_blocks=posting_blocks,
+        posting_len=posting_len,
+        post_scale=post_scale,
+        post_zero=post_zero,
+    )
 
 
 def free_postings(pool: BlockPool, pids: Array, enable: Array) -> BlockPool:
@@ -434,6 +563,8 @@ def free_postings(pool: BlockPool, pids: Array, enable: Array) -> BlockPool:
     row = jnp.where(enable, safe, pool.num_postings_cap)
     posting_blocks = pool.posting_blocks.at[row].set(-1, mode="drop")
     posting_len = pool.posting_len.at[row].set(0, mode="drop")
+    post_scale = pool.post_scale.at[row].set(1.0, mode="drop")
+    post_zero = pool.post_zero.at[row].set(0.0, mode="drop")
     return pool.replace(
         free_stack=free_stack,
         free_top=pool.free_top + jnp.sum(flat_do),
@@ -441,6 +572,8 @@ def free_postings(pool: BlockPool, pids: Array, enable: Array) -> BlockPool:
         posting_blocks=posting_blocks,
         posting_len=posting_len,
         dirty=dirty,
+        post_scale=post_scale,
+        post_zero=post_zero,
     )
 
 
@@ -486,7 +619,13 @@ def put_postings(
         in_use, pool.free_stack[jnp.clip(pos, 0, nb_cap - 1)], -1
     )
 
-    vecs_b = vecs.reshape(k, mb, bs, -1)
+    # PUT retrains each posting's quant params from the rows it writes.
+    row_valid = (
+        jnp.arange(cap, dtype=jnp.int32)[None, :] < ns[:, None]
+    )                                                    # (k, cap)
+    scale, zero = pc.train_scale_zero(vecs, row_valid)   # (k,)
+    enc = _encode_rows(pool, vecs, scale[:, None, None], zero[:, None, None])
+    vecs_b = enc.reshape(k, mb, bs, -1)
     vids_b = vids.reshape(k, mb, bs)
     vers_b = vers.reshape(k, mb, bs)
     in_range = (
@@ -494,8 +633,13 @@ def put_postings(
     ) < ns[:, None, None]                                # (k, MB, BS)
     tgt = jnp.where(in_use, bids, nb_cap).reshape(-1)
     blocks = pool.blocks.at[tgt].set(
-        vecs_b.astype(pool.blocks.dtype).reshape(k * mb, bs, -1), mode="drop"
+        vecs_b.reshape(k * mb, bs, -1), mode="drop"
     )
+    blocks_exact = pool.blocks_exact
+    if blocks_exact is not None:
+        blocks_exact = blocks_exact.at[tgt].set(
+            vecs.astype(jnp.float32).reshape(k * mb, bs, -1), mode="drop"
+        )
     block_vid = pool.block_vid.at[tgt].set(
         jnp.where(in_range, vids_b, -1).reshape(k * mb, bs), mode="drop"
     )
@@ -512,16 +656,21 @@ def put_postings(
     posting_len = pool.posting_len.at[row].set(
         ns.astype(jnp.int32), mode="drop"
     )
+    post_scale = pool.post_scale.at[row].set(scale, mode="drop")
+    post_zero = pool.post_zero.at[row].set(zero, mode="drop")
     dirty = pool.dirty.at[tgt].set(True, mode="drop")
     return (
         pool.replace(
             blocks=blocks,
+            blocks_exact=blocks_exact,
             block_vid=block_vid,
             block_ver=block_ver,
             posting_blocks=posting_blocks,
             posting_len=posting_len,
             free_top=pool.free_top - jnp.sum(used),
             dirty=dirty,
+            post_scale=post_scale,
+            post_zero=post_zero,
         ),
         ok,
     )
@@ -550,7 +699,12 @@ def put_posting(
     ok = enable & have
 
     bs = pool.block_size
-    vecs = vecs.reshape(pool.max_blocks_per_posting, bs, -1)
+    row_valid = jnp.arange(cap, dtype=jnp.int32) < n
+    scale, zero = pc.train_scale_zero(vecs, row_valid)
+    enc = _encode_rows(pool, vecs, scale, zero)
+    exact = vecs.astype(jnp.float32)
+    enc = enc.reshape(pool.max_blocks_per_posting, bs, -1)
+    exact = exact.reshape(pool.max_blocks_per_posting, bs, -1)
     vids = vids.reshape(pool.max_blocks_per_posting, bs)
     vers = vers.reshape(pool.max_blocks_per_posting, bs)
 
@@ -563,12 +717,13 @@ def put_posting(
             slot_idx = jnp.arange(bs, dtype=jnp.int32)
             in_range = (i * bs + slot_idx) < n
             blocks = pool2.blocks.at[safe].set(
-                jnp.where(
-                    in_range[:, None],
-                    vecs[i].astype(pool2.blocks.dtype),
-                    pool2.blocks[safe],
-                )
+                jnp.where(in_range[:, None], enc[i], pool2.blocks[safe])
             )
+            blocks_exact = pool2.blocks_exact
+            if blocks_exact is not None:
+                blocks_exact = blocks_exact.at[safe].set(
+                    jnp.where(in_range[:, None], exact[i], blocks_exact[safe])
+                )
             block_vid = pool2.block_vid.at[safe].set(
                 jnp.where(in_range, vids[i], -1)
             )
@@ -578,6 +733,7 @@ def put_posting(
             posting_blocks = pool2.posting_blocks.at[pid, i].set(bid)
             return pool2.replace(
                 blocks=blocks,
+                blocks_exact=blocks_exact,
                 block_vid=block_vid,
                 block_ver=block_ver,
                 posting_blocks=posting_blocks,
@@ -593,7 +749,20 @@ def put_posting(
     posting_len = jnp.where(
         ok, pool.posting_len.at[pid].set(n.astype(jnp.int32)), pool.posting_len
     )
-    return pool.replace(posting_len=posting_len), ok
+    post_scale = jnp.where(
+        ok, pool.post_scale.at[pid].set(scale), pool.post_scale
+    )
+    post_zero = jnp.where(
+        ok, pool.post_zero.at[pid].set(zero), pool.post_zero
+    )
+    return (
+        pool.replace(
+            posting_len=posting_len,
+            post_scale=post_scale,
+            post_zero=post_zero,
+        ),
+        ok,
+    )
 
 
 def used_blocks(pool: BlockPool) -> Array:

@@ -1,0 +1,156 @@
+"""Posting payload codecs: pluggable hot-tier dtype for BlockPool.
+
+The pool's vector payload (``pool.blocks``) can be stored at full
+precision (``fp32``), half precision (``bf16``), or as asymmetric
+per-posting int8 (``int8``).  The codec is a *static* property of the
+pool; the quantization parameters (one scale and one zero-point per
+posting) are ordinary pytree leaves that ride through jit, snapshots,
+and delta-checkpoints like any other state.
+
+Quantization scheme (``int8``)
+------------------------------
+Per posting, over its live rows::
+
+    zero  = (min + max) / 2
+    scale = (max - min) / 254        (1.0 when the range collapses)
+    q     = clip(round((x - zero) / scale), -127, 127)  -> int8
+    x'    = q * scale + zero
+
+The symmetric code range [-127, 127] keeps the reconstruction error
+bounded by ``scale / 2`` per dimension, and degenerate postings
+(all-zero, single-vector, constant) round-trip exactly because the
+range collapses to scale=1 / zero=x.
+
+Vectors appended to an *existing* posting reuse the posting's current
+scale/zero (values outside the trained range clip); the exact fp32
+cold tier plus the rerank pass bound the damage, and the next
+split/merge rewrite re-trains the parameters from scratch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+CODECS = ("fp32", "bf16", "int8")
+
+# Quantized code range: symmetric about the zero-point so the error
+# bound is scale/2 on both sides.
+_QMAX = 127.0
+_QLEVELS = 254.0
+
+
+def payload_dtype(codec: str, vector_dtype) -> jnp.dtype:
+    """Storage dtype of ``pool.blocks`` for a codec.
+
+    ``fp32`` passes the configured vector dtype through unchanged so
+    pre-codec configs keep byte-identical pools.
+    """
+    if codec == "fp32":
+        return jnp.dtype(vector_dtype)
+    if codec == "bf16":
+        return jnp.dtype(jnp.bfloat16)
+    if codec == "int8":
+        return jnp.dtype(jnp.int8)
+    raise ValueError(f"unknown codec {codec!r} (choose from {CODECS})")
+
+
+def is_quantized(codec: str) -> bool:
+    """True when the codec needs per-posting scale/zero to decode."""
+    return codec == "int8"
+
+
+def has_exact_tier(codec: str) -> bool:
+    """True when the pool keeps a cold exact-fp32 copy alongside.
+
+    bf16 round-trips well enough for maintenance math, but the rerank
+    contract ("exact fp32 rerank") wants true fp32 distances, so both
+    lossy codecs carry the cold tier.
+    """
+    return codec in ("bf16", "int8")
+
+
+# ---------------------------------------------------------------------------
+# jnp (traced) helpers
+# ---------------------------------------------------------------------------
+
+
+def train_scale_zero(vecs, valid):
+    """Per-posting scale/zero from the valid rows of ``vecs``.
+
+    vecs:  (..., n, d) float
+    valid: (..., n) bool
+    returns (scale, zero), each (...,) float32.  Postings with no valid
+    rows (or a collapsed range) get scale=1, zero=0 / midpoint.
+    """
+    v = vecs.astype(jnp.float32)
+    m = valid[..., None]
+    hi = jnp.max(jnp.where(m, v, -jnp.inf), axis=(-2, -1))
+    lo = jnp.min(jnp.where(m, v, jnp.inf), axis=(-2, -1))
+    any_valid = jnp.any(valid, axis=-1)
+    hi = jnp.where(any_valid, hi, 0.0)
+    lo = jnp.where(any_valid, lo, 0.0)
+    zero = (hi + lo) * 0.5
+    rng = hi - lo
+    scale = jnp.where(rng > 0, rng / _QLEVELS, 1.0).astype(jnp.float32)
+    return scale, zero.astype(jnp.float32)
+
+
+def encode(vecs, scale, zero):
+    """fp32 rows -> int8 codes under a posting's (scale, zero).
+
+    ``scale``/``zero`` broadcast against ``vecs[..., :-1]`` — pass
+    scalars for one posting or ``scale[..., None, None]``-shaped arrays
+    for batched rows.
+    """
+    q = jnp.round((vecs.astype(jnp.float32) - zero) / scale)
+    return jnp.clip(q, -_QMAX, _QMAX).astype(jnp.int8)
+
+
+def decode(codes, scale, zero):
+    """int8 codes -> fp32 under (scale, zero); broadcasting as encode."""
+    return codes.astype(jnp.float32) * scale + zero
+
+
+def encode_payload(codec: str, vecs, scale, zero, out_dtype):
+    """Encode fp32 rows into the hot-tier payload dtype for ``codec``.
+
+    For fp32/bf16 this is a plain astype (scale/zero unused); for int8
+    it quantizes under the supplied per-posting parameters.
+    """
+    if codec == "int8":
+        return encode(vecs, scale, zero)
+    return vecs.astype(out_dtype)
+
+
+def decode_payload(codec: str, payload, scale, zero):
+    """Hot-tier payload -> fp32 rows (inverse of encode_payload)."""
+    if codec == "int8":
+        return decode(payload, scale, zero)
+    return payload.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# numpy helpers (host-side build path)
+# ---------------------------------------------------------------------------
+
+
+def np_train_scale_zero(rows: np.ndarray) -> tuple[np.float32, np.float32]:
+    """(scale, zero) for one posting's rows (n, d) on host."""
+    if rows.size == 0:
+        return np.float32(1.0), np.float32(0.0)
+    hi = float(rows.max())
+    lo = float(rows.min())
+    zero = (hi + lo) * 0.5
+    rng = hi - lo
+    scale = rng / _QLEVELS if rng > 0 else 1.0
+    return np.float32(scale), np.float32(zero)
+
+
+def np_encode(rows: np.ndarray, scale, zero) -> np.ndarray:
+    q = np.round((rows.astype(np.float32) - zero) / scale)
+    return np.clip(q, -_QMAX, _QMAX).astype(np.int8)
+
+
+def np_decode(codes: np.ndarray, scale, zero) -> np.ndarray:
+    return codes.astype(np.float32) * scale + zero

@@ -156,6 +156,11 @@ REPLAY_CRITICAL_FIELDS = (
     # Job SELECTION shapes which postings every logged maintenance round
     # touches, so replaying under a different policy/weighting diverges.
     "maintain_policy", "maintain_alpha", "maintain_beta",
+    # The payload codec changes the hot-tier dtype/leaf structure and the
+    # rerank factor changes which candidates a logged search would have
+    # returned; both are stamped by name so pre-codec snapshots (which
+    # never stamped them) still pass.
+    "codec", "rerank_factor",
 )
 
 

@@ -110,19 +110,39 @@ def _telemetry_leaf_indices(template: Any) -> list[int]:
     return out
 
 
-def _block_leaf_indices(template: Any) -> dict[str, int] | None:
-    """Leaf indices of the per-block pool arrays (``pool.blocks`` /
-    ``block_vid`` / ``block_ver`` / ``dirty``) — the leaves a delta
-    snapshot stores at block granularity instead of in full."""
-    want = ("blocks", "block_vid", "block_ver", "dirty")
+def _codec_leaf_indices(template: Any) -> dict[str, int]:
+    """Leaf indices of the pool's per-posting codec params
+    (``post_scale`` / ``post_zero``) — reconstructed for snapshots
+    written before the payload codec existed.  ``blocks_exact`` is NOT
+    here: a pre-codec snapshot can only be opened under the fp32 codec
+    (replay-critical drift check), whose pool has no exact-tier leaf."""
     out: dict[str, int] = {}
     flat, _ = jax.tree_util.tree_flatten_with_path(template)
     for i, (path, _leaf) in enumerate(flat):
         names = [k.name for k in path
                  if isinstance(k, jax.tree_util.GetAttrKey)]
-        if len(names) >= 2 and names[-2] == "pool" and names[-1] in want:
+        if len(names) >= 2 and names[-2] == "pool" \
+                and names[-1] in ("post_scale", "post_zero"):
             out[names[-1]] = i
-    return out if len(out) == len(want) else None
+    return out
+
+
+def _block_leaf_indices(template: Any) -> dict[str, int] | None:
+    """Leaf indices of the per-block pool arrays (``pool.blocks`` /
+    ``block_vid`` / ``block_ver`` / ``dirty``, plus the optional cold
+    exact tier ``blocks_exact`` when the codec keeps one) — the leaves a
+    delta snapshot stores at block granularity instead of in full."""
+    want = ("blocks", "block_vid", "block_ver", "dirty")
+    opt = ("blocks_exact",)
+    out: dict[str, int] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    for i, (path, _leaf) in enumerate(flat):
+        names = [k.name for k in path
+                 if isinstance(k, jax.tree_util.GetAttrKey)]
+        if len(names) >= 2 and names[-2] == "pool" \
+                and names[-1] in want + opt:
+            out[names[-1]] = i
+    return out if all(n in out for n in want) else None
 
 
 def _assemble(template: T, leaves_np: list[np.ndarray]) -> T:
@@ -200,33 +220,59 @@ def read_manifest(path: str) -> dict:
 
 def _load_leaves_npz(path: str, template: Any, n_leaves: int) -> list[np.ndarray]:
     """Positional ``leaf_i`` arrays with the older-format migrations: a
-    snapshot written before the pool grew its ``dirty`` leaf and/or the
-    state grew its ``telemetry`` sub-tree is short those leaves; each
-    missing leaf is reconstructed as zeros (all-clean bitmap, zeroed
-    counters) from the template at its flatten position.  Valid deficits:
-    1 (dirty), 3 (telemetry), or 4 (dirty + telemetry)."""
+    snapshot written before the pool grew its ``dirty`` leaf, the state
+    grew its ``telemetry`` sub-tree, and/or the pool grew its codec
+    params (``post_scale``/``post_zero``) is short those leaves; each
+    missing leaf is reconstructed from the template at its flatten
+    position (all-clean bitmap, zeroed counters, identity codec —
+    scale 1, zero 0).  The leaf groups landed in a fixed order
+    (dirty → telemetry → codec), so every historical generation maps to
+    a distinct deficit: 1 (dirty), 2 (codec), 3 (telemetry),
+    4 (dirty+tel), 5 (tel+codec), or 6 (dirty+tel+codec)."""
     data = np.load(path)
+    return _migrate_leaves(
+        [data[f"leaf_{i}"] for i in range(n_leaves)], template
+    )
+
+
+def _migrate_leaves(raw: list[np.ndarray], template: Any) -> list[np.ndarray]:
+    """Insert reconstructed leaves into a positionally-loaded older-format
+    leaf list (see ``_load_leaves_npz``).  Split out so a delta CHAIN can
+    fold in its own (old) leaf coordinates first and migrate once at the
+    end — the stamped per-unit leaf indices predate the new leaves."""
     tmpl_leaves = jax.tree_util.tree_leaves(template)
+    n_leaves = len(raw)
     if n_leaves == len(tmpl_leaves):
-        return [data[f"leaf_{i}"] for i in range(n_leaves)]
+        return raw
     dirty_at = _dirty_leaf_index(template)
     tel_at = _telemetry_leaf_indices(template)
+    codec_at = _codec_leaf_indices(template)
     missing = len(tmpl_leaves) - n_leaves
-    reconstruct: set[int] = set()
-    if missing == 1 and dirty_at is not None:
-        reconstruct = {dirty_at}
-    elif missing == len(tel_at) and tel_at:
-        reconstruct = set(tel_at)
-    elif (dirty_at is not None and tel_at
-          and missing == len(tel_at) + 1):
-        reconstruct = {dirty_at, *tel_at}
+    # index -> fill value factory for each reconstructible leaf group
+    dirty_g = {dirty_at: np.zeros_like} if dirty_at is not None else None
+    tel_g = {i: np.zeros_like for i in tel_at} if tel_at else None
+    codec_g = (
+        {codec_at["post_scale"]: np.ones_like,
+         codec_at["post_zero"]: np.zeros_like}
+        if len(codec_at) == 2 else None
+    )
+    reconstruct: dict[int, Any] = {}
+    for groups in (
+        (dirty_g,), (codec_g,), (tel_g,), (dirty_g, tel_g),
+        (tel_g, codec_g), (dirty_g, tel_g, codec_g),
+    ):
+        if all(g is not None for g in groups) \
+                and missing == sum(len(g) for g in groups):
+            for g in groups:
+                reconstruct.update(g)
+            break
     if reconstruct:
         out, src = [], 0
         for i, tmpl in enumerate(tmpl_leaves):
             if i in reconstruct:
-                out.append(np.zeros_like(np.asarray(tmpl)))
+                out.append(reconstruct[i](np.asarray(tmpl)))
             else:
-                out.append(data[f"leaf_{src}"])
+                out.append(raw[src])
                 src += 1
         return out
     raise ValueError(
@@ -456,7 +502,7 @@ class SnapshotStore:
         dirty = np.asarray(leaves[blk["dirty"]])
         blk_np = {
             name: np.asarray(leaves[blk[name]])
-            for name in ("blocks", "block_vid", "block_ver")
+            for name in blk if name != "dirty"
         }
         dense_np = {
             j: np.asarray(leaf) for j, leaf in enumerate(leaves)
@@ -502,7 +548,9 @@ class SnapshotStore:
         for s in range(n_shards):
             data = np.load(os.path.join(self.path, unit, f"shard_{s:03d}.npz"))
             idx = data["dirty_idx"]
-            for name in ("blocks", "block_vid", "block_ver"):
+            for name in blk:
+                if name == "dirty":
+                    continue
                 tgt = leaves[blk[name]]
                 if n_shards > 1:
                     tgt[s][idx] = data[f"blk_{name}"]
@@ -529,13 +577,16 @@ class SnapshotStore:
             raise FileNotFoundError(f"{self.path}: no snapshot to load")
         chain = self._chain(head)
         base_m = self._unit_manifest(chain[0])
-        leaves = _load_leaves_npz(
-            os.path.join(self.path, chain[0], _LEAVES), template,
-            base_m["n_leaves"],
-        )
-        leaves = [np.array(x) for x in leaves]  # writable fold buffers
+        data = np.load(os.path.join(self.path, chain[0], _LEAVES))
+        # fold the chain in ITS OWN leaf coordinates (every unit of a
+        # chain has the same n_leaves — save_delta enforces it), THEN
+        # migrate: each delta's stamped block/dense leaf indices predate
+        # any leaves the template has since grown.
+        leaves = [np.array(data[f"leaf_{i}"])
+                  for i in range(base_m["n_leaves"])]
         for unit in chain[1:]:
             self._apply_delta(leaves, unit, self._unit_manifest(unit))
+        leaves = _migrate_leaves(leaves, template)
         dirty_at = _dirty_leaf_index(template)
         if dirty_at is not None:
             # post-restore the state is by definition in sync with the

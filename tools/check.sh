@@ -27,6 +27,9 @@ python -m pytest -q tests/test_maintenance_policy.py
 echo "== scenario gauntlet (tiny-N cells) =="
 python -m pytest -q tests/test_scenario_gauntlet.py
 
+echo "== posting codec (quant round-trip, dequant kernels, recall floor) =="
+python -m pytest -q tests/test_codec.py
+
 # The parity suites above carry ``pytestmark = pytest.mark.gate``; the
 # tier-1 step excludes them BY MARKER, so adding a gated suite is one
 # marker + one explicit step — the old hand-maintained --ignore list
