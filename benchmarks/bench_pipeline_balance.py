@@ -21,6 +21,7 @@ from repro.core.index import SPFreshIndex
 from repro.data.vectors import make_shifting_stream, make_sift_like
 from repro.serve.engine import EngineConfig, ServeEngine
 from repro.serve.policy import BacklogPolicy, RatioPolicy
+from repro.serve.queue import INSERT, RequestQueue, Ticket, default_buckets
 
 
 def _drive(engine: ServeEngine, inserts, queries, n_base: int,
@@ -38,6 +39,23 @@ def _drive(engine: ServeEngine, inserts, queries, n_base: int,
         engine.pump()
     engine.pump()
     return time.perf_counter() - t0
+
+
+def _bench_pop_batch(reuse: bool, rounds: int = 3000) -> float:
+    """Host-side batch-formation cost: submit a 200-row insert request
+    and pop it as one padded 256-bucket batch.  ``reuse=False`` is the
+    old concatenate+pad path (one fresh allocation pair per batch);
+    ``reuse=True`` copies into cached per-(op, bucket) staging buffers."""
+    q = RequestQueue(default_buckets(8, 256), reuse_staging=reuse)
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(200, 16)).astype(np.float32)
+    vids = np.arange(200, dtype=np.int32)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        t = Ticket(INSERT, 200, ())
+        q.submit(t, {"vecs": vecs, "vids": vids})
+        q.pop_batch()
+    return (time.perf_counter() - t0) / rounds
 
 
 def run(quick: bool = True) -> list[str]:
@@ -77,6 +95,18 @@ def run(quick: bool = True) -> list[str]:
             f"maint_steps={maint['steps']};"
             f"backlog={rep['backlog']};splits={idx.stats()['n_splits']}"
         )
+    # per-batch host allocation: concat+pad (pre-staging) vs reused
+    # per-(op, bucket) staging buffers
+    rounds = 1000 if quick else 5000
+    t_old = _bench_pop_batch(reuse=False, rounds=rounds)
+    t_new = _bench_pop_batch(reuse=True, rounds=rounds)
+    out.append(
+        f"pipeline/pop_batch_concat_pad,{t_old * 1e6:.2f},staging=off"
+    )
+    out.append(
+        f"pipeline/pop_batch_staging,{t_new * 1e6:.2f},"
+        f"speedup={t_old / t_new:.2f}x"
+    )
     return out
 
 

@@ -26,6 +26,7 @@ BENCHES = [
     ("stress", "benchmarks.bench_stress"),               # Fig. 9 (workload C)
     ("reassign_range", "benchmarks.bench_reassign_range"),  # Fig. 11
     ("pipeline", "benchmarks.bench_pipeline_balance"),   # Fig. 12
+    ("serve_async", "benchmarks.bench_serve_async"),     # open-loop tails
     ("rebuild_cost", "benchmarks.bench_rebuild_cost"),   # Table 1
     ("maintenance", "benchmarks.bench_maintenance"),     # batched rounds
     ("recovery", "benchmarks.bench_recovery"),           # §4.4 durability
@@ -46,12 +47,12 @@ def main() -> None:
                     help="write a machine-readable report to PATH and exit")
     ap.add_argument("--report",
                     choices=["auto", "search", "maintenance", "recovery",
-                             "scenarios"],
+                             "scenarios", "serve"],
                     default="auto",
                     help="which --json report to write; 'auto' picks "
                          "maintenance for paths containing 'update'/'maint', "
                          "recovery for 'recover', scenarios for "
-                         "'scenario', else search")
+                         "'scenario', serve for 'serve', else search")
     args = ap.parse_args()
 
     if args.json:
@@ -66,6 +67,8 @@ def main() -> None:
                 which = "recovery"
             elif "scenario" in base:
                 which = "scenarios"
+            elif "serve" in base:
+                which = "serve"
             else:
                 which = "search"
         if which == "scenarios":
@@ -78,6 +81,19 @@ def main() -> None:
             print(f"# wrote {args.json}: shift drift_minus_size="
                   f"{shift['drift_minus_size']:+.3f} at "
                   f"jobs_per_round={shift['jobs_per_round']}")
+            return
+        if which == "serve":
+            from benchmarks.bench_serve_async import run_json
+
+            report = run_json(quick=not args.full)
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            s = report["summary"]
+            print(f"# wrote {args.json}: "
+                  f"search_p99 sync={s['sync_search_p99_ms']:.1f}ms "
+                  f"async={s['async_search_p99_ms']:.1f}ms "
+                  f"({s['search_p99_reduction_x']:.2f}x) "
+                  f"overlap_frac={s['async_overlap_frac']:.2f}")
             return
         if which == "recovery":
             from benchmarks.bench_recovery import run_json

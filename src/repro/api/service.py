@@ -143,10 +143,15 @@ class Service:
 
     def maintain(self, jobs: int | None = None) -> int:
         """One explicit Local-Rebuilder round (background slots also run
-        under the engine's MaintenancePolicy)."""
+        under the engine's MaintenancePolicy).  Runs under the engine's
+        exclusive lock so it serializes against the async pump thread's
+        dispatches (one WAL append + dispatch order)."""
         self.flush()
-        jobs_done = self.backend.maintain(jobs or self.engine.policy.budget)
-        self._wal_ack()
+        with self.engine.exclusive():
+            jobs_done = self.backend.maintain(
+                jobs or self.engine.policy.budget
+            )
+            self._wal_ack_locked()
         return jobs_done
 
     def drain(self) -> int:
@@ -195,15 +200,22 @@ class Service:
                 and (dur.compact_every == 0
                      or store.chain_len() < dur.compact_every)
             )
-        self.backend.checkpoint(
-            dur.resolved_snapshot_dir(), delta=bool(delta)
-        )
+        with self.engine.exclusive():
+            self.backend.checkpoint(
+                dur.resolved_snapshot_dir(), delta=bool(delta)
+            )
         self._updates_since_ckpt = 0
         self._updates_since_delta = 0
 
     def _wal_ack(self) -> None:
         """Ack point under group commit: updates return only after their
         WAL records (and everything before them) are fsync'd."""
+        if self.durable:
+            with self.engine.exclusive():
+                self.backend.wal_sync()
+
+    def _wal_ack_locked(self) -> None:
+        """`_wal_ack` for callers already inside ``engine.exclusive()``."""
         if self.durable:
             self.backend.wal_sync()
 
@@ -226,6 +238,9 @@ class Service:
         if self._closed:
             return
         self.flush()
+        # stop the pump thread BEFORE the final checkpoint/close so no
+        # dispatch races the snapshot or lands on a closed WAL
+        self.engine.shutdown()
         if self.durable and self.spec.durability.checkpoint_on_close:
             self.checkpoint()
         self.backend.close()

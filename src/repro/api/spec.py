@@ -73,6 +73,15 @@ class ServeSpec:
     fg_bg_ratio: int = 2
     backlog_threshold: int = 1
     max_insert_retries: int = 4
+    # --- async serving (background pump thread; see serve/engine.py) ---
+    # async_serve=True: the engine owns a dedicated pump thread; callers
+    # only enqueue and block on per-ticket events, maintenance runs in
+    # queue-idle gaps, and durable update tickets ack after the WAL
+    # fsync.  max_wait_ms is the batch-formation window: an unfenced
+    # head run is held up to this long so micro-batches fill toward the
+    # top bucket instead of dispatching immediately (async mode only).
+    async_serve: bool = False
+    max_wait_ms: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,12 +233,15 @@ class ServiceSpec:
             ),
             backlog_threshold=sv.backlog_threshold,
             max_insert_retries=sv.max_insert_retries,
+            async_serve=sv.async_serve,
+            max_wait_ms=sv.max_wait_ms,
         )
 
     def validate(self) -> None:
         self.lire_config()  # folds + validates
         assert self.shards.n_shards >= 1
         assert self.serve.policy in ("ratio", "backlog"), self.serve.policy
+        assert self.serve.max_wait_ms >= 0
         assert self.durability.checkpoint_every >= 0
         dur = self.durability
         assert dur.delta_every >= 0 and dur.compact_every >= 0

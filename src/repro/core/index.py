@@ -413,8 +413,13 @@ class SPFreshIndex:
         self, queries: np.ndarray, k: int, *, nprobe: int | None = None,
         probe_chunk: int = 0, use_pallas_scan: bool | None = None,
         scan_schedule: str | None = None, with_access: bool = False,
-        qvalid: np.ndarray | None = None,
+        qvalid: np.ndarray | None = None, as_jax: bool = False,
     ) -> tuple[np.ndarray, ...]:
+        """One fixed-shape search dispatch.  ``as_jax=True`` returns the
+        raw device arrays without forcing a host readback — the dispatch
+        is already in flight (JAX async dispatch), so the caller can
+        overlap device work with other host/device activity and convert
+        with ``np.asarray`` at scatter time."""
         step = search_step(
             k, nprobe, probe_chunk, use_pallas_scan, scan_schedule,
             with_access,
@@ -426,6 +431,8 @@ class SPFreshIndex:
                 self.state, jnp.asarray(queries),
                 qvalid=jnp.asarray(qvalid, bool),
             )
+        if as_jax:
+            return tuple(out)
         return tuple(np.asarray(x) for x in out)
 
     def insert_padded(

@@ -506,6 +506,16 @@ class ShardedIndex(DurableBackend):
         # access telemetry (see ARCHITECTURE.md — the drift policy on
         # shards ranks by the update/drift leaves, which the jitted steps
         # bump deterministically; access_count stays zero).
+        return self.search_begin(queries, k, nprobe, valid)()
+
+    def search_begin(
+        self, queries: np.ndarray, k: int, nprobe: int | None = None,
+        valid: np.ndarray | None = None,
+    ):
+        """Issue ONE shard_map'd search dispatch and return a zero-arg
+        ``finalize`` materializing ``(dists, ids)``; the dispatch is in
+        flight when this returns, so the engine's pump thread can defer
+        the host readback to scatter time (device overlap)."""
         key = (k, nprobe)
         step = self._search_steps.get(key)
         if step is None:
@@ -517,7 +527,10 @@ class ShardedIndex(DurableBackend):
             )
             self._search_steps[key] = step
         d, v = step(self.stacked, jnp.asarray(queries), self.shard_alive)
-        return np.asarray(d), np.asarray(v)
+
+        def finalize():
+            return np.asarray(d), np.asarray(v)
+        return finalize
 
     def insert(
         self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray,

@@ -31,6 +31,11 @@ def _print_report(service) -> None:
           f"maint_rounds={m['rounds']} maint_jobs={m['steps']} "
           f"maint_jps={m['steps_per_s']:.1f} "
           f"insert_stall={rep['insert_stall_s'] * 1e3:.0f}ms")
+    if rep.get("async"):
+        print(f"async: overlap_frac={m.get('overlap_frac', 0.0):.2f} "
+              f"idle_slots={m.get('idle_slots', 0)} "
+              f"forced={m.get('forced', 0)} "
+              f"window_waits={q.get('window_waits', 0)}")
     print(f"queue: batches={q['batches']} rows={q['rows']} "
           f"pad_waste={q['padding_waste_frac']:.3f} "
           f"depth_avg={q['depth_rows_avg']:.0f} depth_max={q['depth_rows_max']}")
@@ -68,6 +73,7 @@ def build_spec(args):
         serve=spfresh.ServeSpec(
             search_k=10, nprobe=args.nprobe, policy=args.policy,
             fg_bg_ratio=args.ratio, backlog_threshold=args.threshold,
+            async_serve=args.async_serve, max_wait_ms=args.max_wait_ms,
         ),
         scan=spfresh.ScanSpec(
             probe_chunk=args.probe_chunk,
@@ -128,6 +134,17 @@ def main() -> None:
                     help="on --recover, drop insert rows whose vids were "
                          "later deleted before replaying (faster replay; "
                          "local backend)")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="async serving: a dedicated background pump "
+                         "thread owns all dispatches; callers enqueue "
+                         "and block on per-ticket events, maintenance "
+                         "runs in queue-idle gaps, durable updates ack "
+                         "after the WAL fsync")
+    ap.add_argument("--max-wait-ms", type=float, default=0.0,
+                    help="batch-formation window: hold an unfenced head "
+                         "run up to this long so micro-batches fill "
+                         "toward the top bucket (async mode only; "
+                         "0 = dispatch immediately)")
     ap.add_argument("--policy", choices=["ratio", "backlog"], default="ratio")
     ap.add_argument("--ratio", type=int, default=2,
                     help="fg update batches per bg slot (0 disables)")

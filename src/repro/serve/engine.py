@@ -10,19 +10,40 @@ shard_map'd steps of `distributed.sharded_index.ShardedIndex` for an
 N-shard mesh.  The same engine serves both: backends implement the
 small protocol below.
 
+Two serving modes share the pipeline:
+
+* **Cooperative (default)** — callers pump the queue themselves
+  (``ticket.result()`` → ``_pump_until``); simple and deterministic,
+  but every maintenance slot and every other caller's batch sits on
+  each request's critical path.
+* **Async (``EngineConfig.async_serve``)** — a dedicated background
+  pump thread owns ALL backend dispatches; callers only enqueue and
+  block on a per-ticket event.  The pump exploits JAX async dispatch
+  (search readbacks are deferred so the device overlaps the next
+  batch's work), schedules maintenance slots in queue-idle gaps with a
+  backlog-pressure override, and acks durable update tickets only
+  after the covering WAL fsync.  WAL appends and state-mutating
+  dispatches stay in ONE serialized order on the pump thread, so
+  crash replay is exactly as bit-deterministic as in sync mode.
+
 Background maintenance (the Local Rebuilder) is scheduled by a
 pluggable :class:`~repro.serve.policy.MaintenancePolicy` — the paper's
 2:1 feed-forward pipeline (Fig. 12) is ``RatioPolicy(2)``; a reactive
 ``BacklogPolicy`` fires only when oversized postings actually exist.
 
-Metrics: per-op latency percentiles, queue depth, padding waste, and
-maintenance throughput — everything Fig. 7/9/12 plot, per policy.
+Metrics: per-op latency percentiles (bounded reservoir), queue depth,
+padding waste, and maintenance throughput/overlap — everything
+Fig. 7/9/12 plot, per policy.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import logging
+import threading
 import time
-from typing import Protocol
+from collections import deque
+from typing import Callable, Protocol
 
 import numpy as np
 
@@ -32,6 +53,8 @@ from repro.storage.durability import DurableBackend
 from repro.serve.queue import (
     DELETE, INSERT, SEARCH, MicroBatch, RequestQueue, Ticket, default_buckets,
 )
+
+log = logging.getLogger("repro.serve")
 
 
 # ---------------------------------------------------------------------------
@@ -48,6 +71,10 @@ class IndexBackend(Protocol):
     def search(self, queries: np.ndarray, k: int, nprobe: int | None,
                valid: np.ndarray | None = None,
                ) -> tuple[np.ndarray, np.ndarray]: ...
+
+    def search_begin(self, queries: np.ndarray, k: int, nprobe: int | None,
+                     valid: np.ndarray | None = None,
+                     ) -> Callable[[], tuple[np.ndarray, np.ndarray]]: ...
 
     def insert(self, vecs: np.ndarray, vids: np.ndarray, valid: np.ndarray
                ) -> tuple[np.ndarray, np.ndarray]: ...
@@ -118,20 +145,38 @@ class LocalBackend(DurableBackend):
         )
 
     def search(self, queries, k, nprobe, valid=None):
+        return self.search_begin(queries, k, nprobe, valid)()
+
+    def search_begin(self, queries, k, nprobe, valid=None):
+        """Issue ONE search dispatch and return a zero-arg ``finalize``
+        that materializes ``(dists, ids)`` on the host.  The dispatch is
+        in flight the moment this returns (JAX async dispatch) — the
+        engine's pump thread defers ``finalize`` to scatter time so the
+        device overlaps it with the next batch's work.  Access telemetry
+        is folded into ``_pending_access`` at finalize time, always
+        before the next maintenance dispatch drains it."""
         if not self.track_access:
-            return self.index.search_padded(
+            out = self.index.search_padded(
                 queries, k, nprobe=nprobe, probe_chunk=self.probe_chunk,
                 use_pallas_scan=self.use_pallas_scan,
-                scan_schedule=self.scan_schedule,
+                scan_schedule=self.scan_schedule, as_jax=True,
             )
-        d, v, hist = self.index.search_padded(
+
+            def finalize():
+                return np.asarray(out[0]), np.asarray(out[1])
+            return finalize
+        out = self.index.search_padded(
             queries, k, nprobe=nprobe, probe_chunk=self.probe_chunk,
             use_pallas_scan=self.use_pallas_scan,
             scan_schedule=self.scan_schedule,
-            with_access=True, qvalid=valid,
+            with_access=True, qvalid=valid, as_jax=True,
         )
-        self._pending_access += hist
-        return d, v
+
+        def finalize():
+            d, v, hist = (np.asarray(x) for x in out)
+            self._pending_access += hist
+            return d, v
+        return finalize
 
     def _take_access(self) -> np.ndarray:
         """Drain the pending probe counts for a maintenance dispatch.
@@ -255,6 +300,16 @@ class EngineConfig:
     backlog_threshold: int = 1   # BacklogPolicy firing threshold
     # --- insert backpressure ---
     max_insert_retries: int = 4
+    # --- async serving (background pump thread) ---
+    async_serve: bool = False
+    max_wait_ms: float = 0.0     # batch-formation window (async queue)
+    max_inflight: int = 2        # deferred search readbacks in flight
+    # Deferred background slots tolerated before one runs inline even
+    # under load — keeps the steady-state slot rate equal to sync mode's
+    # when the queue never goes idle.
+    maint_pressure: int = 8
+    ack_batch: int = 32          # unacked update tickets per forced fsync
+    lat_reservoir: int = 4096    # bounded latency sample size per op
 
     def buckets(self) -> tuple[int, ...]:
         return default_buckets(self.min_bucket, self.max_batch)
@@ -265,41 +320,83 @@ class EngineConfig:
         return RatioPolicy(self.fg_bg_ratio, self.maintain_budget)
 
 
+class _LatReservoir:
+    """Uniform bounded sample of a latency stream (Vitter's algorithm R).
+    A long-running service observes unbounded tickets; percentiles only
+    need a uniform sample, so memory stays O(cap) forever."""
+
+    __slots__ = ("cap", "n", "_buf", "_rng")
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        self.cap = int(cap)
+        self.n = 0
+        self._buf: list[float] = []
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        if len(self._buf) < self.cap:
+            self._buf.append(x)
+        else:
+            j = int(self._rng.integers(0, self.n))
+            if j < self.cap:
+                self._buf[j] = x
+
+    def values(self) -> list[float]:
+        return self._buf
+
+    def __len__(self) -> int:
+        return self.n
+
+
 class ServeMetrics:
     """Aggregated pipeline observability (read via ``ServeEngine.report``)."""
 
-    def __init__(self):
-        self.lat: dict[str, list[float]] = {SEARCH: [], INSERT: [], DELETE: []}
+    def __init__(self, reservoir: int = 4096):
+        self.lat: dict[str, _LatReservoir] = {
+            op: _LatReservoir(reservoir, seed=i)
+            for i, op in enumerate((SEARCH, INSERT, DELETE))
+        }
         self.maint_slots = 0
         self.maint_rounds = 0
         self.maint_steps = 0
         self.maint_time_s = 0.0
+        # async-mode split: slots run in queue-idle gaps (overlapped with
+        # nothing on the serve path) vs deferred/forced under pressure
+        self.maint_idle_slots = 0
+        self.maint_idle_time_s = 0.0
+        self.maint_deferred = 0
+        self.maint_forced = 0
         self.insert_retries = 0
         self.insert_stall_s = 0.0
         self.insert_dropped = 0
 
     def note_ticket(self, ticket: Ticket) -> None:
         if ticket.latency_s is not None:
-            self.lat[ticket.op].append(ticket.latency_s)
+            self.lat[ticket.op].add(ticket.latency_s)
 
-    def note_maintenance(self, steps: int, dt: float, rounds: int = 1) -> None:
+    def note_maintenance(self, steps: int, dt: float, rounds: int = 1,
+                         idle: bool = False) -> None:
         self.maint_slots += 1
         self.maint_rounds += rounds
         self.maint_steps += steps
         self.maint_time_s += dt
+        if idle:
+            self.maint_idle_slots += 1
+            self.maint_idle_time_s += dt
 
     def percentiles(self, op: str) -> dict:
-        lat = self.lat.get(op, [])
-        if not lat:
+        res = self.lat.get(op)
+        if res is None or not res.values():
             return {}
-        arr = np.asarray(lat) * 1e3
+        arr = np.asarray(res.values()) * 1e3
         return {
             "p50_ms": float(np.percentile(arr, 50)),
             "p90_ms": float(np.percentile(arr, 90)),
             "p99_ms": float(np.percentile(arr, 99)),
             "p999_ms": float(np.percentile(arr, 99.9)),
             "mean_ms": float(arr.mean()),
-            "n": len(arr),
+            "n": res.n,
         }
 
 
@@ -307,10 +404,22 @@ class ServeEngine:
     """Batched async serving pipeline over a local or sharded index.
 
     Async API: ``submit_search`` / ``submit_insert`` / ``submit_delete``
-    return a :class:`Ticket`; ``pump()`` processes queued micro-batches;
-    ``ticket.result()`` pumps until that request completes.  The
-    synchronous ``search`` / ``insert`` / ``delete`` methods are
-    submit-then-pump conveniences (and the pre-pipeline API).
+    return a :class:`Ticket`; ``ticket.result()`` blocks until that
+    request completes.  In cooperative mode (default) the caller thread
+    pumps the queue itself; with ``EngineConfig.async_serve`` a
+    background pump thread owns all dispatches and ``pump()`` becomes a
+    flush barrier.  The synchronous ``search`` / ``insert`` / ``delete``
+    methods are submit-then-wait conveniences (and the pre-pipeline API).
+
+    Threading invariants (async mode):
+
+    * ONLY the pump thread calls into the backend for serving work —
+      WAL appends and state-mutating dispatches form one serialized
+      order, so replay determinism is identical to sync mode.
+    * External backend work (maintain/checkpoint/drain from the caller
+      thread) must run under ``exclusive()``.
+    * Durable update tickets are signaled only after the covering WAL
+      fsync (group-commit ack); search tickets signal at readback.
     """
 
     def __init__(
@@ -329,13 +438,126 @@ class ServeEngine:
             )
         self.backend = backend
         self.policy = policy or self.cfg.make_policy()
-        self.queue = RequestQueue(self.cfg.buckets())
-        self.metrics = ServeMetrics()
+        # the batch-formation window only makes sense with a dedicated
+        # consumer: in cooperative mode it would stall the caller itself
+        self.queue = RequestQueue(
+            self.cfg.buckets(),
+            max_wait_ms=self.cfg.max_wait_ms if self.cfg.async_serve else 0.0,
+        )
+        self.metrics = ServeMetrics(self.cfg.lat_reservoir)
+        # --- async pump state (all mutated under _work on the pump) ---
+        self._work = threading.RLock()   # serializes WAL append + dispatch
+        self._inflight: deque[tuple[MicroBatch, Callable]] = deque()
+        self._unacked: list[Ticket] = []
+        self._maint_due = 0
+        self._busy = False               # pump holds a popped batch
+        self._stop = threading.Event()
+        self._pump_error: BaseException | None = None
+        self._pump_thread: threading.Thread | None = None
+        if self.cfg.async_serve:
+            self.start()
 
     @property
     def index(self) -> SPFreshIndex | None:
         """The underlying single-host index (None for sharded backends)."""
         return getattr(self.backend, "index", None)
+
+    # ------------------------- pump thread lifecycle --------------------
+    @property
+    def is_async(self) -> bool:
+        return self._pump_thread is not None
+
+    def start(self) -> None:
+        """Start the background pump thread (idempotent)."""
+        if self._pump_thread is not None:
+            return
+        self._stop.clear()
+        self._pump_error = None
+        t = threading.Thread(
+            target=self._pump_loop, name="spfresh-pump", daemon=True
+        )
+        self._pump_thread = t
+        t.start()
+
+    def shutdown(self, timeout: float = 60.0) -> None:
+        """Stop the pump thread.  Queued batches, in-flight readbacks and
+        unacked tickets are drained first, so no waiter is stranded."""
+        t = self._pump_thread
+        if t is None:
+            return
+        self._stop.set()
+        self.queue.wake()
+        t.join(timeout)
+        if t.is_alive():
+            raise RuntimeError("serve pump thread failed to stop")
+        self._pump_thread = None
+
+    @contextlib.contextmanager
+    def exclusive(self):
+        """Serialize external backend work (maintain / checkpoint / drain
+        / wal_sync from the caller thread) against the pump thread's
+        dispatches.  Uncontended no-op in cooperative mode."""
+        with self._work:
+            yield
+
+    def _check_alive(self) -> None:
+        if self._pump_error is not None:
+            raise RuntimeError(
+                "serve pump thread died"
+            ) from self._pump_error
+
+    def _pump_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                if len(self.queue):
+                    self._busy = True
+                    # may hold the batch-formation window (max_wait_ms);
+                    # deliberately outside _work so external callers are
+                    # not blocked behind the window
+                    batch = self.queue.pop_batch()
+                    if batch is not None:
+                        with self._work:
+                            self._process_async(batch)
+                    continue
+                # queue idle: land deferred readbacks, cross the ack
+                # point, then give the rebuilder ONE slot (re-checking
+                # for arrivals between slots keeps bursts unblocked)
+                with self._work:
+                    self._drain_inflight()
+                    self._ack_updates()
+                    if self._idle_maintenance():
+                        continue
+                self._busy = False
+                self.queue.wait_nonempty(0.05)
+            # shutdown drain: nothing may be stranded behind the stop
+            with self._work:
+                while True:
+                    batch = self.queue.pop_batch(force=True)
+                    if batch is None:
+                        break
+                    self._process_async(batch)
+                self._drain_inflight()
+                self._ack_updates()
+                self._busy = False
+        except BaseException as e:  # noqa: BLE001 — surfaced to waiters
+            self._pump_error = e
+            self._busy = False
+            log.exception(
+                "serve pump thread died; pending tickets will raise"
+            )
+
+    def _process_async(self, batch: MicroBatch) -> None:
+        """One pump iteration's processing (caller holds ``_work``)."""
+        # updates are ordered before any later search: ack them before
+        # the search dispatch so insert latency is bounded by the next
+        # batch boundary, not the next idle gap
+        if batch.op == SEARCH and self._unacked:
+            self._ack_updates()
+        self._process(batch)
+        while len(self._inflight) > max(0, self.cfg.max_inflight):
+            self._finish_one_inflight()
+        if len(self._unacked) >= max(1, self.cfg.ack_batch):
+            self._ack_updates()
 
     # ----------------------------- submit ------------------------------
     def _empty_ticket(self, op: str, key: tuple,
@@ -344,15 +566,19 @@ class ServeEngine:
         t = Ticket(op, 0, key, engine=self)
         t._buffers = buffers
         t.t_done = t.t_submit
+        t._signal()
         return t
 
     def submit_search(
         self, queries: np.ndarray, *, k: int | None = None,
         nprobe: int | None = None,
     ) -> Ticket:
+        self._check_alive()
         q = np.ascontiguousarray(np.asarray(queries, np.float32))
-        kk = k or self.cfg.search_k
-        key = (kk, nprobe or self.cfg.nprobe)
+        # `is None` (not falsiness): an explicit k=0 / nprobe=0 must not
+        # silently become the config default
+        kk = self.cfg.search_k if k is None else k
+        key = (kk, self.cfg.nprobe if nprobe is None else nprobe)
         if len(q) == 0:
             return self._empty_ticket(SEARCH, key, {
                 "dists": np.zeros((0, kk), np.float32),
@@ -362,6 +588,7 @@ class ServeEngine:
         return self.queue.submit(t, {"queries": q})
 
     def submit_insert(self, vecs: np.ndarray, vids: np.ndarray) -> Ticket:
+        self._check_alive()
         vecs = np.asarray(vecs, np.float32)
         vids = np.asarray(vids, np.int32)
         assert len(vecs) == len(vids)
@@ -374,6 +601,7 @@ class ServeEngine:
         return self.queue.submit(t, {"vecs": vecs, "vids": vids})
 
     def submit_delete(self, vids: np.ndarray) -> Ticket:
+        self._check_alive()
         vids = np.asarray(vids, np.int32)
         if len(vids) == 0:
             return self._empty_ticket(DELETE, (), {})
@@ -382,7 +610,14 @@ class ServeEngine:
 
     # ------------------------------ pump -------------------------------
     def pump(self, max_batches: int | None = None) -> int:
-        """Process queued micro-batches; returns how many were processed."""
+        """Cooperative mode: process queued micro-batches; returns how
+        many were processed.  Async mode: a flush barrier — returns 0
+        after every queued batch is processed, every deferred readback
+        has landed, every update ticket is acked, and due background
+        slots have run."""
+        if self.is_async:
+            self.barrier()
+            return 0
         n = 0
         while max_batches is None or n < max_batches:
             batch = self.queue.pop_batch()
@@ -391,6 +626,25 @@ class ServeEngine:
             self._process(batch)
             n += 1
         return n
+
+    def barrier(self, timeout: float = 600.0) -> None:
+        """Wait for pipeline quiescence (async mode's flush point)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            self._check_alive()
+            if not self.is_async:
+                return
+            with self._work:
+                idle = (
+                    len(self.queue) == 0 and not self._busy
+                    and not self._inflight and not self._unacked
+                    and self._maint_due <= 0
+                )
+            if idle:
+                return
+            if time.monotonic() >= deadline:
+                raise TimeoutError("serve pipeline barrier timed out")
+            time.sleep(0.001)
 
     def _pump_until(self, ticket: Ticket) -> None:
         while not ticket.done:
@@ -402,6 +656,15 @@ class ServeEngine:
             k, nprobe = batch.key
             # batch.valid masks padded rows out of the access telemetry
             # (their result rows are computed and discarded, as before).
+            if self.is_async:
+                begin = getattr(self.backend, "search_begin", None)
+                if begin is not None:
+                    # dispatch now, read back at scatter time: the device
+                    # overlaps this batch with whatever the pump does next
+                    fin = begin(batch.arrays["queries"], k, nprobe,
+                                batch.valid)
+                    self._inflight.append((batch, fin))
+                    return
             d, v = self.backend.search(
                 batch.arrays["queries"], k, nprobe, batch.valid
             )
@@ -415,9 +678,50 @@ class ServeEngine:
             self.backend.delete(vids, valid)
             batch.scatter({})
             self._tick_background()
+        self._note_done(batch)
+
+    def _note_done(self, batch: MicroBatch) -> None:
+        """Record + release finished tickets.  Durable update tickets in
+        async mode are held back until the WAL ack covers them."""
+        hold = (
+            self.is_async and batch.op != SEARCH
+            and getattr(self.backend, "wal_set", None) is not None
+        )
+        for part in batch.parts:
+            t = part.ticket
+            if not t.done:
+                continue
+            if hold:
+                self._unacked.append(t)
+            else:
+                self.metrics.note_ticket(t)
+                t._signal()
+
+    def _ack_updates(self) -> None:
+        """Group-commit ack point: fsync the WAL, then signal every held
+        update ticket (latency includes the fsync wait)."""
+        if not self._unacked:
+            return
+        self.backend.wal_sync()
+        now = time.perf_counter()
+        for t in self._unacked:
+            t.t_done = now
+            self.metrics.note_ticket(t)
+            t._signal()
+        self._unacked.clear()
+
+    def _finish_one_inflight(self) -> None:
+        batch, finalize = self._inflight.popleft()
+        d, v = finalize()
+        batch.scatter({"dists": d, "ids": v})
         for part in batch.parts:
             if part.ticket.done:
                 self.metrics.note_ticket(part.ticket)
+                part.ticket._signal()
+
+    def _drain_inflight(self) -> None:
+        while self._inflight:
+            self._finish_one_inflight()
 
     def _process_insert(self, batch: MicroBatch) -> None:
         """Insert with pipeline backpressure: when primary appends hit a
@@ -448,33 +752,76 @@ class ServeEngine:
             ids[newly] = got_ids[newly]
             landed_all |= newly
             pending = pending & ~landed
-        self.metrics.insert_dropped += int(pending.sum())
+        n_dropped = int(pending.sum())
+        if n_dropped:
+            self.metrics.insert_dropped += n_dropped
+            off = 0
+            for part in batch.parts:
+                d = int(pending[off : off + part.n].sum())
+                if d:
+                    part.ticket.dropped += d
+                off += part.n
+            log.warning(
+                "insert backpressure exhausted after %d retries: "
+                "%d/%d row(s) dropped",
+                self.cfg.max_insert_retries, n_dropped, batch.n_valid,
+            )
         batch.scatter({"ids": ids, "landed": landed_all})
 
     # ------------------------ background pipeline -----------------------
     def _tick_background(self) -> None:
         self.policy.note_foreground()
-        if self.policy.want_maintenance(self.backend.backlog):
+        if not self.policy.want_maintenance(self.backend.backlog):
+            return
+        if self.is_async:
+            # Defer the slot to a queue-idle gap — unless enough slots
+            # have piled up that the rebuilder would fall behind under
+            # sustained load (the pressure override keeps the steady-
+            # state slot rate equal to the sync engine's).
+            self._maint_due += 1
+            self.metrics.maint_deferred += 1
+            if self._maint_due >= max(1, self.cfg.maint_pressure):
+                self._maint_due -= 1
+                self.metrics.maint_forced += 1
+                self._run_maintenance()
+        else:
             self._run_maintenance()
 
-    def _run_maintenance(self) -> int:
+    def _idle_maintenance(self) -> bool:
+        """Run ONE deferred slot in a queue-idle gap; returns whether a
+        slot ran (caller holds ``_work``)."""
+        if self._maint_due <= 0:
+            return False
+        self._maint_due -= 1
+        self._run_maintenance(idle=True)
+        return True
+
+    def _run_maintenance(self, idle: bool = False) -> int:
         """One maintenance slot = ONE fused round of ``policy.budget`` jobs
         (a single dispatch; the host reads back one did-work scalar)."""
+        # deferred search readbacks fold access telemetry at finalize —
+        # land them before the maintain dispatch drains that buffer
+        self._drain_inflight()
         t0 = time.perf_counter()
         jobs = self.backend.maintain(self.policy.budget)
         self.policy.note_maintenance(jobs)
-        self.metrics.note_maintenance(jobs, time.perf_counter() - t0)
+        self.metrics.note_maintenance(
+            jobs, time.perf_counter() - t0, idle=idle
+        )
         return jobs
 
     def drain(self) -> int:
         """Flush the queue, then run the rebuilder to quiescence (batched
         rounds, one readback per round); returns jobs executed."""
         self.pump()
-        t0 = time.perf_counter()
-        jobs, rounds = self.backend.drain()
-        self.metrics.note_maintenance(
-            jobs, time.perf_counter() - t0, rounds=rounds
-        )
+        with self._work:
+            self._drain_inflight()
+            self._maint_due = 0    # quiescence supersedes deferred slots
+            t0 = time.perf_counter()
+            jobs, rounds = self.backend.drain()
+            self.metrics.note_maintenance(
+                jobs, time.perf_counter() - t0, rounds=rounds
+            )
         return jobs
 
     # ------------------------- sync conveniences ------------------------
@@ -512,7 +859,15 @@ class ServeEngine:
                 "steps": m.maint_steps,   # jobs that acted (pre-round name)
                 "time_s": mt,
                 "steps_per_s": m.maint_steps / mt if mt > 0 else 0.0,
+                # async-mode overlap: fraction of rebuilder time spent in
+                # queue-idle gaps (off the serve path) vs inline
+                "idle_slots": m.maint_idle_slots,
+                "idle_time_s": m.maint_idle_time_s,
+                "overlap_frac": m.maint_idle_time_s / mt if mt > 0 else 0.0,
+                "deferred": m.maint_deferred,
+                "forced": m.maint_forced,
             },
+            "async": self.is_async,
             "insert_retries": m.insert_retries,
             "insert_stall_s": m.insert_stall_s,
             "insert_dropped": m.insert_dropped,

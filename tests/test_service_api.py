@@ -584,3 +584,105 @@ def test_recovery_rejects_maintain_policy_drift(tmp_path, rng):
     with pytest.raises(ValueError, match="maintain_alpha"):
         spfresh.open(reweighted)
     assert spfresh.open(spec).recovered        # same policy: fine
+
+
+# ---------------------------------------------------------------------------
+# Async serving (background pump thread)
+# ---------------------------------------------------------------------------
+
+def _async_spec(root=None, max_wait_ms=2.0, **dur_kw) -> spfresh.ServiceSpec:
+    spec = tiny_spec(root, **dur_kw)
+    return dataclasses.replace(
+        spec,
+        serve=dataclasses.replace(
+            spec.serve, async_serve=True, max_wait_ms=max_wait_ms
+        ),
+    )
+
+
+def test_async_service_crash_replay_bit_exact(tmp_path, rng):
+    """The async durability gate: with the pump thread owning every WAL
+    append + dispatch in ONE serialized order, a threaded async run's
+    WAL must replay to a BIT-IDENTICAL index — window coalescing,
+    deferred readbacks and idle maintenance slots may change batch
+    timing, never logged content or order."""
+    import jax
+    import threading
+
+    base = make_clustered(rng, 800, 16, n_clusters=6)
+    spec = _async_spec(tmp_path / "svc", group_commit=8)
+    svc = spfresh.open(spec, vectors=base)
+    assert svc.engine.is_async
+
+    errors: list[BaseException] = []
+
+    def worker(tid: int) -> None:
+        trng = np.random.default_rng(50 + tid)
+        vecs = make_clustered(trng, 24, 16, n_clusters=2)
+        ids = np.arange(3000 + 100 * tid, 3024 + 100 * tid, dtype=np.int32)
+        try:
+            for s in range(0, 24, 8):
+                svc.insert(vecs[s : s + 8], ids[s : s + 8])
+                svc.search(vecs[s : s + 4], k=5)
+            svc.delete(ids[:4])
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=worker, args=(t,), daemon=True)
+        for t in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "async submitter hung"
+    assert not errors, errors
+    svc.flush()
+    want = svc.search(base[:16], k=10)
+    state = svc.index.state
+    svc.engine.shutdown()      # stop the pump; no checkpoint, no close
+
+    twin = spfresh.open(spec)  # crash: open-time snapshot + WAL replay
+    assert twin.recovered
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state),
+        jax.tree_util.tree_leaves(twin.index.state),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    got = twin.search(base[:16], k=10)
+    np.testing.assert_array_equal(want[1], got[1])
+    np.testing.assert_allclose(want[0], got[0], rtol=1e-5)
+
+
+def test_async_matches_sync_state_bit_exactly(rng):
+    """Async mode must not change WHAT is dispatched, only WHERE it runs:
+    the same single-threaded op sequence, flushed after every op (so
+    batching and deferred maintenance slots land at the same positions),
+    leaves bit-identical index state in both modes."""
+    import jax
+
+    base = make_clustered(rng, 600, 16, n_clusters=4)
+    states = {}
+    for mode in ("sync", "async"):
+        spec = tiny_spec() if mode == "sync" else _async_spec(
+            max_wait_ms=0.0)
+        svc = spfresh.open(spec, vectors=base)
+        srng = np.random.default_rng(7)
+        vecs = make_clustered(srng, 48, 16, n_clusters=3)
+        ids = np.arange(2000, 2048, dtype=np.int32)
+        for s in range(0, 48, 8):
+            svc.insert(vecs[s : s + 8], ids[s : s + 8])
+            svc.flush()
+            svc.search(vecs[s : s + 4], k=5)
+            svc.flush()
+        svc.delete(ids[:6])
+        svc.flush()
+        states[mode] = svc.index.state
+        if mode == "async":
+            svc.engine.shutdown()
+    for a, b in zip(
+        jax.tree_util.tree_leaves(states["sync"]),
+        jax.tree_util.tree_leaves(states["async"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

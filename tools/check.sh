@@ -30,6 +30,9 @@ python -m pytest -q tests/test_scenario_gauntlet.py
 echo "== posting codec (quant round-trip, dequant kernels, recall floor) =="
 python -m pytest -q tests/test_codec.py
 
+echo "== async serving (pump thread stress, window, reservoir, drops) =="
+python -m pytest -q tests/test_serve_async.py
+
 # The parity suites above carry ``pytestmark = pytest.mark.gate``; the
 # tier-1 step excludes them BY MARKER, so adding a gated suite is one
 # marker + one explicit step — the old hand-maintained --ignore list
