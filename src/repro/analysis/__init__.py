@@ -1,0 +1,35 @@
+"""spflint: static analysis enforcing the repo's replay / locking /
+kernel-resource invariants (see ARCHITECTURE.md, "Static analysis &
+enforced invariants").
+
+Pure-stdlib AST passes — importing this package must stay cheap and
+jax-free so the CLI can run before the environment can even build an
+index (CI's fast tier runs it first).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis import locks, replay, vmem
+from repro.analysis.common import Finding, parse_tree
+from repro.analysis.config import DEFAULT_SPEC, AnalysisSpec
+
+__all__ = ["run_all", "Finding", "AnalysisSpec", "DEFAULT_SPEC"]
+
+
+def run_all(root: Path, spec: AnalysisSpec = DEFAULT_SPEC) -> dict:
+    """Run all three passes over the tree at ``root``; returns
+    ``{"findings", "vmem_table", "vmem_budget_mib"}`` with findings
+    sorted by (file, line, rule)."""
+    modules = parse_tree(Path(root))
+    findings: list[Finding] = []
+    findings += replay.run(modules, spec.replay)
+    findings += locks.run(modules, spec.locks)
+    vmem_findings, reports = vmem.run(modules, spec.vmem)
+    findings += vmem_findings
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return {
+        "findings": findings,
+        "vmem_table": [r.as_dict() for r in reports],
+        "vmem_budget_mib": spec.vmem.budget_bytes / (1024 * 1024),
+    }

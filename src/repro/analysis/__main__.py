@@ -1,0 +1,123 @@
+"""spflint CLI: ``python -m repro.analysis src``.
+
+Runs the three passes over a source tree, prints findings, and exits
+nonzero on any finding not covered by the baseline — the CI ratchet.
+
+    python -m repro.analysis src                  # check (exit 1 on new)
+    python -m repro.analysis src --json out.json  # + machine report
+    python -m repro.analysis src --write-baseline # accept current findings
+    python -m repro.analysis --rules              # rule table
+    python -m repro.analysis src --table          # per-kernel VMEM table
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import run_all
+from repro.analysis.common import (
+    RULES, load_baseline, split_by_baseline, write_baseline,
+)
+
+
+def _print_rules() -> None:
+    for rule, desc in sorted(RULES.items()):
+        print(f"{rule}  {desc}")
+
+
+def _print_table(table: list[dict], budget_mib: float) -> None:
+    print(f"per-kernel VMEM at the reference shape (budget {budget_mib:.0f} "
+          "MiB, double-buffered):")
+    for row in table:
+        ops = " + ".join(
+            f"{'x'.join(map(str, o['shape']))}:{o['dtype']}"
+            for o in row["operands"]
+        )
+        print(f"  {row['vmem_mib']:8.3f} MiB  {row['kernel']:<24} "
+              f"grid={tuple(row['grid'])}  [{ops}]")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("root", nargs="?", default="src",
+                    help="source tree to analyze (default: src)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full JSON report here")
+    ap.add_argument("--baseline", metavar="PATH",
+                    default="tools/spflint_baseline.json",
+                    help="suppression file (default: "
+                         "tools/spflint_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--table", action="store_true",
+                    help="print the per-kernel VMEM table")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        _print_rules()
+        return 0
+
+    root = Path(args.root)
+    if not root.is_dir():
+        print(f"spflint: no such source tree: {root}", file=sys.stderr)
+        return 2
+
+    result = run_all(root)
+    findings = result["findings"]
+    baseline = load_baseline(Path(args.baseline))
+    new, suppressed = split_by_baseline(findings, baseline)
+
+    if args.write_baseline:
+        write_baseline(Path(args.baseline), findings)
+        print(f"spflint: wrote {len(findings)} suppression(s) to "
+              f"{args.baseline}")
+        return 0
+
+    if args.table:
+        _print_table(result["vmem_table"], result["vmem_budget_mib"])
+
+    for f in new:
+        print(f.render())
+
+    if args.json:
+        report = {
+            "findings": [
+                {"rule": f.rule, "file": f.file, "line": f.line,
+                 "symbol": f.symbol, "message": f.message}
+                for f in new
+            ],
+            "suppressed": [
+                {"rule": f.rule, "file": f.file, "line": f.line,
+                 "symbol": f.symbol}
+                for f in suppressed
+            ],
+            "vmem_table": result["vmem_table"],
+            "vmem_budget_mib": result["vmem_budget_mib"],
+            "rules": RULES,
+            "summary": {
+                "new": len(new),
+                "suppressed": len(suppressed),
+                "kernels_analyzed": len(result["vmem_table"]),
+            },
+        }
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
+
+    n_k = len(result["vmem_table"])
+    if new:
+        print(f"spflint: {len(new)} new finding(s) "
+              f"({len(suppressed)} baselined, {n_k} kernels analyzed)")
+        return 1
+    print(f"spflint: clean ({len(suppressed)} baselined, "
+          f"{n_k} kernels analyzed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""spflint infrastructure: findings, rule registry, baseline, AST walking.
+
+A *finding* is one rule violation at one source location.  Findings are
+keyed for suppression purposes by ``(rule, file, symbol)`` — the enclosing
+function/class qualname, NOT the line number — so a checked-in baseline
+survives unrelated edits above the finding.  The shipped baseline
+(`tools/spflint_baseline.json`) is the CI ratchet: a finding not listed
+there fails the run, so the tree can only get cleaner.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from pathlib import Path
+
+
+# --------------------------------------------------------------------------
+# Rule registry (one line per rule; --rules prints this, docs copy it)
+# --------------------------------------------------------------------------
+
+RULES: dict[str, str] = {
+    # Pass 1 — replay determinism (replay.py)
+    "SPF101": "wall-clock read (time.*) reachable from a replay-critical "
+              "dispatch path",
+    "SPF102": "unseeded RNG (random.* / np.random module state / "
+              "default_rng()) reachable from a replay-critical dispatch path",
+    "SPF103": "set/dict iteration-order dependence in replay-critical "
+              "dispatch construction",
+    "SPF104": "config field read on a replay-critical path but stamped in "
+              "neither REPLAY_CRITICAL_FIELDS nor REPLAY_EXEMPT_FIELDS",
+    "SPF105": "config field classified in neither REPLAY_CRITICAL_FIELDS "
+              "nor REPLAY_EXEMPT_FIELDS",
+    "SPF106": "stamp names a field the config class does not define "
+              "(stale stamp)",
+    # Pass 2 — lock discipline (locks.py)
+    "SPF201": "read of a guarded field outside the declared lock",
+    "SPF202": "write to a guarded field outside the declared lock",
+    "SPF203": "write to a pump-thread-only field from a non-pump method",
+    "SPF204": "write to an init-only/lifecycle field outside its owner "
+              "methods",
+    "SPF205": "shared field assigned but missing from FIELD_OWNERSHIP",
+    "SPF206": "FIELD_OWNERSHIP declares a field the class never assigns "
+              "(stale declaration)",
+    "SPF207": "call to a @holds_work method from a site that does not hold "
+              "the lock",
+    # Pass 3 — Pallas resources (vmem.py)
+    "SPF301": "kernel VMEM footprint exceeds the per-core budget",
+    "SPF302": "interpret-only construct inside a Pallas kernel body",
+    "SPF303": "pallas_call site the resource pass cannot statically "
+              "evaluate",
+    "SPF304": "shape symbol with no value in the analysis bindings",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    file: str      # repo-relative posix path
+    line: int
+    symbol: str    # enclosing def/class qualname ("mod.Class.meth")
+    message: str
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.file, self.symbol)
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule} [{self.symbol}] " \
+               f"{self.message}"
+
+
+# --------------------------------------------------------------------------
+# Baseline / suppression file
+# --------------------------------------------------------------------------
+
+def load_baseline(path: Path | None) -> set[tuple[str, str, str]]:
+    if path is None or not Path(path).exists():
+        return set()
+    data = json.loads(Path(path).read_text())
+    return {
+        (s["rule"], s["file"], s["symbol"])
+        for s in data.get("suppressions", [])
+    }
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    data = {
+        "version": 1,
+        "comment": "spflint suppressions: each entry hides ONE existing "
+                   "finding (rule, file, enclosing symbol).  CI fails on "
+                   "any finding not listed here — remove entries as "
+                   "violations are fixed; never add one without a reason.",
+        "suppressions": [
+            {"rule": f.rule, "file": f.file, "symbol": f.symbol,
+             "reason": "baselined"}
+            for f in sorted(findings, key=lambda f: f.key)
+        ],
+    }
+    Path(path).write_text(json.dumps(data, indent=2) + "\n")
+
+
+def split_by_baseline(
+    findings: list[Finding], baseline: set[tuple[str, str, str]]
+) -> tuple[list[Finding], list[Finding]]:
+    """-> (unsuppressed, suppressed)."""
+    new, old = [], []
+    for f in findings:
+        (old if f.key in baseline else new).append(f)
+    return new, old
+
+
+# --------------------------------------------------------------------------
+# Source tree walking
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Module:
+    name: str          # dotted module name relative to the tree root
+    path: Path
+    rel: str           # path to render in findings (posix, repo-relative)
+    tree: ast.Module
+
+
+def parse_tree(
+    root: Path, *, rel_to: Path | None = None, skip_dirs: tuple[str, ...] = (
+        "__pycache__",
+    ),
+) -> dict[str, Module]:
+    """Parse every ``*.py`` under ``root`` into a {dotted-name: Module} map.
+
+    ``root`` is the directory CONTAINING the top-level package(s) (e.g.
+    ``src/`` → modules named ``repro.core.lire``).  ``rel_to`` controls the
+    path rendered in findings (defaults to ``root``'s parent so findings
+    read ``src/repro/...`` from the repo root).
+    """
+    root = Path(root).resolve()
+    rel_to = Path(rel_to).resolve() if rel_to else root.parent
+    out: dict[str, Module] = {}
+    for path in sorted(root.rglob("*.py")):
+        if any(part in skip_dirs for part in path.parts):
+            continue
+        parts = path.relative_to(root).with_suffix("").parts
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        name = ".".join(parts) if parts else root.name
+        try:
+            rel = path.relative_to(rel_to).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        out[name] = Module(
+            name=name, path=path, rel=rel,
+            tree=ast.parse(path.read_text(), filename=str(path)),
+        )
+    return out
+
+
+def qualname_index(mod: Module) -> dict[str, ast.AST]:
+    """{qualname: def node} for functions/classes/methods of a module
+    (one level of class nesting — the repo's actual shape)."""
+    out: dict[str, ast.AST] = {}
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            out[node.name] = node
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out[f"{node.name}.{sub.name}"] = sub
+    return out
+
+
+def enclosing_symbol(mod: Module, lineno: int) -> str:
+    """Qualname of the innermost def/class containing ``lineno`` (module
+    name when at top level) — the line-stable suppression key."""
+    best, best_span = mod.name, None
+    for qual, node in qualname_index(mod).items():
+        end = getattr(node, "end_lineno", node.lineno)
+        if node.lineno <= lineno <= end:
+            span = end - node.lineno
+            if best_span is None or span <= best_span:
+                best, best_span = f"{mod.name}.{qual}", span
+    return best
+
+
+def literal_str_tuple(node: ast.AST) -> tuple[str, ...] | None:
+    """Evaluate a tuple/list of string constants; None if not one."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                vals.append(elt.value)
+            else:
+                return None
+        return tuple(vals)
+    return None
+
+
+def module_assign(mod: Module, name: str) -> ast.AST | None:
+    """RHS of the (last) top-level assignment to ``name`` in a module."""
+    found = None
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    found = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name) and node.target.id == name:
+                found = node.value
+    return found

@@ -48,6 +48,9 @@ from typing import Callable, Protocol
 import numpy as np
 
 from repro.core.index import SPFreshIndex
+from repro.serve.ownership import (
+    GUARDED, INIT, LIFECYCLE, PUMP, holds_work, install_lock_check,
+)
 from repro.serve.policy import BacklogPolicy, MaintenancePolicy, RatioPolicy
 from repro.storage.durability import DurableBackend
 from repro.serve.queue import (
@@ -223,9 +226,16 @@ class LocalBackend(DurableBackend):
         return self.index.maintain_round(jobs, access=access)
 
     def drain(self):
+        # The record carries the jobs-per-round it drained with: replay
+        # must re-run the same round shapes even if the index was
+        # reopened under a different cfg.jobs_per_round (that field is
+        # serving-side, not snapshot-stamped).
         access = self._take_access()
-        self._log("drain", {"access": access})
-        jobs = self.index.maintain(access=access)
+        jpr = int(self.index.state.cfg.jobs_per_round)
+        self._log("drain", {
+            "jobs": np.asarray(jpr, np.int32), "access": access,
+        })
+        jobs = self.index.maintain(jobs_per_round=jpr, access=access)
         return jobs, self.index.last_drain_rounds
 
     def backlog(self):
@@ -258,7 +268,12 @@ class LocalBackend(DurableBackend):
             # folds zeros, tracing the same graph those dispatches ran.
             self.index.maintain_round(int(p["jobs"]), access=p.get("access"))
         elif rec.op == "drain":
-            self.index.maintain(access=p.get("access"))
+            # Pre-fix records carry no "jobs" — fall back to the config
+            # default those drains actually ran with.
+            self.index.maintain(
+                jobs_per_round=int(p["jobs"]) if "jobs" in p else None,
+                access=p.get("access"),
+            )
         else:
             raise ValueError(f"unknown WAL op {rec.op!r}")
 
@@ -310,6 +325,11 @@ class EngineConfig:
     maint_pressure: int = 8
     ack_batch: int = 32          # unacked update tickets per forced fsync
     lat_reservoir: int = 4096    # bounded latency sample size per op
+    # Debug: enforce the engine's FIELD_OWNERSHIP map at runtime (owner-
+    # tracking lock + checking __setattr__, serve/ownership.py).  The
+    # async stress tests run under this; off in production (costs a dict
+    # lookup per attribute write).
+    lock_check: bool = False
 
     def buckets(self) -> tuple[int, ...]:
         return default_buckets(self.min_bucket, self.max_batch)
@@ -420,7 +440,28 @@ class ServeEngine:
       thread) must run under ``exclusive()``.
     * Durable update tickets are signaled only after the covering WAL
       fsync (group-commit ack); search tickets signal at readback.
+
+    The map below is the machine-checked form of those invariants: the
+    spflint lock pass (SPF20x) verifies every ``self.<field>`` access
+    site against it, and ``EngineConfig.lock_check`` enforces it at
+    runtime (serve/ownership.py).
     """
+
+    LOCK_FIELD = "_work"
+    PUMP_METHODS = ("_pump_loop",)
+    LIFECYCLE_METHODS = ("start", "shutdown")
+    FIELD_OWNERSHIP = {
+        # bound once in __init__, immutable after
+        "cfg": INIT, "backend": INIT, "policy": INIT, "queue": INIT,
+        "metrics": INIT, "_work": INIT, "_stop": INIT,
+        # shared mutable pipeline state: only under _work
+        "_inflight": GUARDED, "_unacked": GUARDED, "_maint_due": GUARDED,
+        # pump-thread-only writes; racy reads are benign by design
+        "_busy": PUMP, "_pump_error": PUMP,
+        # written by start()/shutdown(), which run strictly outside the
+        # pump thread's lifetime
+        "_pump_thread": LIFECYCLE,
+    }
 
     def __init__(
         self,
@@ -454,6 +495,8 @@ class ServeEngine:
         self._stop = threading.Event()
         self._pump_error: BaseException | None = None
         self._pump_thread: threading.Thread | None = None
+        if self.cfg.lock_check:
+            install_lock_check(self)   # before the pump thread exists
         if self.cfg.async_serve:
             self.start()
 
@@ -546,8 +589,9 @@ class ServeEngine:
                 "serve pump thread died; pending tickets will raise"
             )
 
+    @holds_work
     def _process_async(self, batch: MicroBatch) -> None:
-        """One pump iteration's processing (caller holds ``_work``)."""
+        """One pump iteration's processing."""
         # updates are ordered before any later search: ack them before
         # the search dispatch so insert latency is bounded by the next
         # batch boundary, not the next idle gap
@@ -623,7 +667,11 @@ class ServeEngine:
             batch = self.queue.pop_batch()
             if batch is None:
                 break
-            self._process(batch)
+            # Cooperative pumping can race with another caller thread's
+            # drain()/exclusive(); dispatch under _work like every other
+            # path (uncontended re-entrant acquire when single-threaded).
+            with self._work:
+                self._process(batch)
             n += 1
         return n
 
@@ -651,6 +699,7 @@ class ServeEngine:
             if self.pump(max_batches=1) == 0:
                 raise RuntimeError("ticket still pending on an empty queue")
 
+    @holds_work
     def _process(self, batch: MicroBatch) -> None:
         if batch.op == SEARCH:
             k, nprobe = batch.key
@@ -680,6 +729,7 @@ class ServeEngine:
             self._tick_background()
         self._note_done(batch)
 
+    @holds_work
     def _note_done(self, batch: MicroBatch) -> None:
         """Record + release finished tickets.  Durable update tickets in
         async mode are held back until the WAL ack covers them."""
@@ -697,6 +747,7 @@ class ServeEngine:
                 self.metrics.note_ticket(t)
                 t._signal()
 
+    @holds_work
     def _ack_updates(self) -> None:
         """Group-commit ack point: fsync the WAL, then signal every held
         update ticket (latency includes the fsync wait)."""
@@ -710,6 +761,7 @@ class ServeEngine:
             t._signal()
         self._unacked.clear()
 
+    @holds_work
     def _finish_one_inflight(self) -> None:
         batch, finalize = self._inflight.popleft()
         d, v = finalize()
@@ -719,10 +771,12 @@ class ServeEngine:
                 self.metrics.note_ticket(part.ticket)
                 part.ticket._signal()
 
+    @holds_work
     def _drain_inflight(self) -> None:
         while self._inflight:
             self._finish_one_inflight()
 
+    @holds_work
     def _process_insert(self, batch: MicroBatch) -> None:
         """Insert with pipeline backpressure: when primary appends hit a
         posting at hard capacity, give the rebuilder a slot (it splits the
@@ -769,6 +823,7 @@ class ServeEngine:
         batch.scatter({"ids": ids, "landed": landed_all})
 
     # ------------------------ background pipeline -----------------------
+    @holds_work
     def _tick_background(self) -> None:
         self.policy.note_foreground()
         if not self.policy.want_maintenance(self.backend.backlog):
@@ -787,15 +842,17 @@ class ServeEngine:
         else:
             self._run_maintenance()
 
+    @holds_work
     def _idle_maintenance(self) -> bool:
         """Run ONE deferred slot in a queue-idle gap; returns whether a
-        slot ran (caller holds ``_work``)."""
+        slot ran."""
         if self._maint_due <= 0:
             return False
         self._maint_due -= 1
         self._run_maintenance(idle=True)
         return True
 
+    @holds_work
     def _run_maintenance(self, idle: bool = False) -> int:
         """One maintenance slot = ONE fused round of ``policy.budget`` jobs
         (a single dispatch; the host reads back one did-work scalar)."""

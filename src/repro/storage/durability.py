@@ -144,9 +144,11 @@ class DurableBackend:
 
 # Geometry/protocol fields that must match between a snapshot and the
 # opening spec: they shape the state pytree or change update-dispatch
-# semantics, so replay under a different value is undefined.  Serving-side
-# knobs (nprobe, scan flags, jobs_per_round — the logged round records
-# carry their own job counts) may differ freely.
+# semantics, so replay under a different value is undefined.  Every
+# LireConfig field is classified here or in REPLAY_EXEMPT_FIELDS below —
+# the spflint replay pass (SPF104/105) cross-checks both lists against
+# the config class and against every field read reachable from the
+# jit-step builders, so a new field cannot ship unclassified.
 REPLAY_CRITICAL_FIELDS = (
     "dim", "block_size", "max_blocks_per_posting", "num_blocks",
     "num_postings_cap", "num_vectors_cap", "vector_dtype",
@@ -161,6 +163,29 @@ REPLAY_CRITICAL_FIELDS = (
     # returned; both are stamped by name so pre-codec snapshots (which
     # never stamped them) still pass.
     "codec", "rerank_factor",
+    # Insert/reassign ROUTING runs through `lire.navigate`, whose kernel
+    # path (Pallas nav vs XLA oracle, compiled vs interpret) these two
+    # select.  The paths are numerically equivalent only up to top-k
+    # tie-breaking on equal distances — enough to route a vector to a
+    # different posting on replay — so they must match the snapshot.
+    # Stamped by name: snapshots from before this stamp never recorded
+    # them and still pass.
+    "use_pallas_nav", "pallas_interpret",
+)
+
+# Serving-side fields a reopened index may change freely: they only
+# shape dispatches that are never WAL-logged (searches) or whose logged
+# records carry the value they ran with.  Each entry needs a reason —
+# the replay pass treats this list as load-bearing, not a dumping
+# ground.
+REPLAY_EXEMPT_FIELDS = (
+    # Search-path only; search dispatches are not WAL-logged.
+    "nprobe", "scan_dtype", "use_pallas_scan", "scan_schedule",
+    "scan_page_budget",
+    # Logged "maintain"/"drain" records carry their own job counts, so
+    # replay re-runs the original round shapes regardless of the
+    # reopened config's default.
+    "jobs_per_round",
 )
 
 

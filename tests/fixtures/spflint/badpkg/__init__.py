@@ -1,0 +1,7 @@
+"""Seeded-violation fixture package for the spflint pass tests.
+
+Every deliberate violation line carries a trailing ``# expect: SPF...``
+marker; ``tests/test_spflint.py`` parses the markers and asserts the
+passes report EXACTLY that (file, line, rule) set — nothing missing,
+nothing extra.  These modules are parsed, never imported.
+"""

@@ -1,0 +1,56 @@
+"""Fixture Pallas wrappers: one seeded violation per resource rule.
+
+Parsed, never imported — the imports exist only so the file stays a
+plausible kernel module.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _clean_kernel(q_ref, o_ref):
+    o_ref[...] = q_ref[...] * 2.0
+
+
+def _host_kernel(q_ref, o_ref):
+    o_ref[...] = q_ref[...] + np.float32(1.0)   # expect: SPF302
+    print("debug")                              # expect: SPF302
+
+
+def over_budget(q):
+    # 2 * (16 MiB in + 16 MiB out) = 64 MiB >> the 16 MiB budget
+    return pl.pallas_call(                      # expect: SPF301
+        _clean_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((2048, 2048), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2048, 2048), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((8192, 2048), jnp.float32),
+    )(q)
+
+
+def interp_only(q):
+    return pl.pallas_call(
+        _host_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, dim), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(q)
+
+
+def unanalyzable(q):
+    return pl.pallas_call(                      # expect: SPF303
+        _clean_kernel,
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )(q)
+
+
+def unknown_symbol(q):
+    return pl.pallas_call(                      # expect: SPF304
+        _clean_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((mystery_rows, dim), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(q)

@@ -1,0 +1,32 @@
+"""Fixture replay surface: nondeterminism + an unstamped config read,
+all reachable from the declared root ``build_step``."""
+import random
+import time
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def _noise(n):
+    t = time.time()                       # expect: SPF101
+    j = random.random()                   # expect: SPF102
+    r = np.random.rand(n)                 # expect: SPF102
+    g = default_rng()                     # expect: SPF102
+    return t, j, r, g
+
+
+def _seeded_ok(n):
+    # seeded Generator + list iteration: must NOT fire SPF102/SPF103
+    g = default_rng(1234)
+    for _ in [1, 2, 3]:
+        pass
+    return g.integers(0, n)
+
+
+def build_step(cfg):
+    for vid in {1, 2, 3}:                 # expect: SPF103
+        _ = vid
+    _noise(4)
+    _seeded_ok(4)
+    w = cfg.doubled
+    return cfg.dim + cfg.extra + w        # expect: SPF104

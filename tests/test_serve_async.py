@@ -51,6 +51,9 @@ def _async_engine(rng, n_base=600, **cfg_kw):
         search_k=10, max_batch=32, min_bucket=8,
         policy="ratio", fg_bg_ratio=2, maintain_budget=4,
         async_serve=True,
+        # the whole async suite runs under the instrumented lock: any
+        # shared-field write off the declared ownership map raises
+        lock_check=True,
     )
     cfg.update(cfg_kw)
     return ServeEngine(idx, EngineConfig(**cfg)), base
@@ -95,7 +98,9 @@ def test_async_pump_error_surfaces_at_result(rng):
         with pytest.raises(RuntimeError, match="pump thread died"):
             tk.result(timeout=60)
     finally:
-        eng._pump_error = None          # let shutdown's barrier pass
+        # deliberate internals poke (clearing a simulated pump error from
+        # the main thread): bypass the ownership checker explicitly
+        object.__setattr__(eng, "_pump_error", None)
         eng.shutdown()
 
 

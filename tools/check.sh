@@ -11,6 +11,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== compileall =="
 python -m compileall -q src benchmarks examples tools
 
+echo "== spflint (replay / lock / VMEM static invariants) =="
+python -m repro.analysis src
+
 echo "== kernel parity (Pallas interpret vs XLA oracles) =="
 python -m pytest -q tests/test_kernels_posting_scan.py \
     tests/test_kernels_l2topk.py tests/test_search_pallas.py
@@ -32,6 +35,9 @@ python -m pytest -q tests/test_codec.py
 
 echo "== async serving (pump thread stress, window, reservoir, drops) =="
 python -m pytest -q tests/test_serve_async.py
+
+echo "== spflint self-test (seeded fixtures, coverage, VMEM parity) =="
+python -m pytest -q tests/test_spflint.py
 
 # The parity suites above carry ``pytestmark = pytest.mark.gate``; the
 # tier-1 step excludes them BY MARKER, so adding a gated suite is one
