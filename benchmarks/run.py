@@ -27,6 +27,7 @@ BENCHES = [
     ("reassign_range", "benchmarks.bench_reassign_range"),  # Fig. 11
     ("pipeline", "benchmarks.bench_pipeline_balance"),   # Fig. 12
     ("serve_async", "benchmarks.bench_serve_async"),     # open-loop tails
+    ("replicas", "benchmarks.bench_replicas"),           # read replicas
     ("rebuild_cost", "benchmarks.bench_rebuild_cost"),   # Table 1
     ("maintenance", "benchmarks.bench_maintenance"),     # batched rounds
     ("recovery", "benchmarks.bench_recovery"),           # §4.4 durability
@@ -47,12 +48,13 @@ def main() -> None:
                     help="write a machine-readable report to PATH and exit")
     ap.add_argument("--report",
                     choices=["auto", "search", "maintenance", "recovery",
-                             "scenarios", "serve"],
+                             "scenarios", "serve", "replicas"],
                     default="auto",
                     help="which --json report to write; 'auto' picks "
                          "maintenance for paths containing 'update'/'maint', "
                          "recovery for 'recover', scenarios for "
-                         "'scenario', serve for 'serve', else search")
+                         "'scenario', replicas for 'replica', serve for "
+                         "'serve', else search")
     args = ap.parse_args()
 
     if args.json:
@@ -67,6 +69,8 @@ def main() -> None:
                 which = "recovery"
             elif "scenario" in base:
                 which = "scenarios"
+            elif "replica" in base:
+                which = "replicas"
             elif "serve" in base:
                 which = "serve"
             else:
@@ -81,6 +85,18 @@ def main() -> None:
             print(f"# wrote {args.json}: shift drift_minus_size="
                   f"{shift['drift_minus_size']:+.3f} at "
                   f"jobs_per_round={shift['jobs_per_round']}")
+            return
+        if which == "replicas":
+            from benchmarks.bench_replicas import run_json
+
+            report = run_json(quick=not args.full)
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            s = report["summary"]
+            print(f"# wrote {args.json}: "
+                  f"read_scaling_2r={s['read_scaling_2r']:.2f}x (modeled) "
+                  f"ack_overhead={s['ack_overhead_frac'] * 100:+.1f}% "
+                  f"parity={s['bit_identical_at_equal_seqno']}")
             return
         if which == "serve":
             from benchmarks.bench_serve_async import run_json

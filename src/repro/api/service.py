@@ -82,6 +82,11 @@ class Service:
         """The single-host index (None on the sharded backend)."""
         return self.engine.index
 
+    @property
+    def replicas(self):
+        """The bound ReplicaSet (None when ``n_replicas == 1``)."""
+        return self.engine.replicas
+
     def search(
         self, queries: np.ndarray, *, k: int | None = None,
         nprobe: int | None = None,
@@ -292,6 +297,38 @@ def _make_mesh(spec: ServiceSpec):
     return jax.make_mesh((n,), spec.shards.shard_axes)
 
 
+def _make_meshes(spec: ServiceSpec, mesh):
+    """(primary_mesh, replica_meshes) for the sharded backend.
+
+    With ``n_replicas > 1`` and no explicit mesh, build the 2-axis
+    (data, model) mesh — the data axis holds the N full copies — and
+    split it into one single-axis row submesh per copy: row 0 is the
+    primary, the rest are read replicas.  Each copy's shard_map'd steps
+    compile on its own row, so the per-shard step code is exactly the
+    unreplicated path.  An explicit ``mesh`` hosts every copy (useful
+    when devices are scarce — e.g. local CPU tests)."""
+    n_rep = spec.shards.n_replicas
+    if mesh is not None:
+        return mesh, [mesh] * (n_rep - 1)
+    if n_rep == 1:
+        return _make_mesh(spec), []
+    from repro.distributed.sharding import (
+        make_replicated_mesh, replica_submeshes,
+    )
+
+    if len(spec.shards.shard_axes) != 1:
+        raise ValueError(
+            "replicated meshes support a single shard axis; got "
+            f"{spec.shards.shard_axes}"
+        )
+    full = make_replicated_mesh(
+        n_rep, spec.shards.n_shards,
+        (spec.shards.replica_axis, spec.shards.shard_axes[0]),
+    )
+    rows = replica_submeshes(full, spec.shards.replica_axis)
+    return rows[0], rows[1:]
+
+
 def _local_backend(spec: ServiceSpec, index: SPFreshIndex) -> LocalBackend:
     return LocalBackend(
         index,
@@ -346,10 +383,11 @@ def open(
             "no snapshot to recover and no vectors to build"
         )
 
+    replica_meshes: list = []
     if spec.sharded:
         from repro.distributed.sharded_index import ShardedIndex
 
-        mesh = mesh or _make_mesh(spec)
+        mesh, replica_meshes = _make_meshes(spec, mesh)
         kwargs = dict(
             shard_axes=spec.shards.shard_axes,
             probe_chunk=spec.scan.probe_chunk,
@@ -417,7 +455,33 @@ def open(
                     "or point DurabilitySpec at a clean root)"
                 )
 
-    engine = ServeEngine(backend, spec.engine_config())
+    replicas = None
+    if spec.replicated:
+        # Clone the read replicas AFTER durability attach + replay so a
+        # recovered service's replicas start bit-identical to the
+        # recovered primary at its applied seqno; attach the publish
+        # sink before the engine exists so no logged dispatch can slip
+        # past the stream.  Workers start only after bind() (catch-up
+        # needs the engine's exclusive lock).
+        from repro.distributed.replication import ReplicaSet
+
+        if spec.sharded:
+            clones = [backend.clone(m) for m in replica_meshes]
+        else:
+            clones = [
+                backend.clone() for _ in range(spec.shards.n_replicas - 1)
+            ]
+        replicas = ReplicaSet(
+            backend, clones,
+            max_lag=spec.serve.max_lag,
+            inflight=spec.serve.replica_inflight,
+        )
+        backend.attach_replication(replicas)
+
+    engine = ServeEngine(backend, spec.engine_config(), replicas=replicas)
+    if replicas is not None:
+        replicas.bind(engine)
+        replicas.start()
     svc = Service(
         spec, engine, initial_handles=initial_handles, recovered=recovered
     )

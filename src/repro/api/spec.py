@@ -82,6 +82,14 @@ class ServeSpec:
     # top bucket instead of dispatching immediately (async mode only).
     async_serve: bool = False
     max_wait_ms: float = 0.0
+    # --- read replicas (serve/engine.py + distributed/replication.py) ---
+    # With ShardSpec.n_replicas > 1 the pump routes search batches to
+    # replica workers round-robin; max_lag is the freshness bound (a
+    # replica more than max_lag WAL seqnos behind the primary is skipped
+    # and the batch falls back to the primary), replica_inflight caps the
+    # routed-but-unfinished batches a single replica may hold.
+    max_lag: int = 64
+    replica_inflight: int = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,10 +170,21 @@ class DurabilitySpec:
 
 @dataclasses.dataclass(frozen=True)
 class ShardSpec:
-    """Mesh geometry.  ``n_shards=1`` selects the single-host backend."""
+    """Mesh geometry.  ``n_shards=1`` selects the single-host backend.
+
+    ``n_replicas > 1`` adds a leading **data** axis holding N full copies
+    of the index: the primary (replica 0) alone runs the WAL-append +
+    dispatch order, and every logged dispatch is streamed to the other
+    replicas through a bounded async queue replayed in seqno order (see
+    ``distributed/replication.py``).  The model axis continues to shard
+    postings exactly as before — replication composes with sharding, so
+    ``n_replicas=2, n_shards=2`` needs a 4-device (data, model) mesh.
+    """
 
     n_shards: int = 1
     shard_axes: tuple[str, ...] = ("model",)
+    n_replicas: int = 1
+    replica_axis: str = "data"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,6 +202,10 @@ class ServiceSpec:
     @property
     def sharded(self) -> bool:
         return self.shards.n_shards > 1
+
+    @property
+    def replicated(self) -> bool:
+        return self.shards.n_replicas > 1
 
     def lire_config(self) -> LireConfig:
         """IndexSpec.config with the scan/maintenance overrides folded in —
@@ -235,13 +258,18 @@ class ServiceSpec:
             max_insert_retries=sv.max_insert_retries,
             async_serve=sv.async_serve,
             max_wait_ms=sv.max_wait_ms,
+            max_lag=sv.max_lag,
+            replica_inflight=sv.replica_inflight,
         )
 
     def validate(self) -> None:
         self.lire_config()  # folds + validates
         assert self.shards.n_shards >= 1
+        assert self.shards.n_replicas >= 1
         assert self.serve.policy in ("ratio", "backlog"), self.serve.policy
         assert self.serve.max_wait_ms >= 0
+        assert self.serve.max_lag >= 0
+        assert self.serve.replica_inflight >= 1
         assert self.durability.checkpoint_every >= 0
         dur = self.durability
         assert dur.delta_every >= 0 and dur.compact_every >= 0
@@ -275,4 +303,16 @@ class ServiceSpec:
             self, shards=dataclasses.replace(
                 self.shards, n_shards=n_shards, **kw
             )
+        )
+
+    def with_replicas(self, n_replicas: int, *, max_lag: int | None = None,
+                      ) -> "ServiceSpec":
+        """Convenience: the same service with ``n_replicas`` read replicas."""
+        serve = self.serve if max_lag is None else dataclasses.replace(
+            self.serve, max_lag=max_lag
+        )
+        return dataclasses.replace(
+            self,
+            serve=serve,
+            shards=dataclasses.replace(self.shards, n_replicas=n_replicas),
         )

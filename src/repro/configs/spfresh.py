@@ -91,12 +91,17 @@ CONFIG_PAGED = dataclasses.replace(
 # ---------------------------------------------------------------------------
 
 def service_spec(*, paged: bool = True, smoke: bool = False,
-                 n_shards: int = 1, durable_root: str | None = None):
+                 n_shards: int = 1, durable_root: str | None = None,
+                 n_replicas: int = 1, max_lag: int = 64):
     """The production ServiceSpec for spfresh-1b (or its smoke twin).
 
     ``spfresh.open(service_spec(smoke=True), vectors=...)`` stands up a
     runnable miniature of the billion-scale deployment; on real hardware
     pass ``n_shards=256`` (single-pod) and a durable root per node.
+    ``n_replicas > 1`` adds data-axis read replicas fed by the async WAL
+    replication stream (distributed/replication.py); ``max_lag`` is the
+    freshness bound in WAL seqnos before a search falls back to the
+    primary.
     """
     import spfresh
 
@@ -105,6 +110,7 @@ def service_spec(*, paged: bool = True, smoke: bool = False,
         index=spfresh.IndexSpec(config=base),
         serve=spfresh.ServeSpec(
             search_k=10, nprobe=base.nprobe, max_batch=SEARCH_Q,
+            max_lag=max_lag,
         ),
         scan=spfresh.ScanSpec(probe_chunk=PROBE_CHUNK),
         maintenance=spfresh.MaintenanceSpec(
@@ -114,7 +120,7 @@ def service_spec(*, paged: bool = True, smoke: bool = False,
             beta=base.maintain_beta,
         ),
         durability=spfresh.DurabilitySpec(root=durable_root),
-        shards=spfresh.ShardSpec(n_shards=n_shards),
+        shards=spfresh.ShardSpec(n_shards=n_shards, n_replicas=n_replicas),
     )
 
 

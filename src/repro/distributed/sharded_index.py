@@ -496,6 +496,39 @@ class ShardedIndex(DurableBackend):
     def set_alive(self, alive: np.ndarray) -> None:
         self.shard_alive = jnp.asarray(alive, bool)
 
+    # ---------------- replication hooks (replica cloning) ---------------
+    def fork_state(self) -> IndexState:
+        """Deep copy of the stacked state.  The update steps donate their
+        stacked-state argument, so a replica sharing buffers with the
+        primary would be invalidated by the primary's next update."""
+        return jax.tree_util.tree_map(jnp.copy, self.stacked)
+
+    def adopt_state(self, stacked: IndexState) -> None:
+        """Install a (forked) stacked state, re-placed onto THIS index's
+        mesh — the replica rows of a (data, model) mesh each run their
+        own single-axis submesh (see ``sharding.replica_submeshes``)."""
+        specs = state_pspecs(stacked)
+        shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        self.stacked = jax.device_put(stacked, shardings)
+
+    def clone(self, mesh: Mesh | None = None) -> "ShardedIndex":
+        """A read replica of this index on ``mesh`` (default: same mesh):
+        same config and step geometry, its own deep-copied state, its own
+        compiled steps."""
+        twin = ShardedIndex(
+            mesh or self.mesh, self.cfg, self.stacked, self.n_shards,
+            shard_axes=self.shard_axes, probe_chunk=self.probe_chunk,
+            use_pallas_scan=self.use_pallas_scan,
+            scan_schedule=self.scan_schedule,
+            jobs_per_round=self.jobs_per_round,
+        )
+        twin.adopt_state(self.fork_state())
+        twin._wal_applied = self._wal_applied
+        return twin
+
     # --------------------------- backend ops ---------------------------
     def search(
         self, queries: np.ndarray, k: int, nprobe: int | None = None,

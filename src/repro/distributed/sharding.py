@@ -25,6 +25,31 @@ def data_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+def make_replicated_mesh(n_replicas: int, n_shards: int,
+                         axes: tuple[str, str] = ("data", "model")):
+    """The 2-axis (data, model) mesh of a replicated sharded service:
+    the model axis shards postings (unchanged), the data axis holds
+    ``n_replicas`` full copies of the index.  Needs
+    ``n_replicas * n_shards`` devices."""
+    assert n_replicas >= 1 and n_shards >= 1
+    return jax.make_mesh((n_replicas, n_shards), axes)
+
+
+def replica_submeshes(mesh, replica_axis: str = "data"):
+    """Split a replicated mesh into one single-row submesh per replica
+    (each over the remaining axes).  Row 0 is the primary's mesh; every
+    replica's shard_map'd steps compile against its own row, so the
+    per-shard step code is identical to the unreplicated path."""
+    from jax.sharding import Mesh
+
+    import numpy as np
+
+    axis = mesh.axis_names.index(replica_axis)
+    devs = np.moveaxis(np.asarray(mesh.devices), axis, 0)
+    rest = tuple(a for a in mesh.axis_names if a != replica_axis)
+    return [Mesh(devs[i], rest) for i in range(devs.shape[0])]
+
+
 def current_mesh():
     """The ambient (abstract) mesh, across jax versions.
 

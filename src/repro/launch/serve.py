@@ -39,6 +39,15 @@ def _print_report(service) -> None:
     print(f"queue: batches={q['batches']} rows={q['rows']} "
           f"pad_waste={q['padding_waste_frac']:.3f} "
           f"depth_avg={q['depth_rows_avg']:.0f} depth_max={q['depth_rows_max']}")
+    r = rep.get("replicas")
+    if r:
+        lags = [x["lag"] for x in r["per_replica"]]
+        print(f"replicas: n={r['n_replicas']} "
+              f"routed={r['routed_batches']} "
+              f"fallback={r['fallback_primary']} "
+              f"published={r['published']} "
+              f"max_lag_seen={max(lags) if lags else 0} "
+              f"catchups={sum(x['catchups'] for x in r['per_replica'])}")
     if d["durable"]:
         wal = d.get("wal", {})
         print(f"durability: recovered={d['recovered']} "
@@ -74,6 +83,7 @@ def build_spec(args):
             search_k=10, nprobe=args.nprobe, policy=args.policy,
             fg_bg_ratio=args.ratio, backlog_threshold=args.threshold,
             async_serve=args.async_serve, max_wait_ms=args.max_wait_ms,
+            max_lag=args.max_lag,
         ),
         scan=spfresh.ScanSpec(
             probe_chunk=args.probe_chunk,
@@ -92,7 +102,8 @@ def build_spec(args):
             group_commit_ms=args.group_commit_ms,
             compact_wal=args.compact_wal,
         ),
-        shards=spfresh.ShardSpec(n_shards=args.shards),
+        shards=spfresh.ShardSpec(n_shards=args.shards,
+                                 n_replicas=args.replicas),
     )
 
 
@@ -166,6 +177,15 @@ def main() -> None:
                     help="BacklogPolicy firing threshold")
     ap.add_argument("--shards", type=int, default=1,
                     help=">1: serve an N-shard mesh on fake CPU devices")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="total index copies including the primary (>1: "
+                         "read replicas fed by the async WAL replication "
+                         "stream serve searches; sharded mode needs "
+                         "shards*replicas fake devices)")
+    ap.add_argument("--max-lag", type=int, default=64,
+                    help="replica freshness bound in WAL seqnos: a search "
+                         "falls back to the primary rather than land on a "
+                         "replica lagging more than this")
     ap.add_argument("--probe-chunk", type=int, default=0,
                     help="oracle scan path: stream probes in chunks")
     ap.add_argument("--scan", choices=["oracle", "per_query", "batched"],
@@ -189,8 +209,11 @@ def main() -> None:
     args.durable = args.durable or args.snapshot
 
     if args.shards > 1:
+        # a replicated sharded service lives on a (data=replicas,
+        # model=shards) mesh — one fake device per index copy per shard
+        n_dev = args.shards * max(args.replicas, 1)
         os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.shards} "
+            f"--xla_force_host_platform_device_count={n_dev} "
             + os.environ.get("XLA_FLAGS", "")
         )
         os.environ.setdefault("JAX_PLATFORMS", "cpu")

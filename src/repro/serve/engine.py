@@ -244,6 +244,33 @@ class LocalBackend(DurableBackend):
     def stats(self):
         return self.index.stats()
 
+    # ---------------- replication hooks (replica cloning) ---------------
+    def fork_state(self):
+        """Deep copy of the index state.  The padded update entry points
+        donate their state buffers, so a replica sharing references with
+        the primary would be invalidated by the next update dispatch."""
+        import jax
+
+        return jax.tree_util.tree_map(lambda x: x.copy(), self.index.state)
+
+    def adopt_state(self, state) -> None:
+        self.index.state = state
+
+    def clone(self) -> "LocalBackend":
+        """A read replica of this backend: same scan config, its own
+        deep-copied state, no access telemetry of its own (replayed
+        ``maintain`` records carry the primary's logged access counts —
+        folding replica-local counts on top would break bit-parity)."""
+        twin = LocalBackend(
+            SPFreshIndex(self.fork_state()),
+            probe_chunk=self.probe_chunk,
+            use_pallas_scan=self.use_pallas_scan,
+            scan_schedule=self.scan_schedule,
+            track_access=False,
+        )
+        twin._wal_applied = self._wal_applied
+        return twin
+
     # --------------- durability hooks (DurableBackend) -----------------
     def _snapshot_state(self):
         return self.index.state
@@ -319,6 +346,9 @@ class EngineConfig:
     async_serve: bool = False
     max_wait_ms: float = 0.0     # batch-formation window (async queue)
     max_inflight: int = 2        # deferred search readbacks in flight
+    # --- read replicas (distributed/replication.py) ---
+    max_lag: int = 64            # replica freshness bound (WAL seqnos)
+    replica_inflight: int = 2    # routed batches per replica in flight
     # Deferred background slots tolerated before one runs inline even
     # under load — keeps the steady-state slot rate equal to sync mode's
     # when the queue never goes idle.
@@ -377,6 +407,8 @@ class ServeMetrics:
             op: _LatReservoir(reservoir, seed=i)
             for i, op in enumerate((SEARCH, INSERT, DELETE))
         }
+        # tickets complete from the pump AND from replica worker threads
+        self._note_lock = threading.Lock()
         self.maint_slots = 0
         self.maint_rounds = 0
         self.maint_steps = 0
@@ -393,7 +425,8 @@ class ServeMetrics:
 
     def note_ticket(self, ticket: Ticket) -> None:
         if ticket.latency_s is not None:
-            self.lat[ticket.op].add(ticket.latency_s)
+            with self._note_lock:
+                self.lat[ticket.op].add(ticket.latency_s)
 
     def note_maintenance(self, steps: int, dt: float, rounds: int = 1,
                          idle: bool = False) -> None:
@@ -409,7 +442,8 @@ class ServeMetrics:
         res = self.lat.get(op)
         if res is None or not res.values():
             return {}
-        arr = np.asarray(res.values()) * 1e3
+        with self._note_lock:
+            arr = np.asarray(res.values()) * 1e3
         return {
             "p50_ms": float(np.percentile(arr, 50)),
             "p90_ms": float(np.percentile(arr, 90)),
@@ -453,7 +487,7 @@ class ServeEngine:
     FIELD_OWNERSHIP = {
         # bound once in __init__, immutable after
         "cfg": INIT, "backend": INIT, "policy": INIT, "queue": INIT,
-        "metrics": INIT, "_work": INIT, "_stop": INIT,
+        "metrics": INIT, "_work": INIT, "_stop": INIT, "replicas": INIT,
         # shared mutable pipeline state: only under _work
         "_inflight": GUARDED, "_unacked": GUARDED, "_maint_due": GUARDED,
         # pump-thread-only writes; racy reads are benign by design
@@ -468,6 +502,7 @@ class ServeEngine:
         backend: IndexBackend | SPFreshIndex,
         cfg: EngineConfig | None = None,
         policy: MaintenancePolicy | None = None,
+        replicas=None,
     ):
         self.cfg = cfg or EngineConfig()
         if isinstance(backend, SPFreshIndex):
@@ -486,6 +521,9 @@ class ServeEngine:
             max_wait_ms=self.cfg.max_wait_ms if self.cfg.async_serve else 0.0,
         )
         self.metrics = ServeMetrics(self.cfg.lat_reservoir)
+        # read replicas (a bound ReplicaSet, distributed/replication.py):
+        # the pump offers every SEARCH batch to replicas.route() first
+        self.replicas = replicas
         # --- async pump state (all mutated under _work on the pump) ---
         self._work = threading.RLock()   # serializes WAL append + dispatch
         self._inflight: deque[tuple[MicroBatch, Callable]] = deque()
@@ -523,17 +561,21 @@ class ServeEngine:
         t.start()
 
     def shutdown(self, timeout: float = 60.0) -> None:
-        """Stop the pump thread.  Queued batches, in-flight readbacks and
-        unacked tickets are drained first, so no waiter is stranded."""
+        """Stop the pump thread (and any replica workers).  Queued
+        batches, in-flight readbacks and unacked tickets are drained
+        first, so no waiter is stranded."""
         t = self._pump_thread
-        if t is None:
-            return
-        self._stop.set()
-        self.queue.wake()
-        t.join(timeout)
-        if t.is_alive():
-            raise RuntimeError("serve pump thread failed to stop")
-        self._pump_thread = None
+        if t is not None:
+            self._stop.set()
+            self.queue.wake()
+            t.join(timeout)
+            if t.is_alive():
+                raise RuntimeError("serve pump thread failed to stop")
+            self._pump_thread = None
+        if self.replicas is not None:
+            # after the pump: replica workers first finish any batch the
+            # pump's shutdown drain routed to them
+            self.replicas.stop(timeout)
 
     @contextlib.contextmanager
     def exclusive(self):
@@ -687,6 +729,7 @@ class ServeEngine:
                     len(self.queue) == 0 and not self._busy
                     and not self._inflight and not self._unacked
                     and self._maint_due <= 0
+                    and (self.replicas is None or self.replicas.idle())
                 )
             if idle:
                 return
@@ -697,11 +740,20 @@ class ServeEngine:
     def _pump_until(self, ticket: Ticket) -> None:
         while not ticket.done:
             if self.pump(max_batches=1) == 0:
+                if self.replicas is not None:
+                    # the batch was routed: wait for the replica worker's
+                    # signal instead of spinning on an empty queue
+                    if ticket._event.wait(timeout=60.0) or ticket.done:
+                        continue
                 raise RuntimeError("ticket still pending on an empty queue")
 
     @holds_work
     def _process(self, batch: MicroBatch) -> None:
         if batch.op == SEARCH:
+            if self.replicas is not None and self.replicas.route(batch):
+                # served on a replica worker thread (which scatters,
+                # notes metrics and signals) — nothing more to do here
+                return
             k, nprobe = batch.key
             # batch.valid masks padded rows out of the access telemetry
             # (their result rows are computed and discarded, as before).
@@ -929,6 +981,9 @@ class ServeEngine:
             "insert_stall_s": m.insert_stall_s,
             "insert_dropped": m.insert_dropped,
             "backlog": self.backend.backlog(),
+            "replicas": (
+                self.replicas.report() if self.replicas is not None else None
+            ),
         }
 
     def stats(self) -> dict:

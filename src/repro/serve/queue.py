@@ -80,20 +80,25 @@ class Ticket:
         self._pending = 0                 # parts not yet processed
         self._buffers: dict[str, np.ndarray] = {}
         self._event = threading.Event()
+        # Parts of one ticket may complete from different threads (the
+        # pump and replica workers both scatter results), so the pending
+        # count and buffer creation are guarded.
+        self._lock = threading.Lock()
 
     @property
     def done(self) -> bool:
         return self._pending == 0
 
     def _complete_part(self, start: int, n: int, arrays: dict[str, np.ndarray]):
-        for name, arr in arrays.items():
-            if name not in self._buffers:
-                shape = (self.n,) + arr.shape[1:]
-                self._buffers[name] = np.zeros(shape, arr.dtype)
-            self._buffers[name][start : start + n] = arr[:n]
-        self._pending -= 1
-        if self._pending == 0:
-            self.t_done = time.perf_counter()
+        with self._lock:
+            for name, arr in arrays.items():
+                if name not in self._buffers:
+                    shape = (self.n,) + arr.shape[1:]
+                    self._buffers[name] = np.zeros(shape, arr.dtype)
+                self._buffers[name][start : start + n] = arr[:n]
+            self._pending -= 1
+            if self._pending == 0:
+                self.t_done = time.perf_counter()
 
     def _signal(self) -> None:
         """Release waiters (engine-owned: the pump thread calls this after
@@ -221,7 +226,8 @@ class RequestQueue:
                 t_enq=now,
             ))
         with self._cond:
-            ticket._pending += len(parts)
+            with ticket._lock:
+                ticket._pending += len(parts)
             self._fifo.extend(parts)
             self._depth_rows += n
             self.max_depth_rows = max(self.max_depth_rows, self._depth_rows)
@@ -245,6 +251,19 @@ class RequestQueue:
     def wake(self) -> None:
         """Wake a consumer blocked in ``pop_batch`` (e.g. for shutdown)."""
         with self._cond:
+            self._cond.notify_all()
+
+    def requeue(self, parts: list[_Part]) -> None:
+        """Push already-submitted parts back onto the HEAD of the queue
+        (a failed replica hands its routed batches back this way).  The
+        owning tickets' pending counts still include these parts, so no
+        re-accounting — they simply get popped and served again."""
+        if not parts:
+            return
+        with self._cond:
+            self._fifo.extendleft(reversed(parts))
+            self._depth_rows += sum(p.n for p in parts)
+            self.max_depth_rows = max(self.max_depth_rows, self._depth_rows)
             self._cond.notify_all()
 
     def wait_nonempty(self, timeout: float | None = None) -> bool:

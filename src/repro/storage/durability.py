@@ -42,6 +42,7 @@ class DurableBackend:
     wal_set = None
     _wal_applied = -1
     _replaying = False
+    _repl_sink = None
 
     # ------------------------- subclass hooks --------------------------
     def _snapshot_state(self):
@@ -65,8 +66,24 @@ class DurableBackend:
 
     # ------------------------- the lifecycle ---------------------------
     def _log(self, op: str, payload: dict) -> None:
-        if self.wal_set is not None and not self._replaying:
+        if self._replaying:
+            return
+        if self.wal_set is not None:
             self._wal_applied = self.wal_set.append(op, payload)
+        if self._repl_sink is not None:
+            if self.wal_set is None:
+                # Ephemeral service: no durable log, but replicas still
+                # need a contiguous dispatch stream — mint local seqnos.
+                self._wal_applied += 1
+            self._repl_sink.publish(self._wal_applied, op, payload)
+
+    def attach_replication(self, sink) -> None:
+        """``sink.publish(seqno, op, payload)`` is called for every logged
+        update dispatch, AFTER the WAL append assigns its seqno (so a
+        published record is already durable when durability is on).  The
+        sink must be cheap and non-blocking: it runs on the serialized
+        pump thread, upstream of the ack point."""
+        self._repl_sink = sink
 
     def attach_durability(self, wal_set, applied_seqno: int | None = None,
                           ) -> None:

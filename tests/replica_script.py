@@ -1,0 +1,154 @@
+"""Read replicas over the 2-shard × 2-replica (data, model) mesh — run
+as a subprocess with 4 fake CPU devices (spawned by
+tests/test_replication.py so the main pytest process keeps one device).
+
+The replica-aware CI leg, executable: with ``n_replicas=2, n_shards=2``
+the service opens a 4-device mesh, the primary row alone runs the
+WAL-append + dispatch order, and the replica row replays the published
+stream in seqno order.  The suite checks the four replica contracts:
+
+* routing fan-out — search batches land on the replica worker;
+* lag-bound fallback — a replica past ``max_lag`` is skipped and the
+  batch is served on the primary (counted);
+* catch-up after induced lag — a window overflow forces the
+  snapshot-fork + tail-replay path;
+* bit-parity at equal seqno — the replica's stacked state equals the
+  primary's on every content leaf once both have applied the same seqno.
+"""
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+import spfresh
+from repro.core.types import LireConfig
+from repro.distributed.replication import states_equal
+
+assert len(jax.devices()) == 4, jax.devices()
+
+root = sys.argv[1] if len(sys.argv) > 1 else tempfile.mkdtemp()
+
+CFG = LireConfig(
+    dim=16, block_size=8, max_blocks_per_posting=8, num_blocks=1024,
+    num_postings_cap=128, num_vectors_cap=4096, split_limit=48,
+    merge_limit=6, reassign_range=8, reassign_budget=128, replica_count=2,
+    nprobe=8,
+)
+SPEC = (
+    spfresh.ServiceSpec(
+        index=spfresh.IndexSpec(config=CFG),
+        serve=spfresh.ServeSpec(search_k=10, max_batch=64, min_bucket=16,
+                                async_serve=True),
+    )
+    .with_durability(os.path.join(root, "svc"))
+    .with_shards(2)
+    .with_replicas(2, max_lag=4)
+)
+
+
+def make_clustered(rng, n, d, n_clusters=8, spread=0.05):
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, size=n)
+    return (centers[assign] + spread * rng.normal(size=(n, d))).astype(
+        np.float32)
+
+
+rng = np.random.default_rng(0)
+base = make_clustered(rng, 1000, 16, n_clusters=10)
+
+svc = spfresh.open(SPEC, vectors=base)
+rs = svc.replicas
+assert rs is not None and len(rs.replicas) == 1
+# the primary and the replica compile on DISJOINT mesh rows: replication
+# composes with sharding instead of timesharing the primary's devices
+prim_dev = set(d.id for d in svc.backend.mesh.devices.flat)
+repl_dev = set(d.id for d in rs.replicas[0].backend.mesh.devices.flat)
+assert len(prim_dev) == 2 and len(repl_dev) == 2
+assert not (prim_dev & repl_dev), (prim_dev, repl_dev)
+print("PASS replicated_mesh_rows_disjoint")
+
+# ---- bit-parity at equal seqno ----
+new = make_clustered(rng, 60, 16, n_clusters=3)
+handles = []
+for s in range(0, 60, 20):
+    h, landed = svc.insert(new[s:s + 20])
+    assert landed.all()
+    handles.extend(h.tolist())
+svc.delete(np.asarray(handles[:8], np.int32))
+svc.drain()
+rs.wait_sync()
+rep = rs.report()
+assert rep["per_replica"][0]["lag"] == 0, rep
+assert rep["published"] > 0
+assert states_equal(svc.backend.stacked, rs.replicas[0].backend.stacked)
+print("PASS bit_parity_at_equal_seqno (seqno=%d)" % rep["primary_seqno"])
+
+# ---- routing fan-out: searches land on the replica worker ----
+routed0 = rs.routed
+queries = np.concatenate([new[8:16], base[:8]])
+d0, v0 = svc.search(queries, k=10)
+for _ in range(4):
+    d1, v1 = svc.search(queries, k=10)
+    np.testing.assert_array_equal(v0, v1)   # replica answers == replica answers
+    np.testing.assert_allclose(d0, d1, rtol=1e-5)
+rep = rs.report()
+assert rs.routed > routed0, (rs.routed, routed0, rs.fallback)
+assert rep["per_replica"][0]["batches"] > 0, rep
+# at equal seqno the replica's answers equal the primary's own
+with svc.engine.exclusive():
+    dp, vp = svc.backend.search(queries, 10, None)
+np.testing.assert_array_equal(v0, np.asarray(vp))
+np.testing.assert_allclose(d0, np.asarray(dp), rtol=1e-5)
+print("PASS routing_fanout routed=%d" % rs.routed)
+
+# ---- lag-bound fallback: a stale replica is skipped, not served ----
+rs.pause(0)
+wave = make_clustered(rng, 48, 16, n_clusters=2)
+h2 = []
+for s in range(0, 48, 6):            # 8 separate dispatches: lag > max_lag
+    h, landed2 = svc.insert(wave[s:s + 6])
+    assert landed2.all()
+    h2.extend(h.tolist())
+h2 = np.asarray(h2)
+svc.drain()
+rep = rs.report()["per_replica"][0]
+assert rep["lag"] > SPEC.serve.max_lag, rep   # > max_lag=4 dispatches behind
+fb0, routed1 = rs.fallback, rs.routed
+_, hit = svc.search(wave[:8], k=1)
+assert rs.fallback > fb0, (rs.fallback, fb0)
+assert rs.routed == routed1                   # nothing routed while stale
+# fallback answers are PRIMARY answers: the paused replica has never
+# seen this wave, yet the fresh inserts are recalled
+assert (hit[:, 0] == h2[:8]).all(), (hit[:, 0], h2[:8])
+print("PASS lag_bound_fallback fallback=%d" % rs.fallback)
+
+# ---- catch-up after induced lag: window overflow -> snapshot fork ----
+rs.window_cap = 4          # shrink so the paused replica falls off the tail
+for s in range(6):
+    svc.insert(make_clustered(rng, 8, 16, n_clusters=2))
+svc.drain()
+rs.resume(0)
+rs.wait_sync()
+rep = rs.report()["per_replica"][0]
+assert rep["catchups"] >= 1, rep
+assert rep["lag"] == 0, rep
+assert states_equal(svc.backend.stacked, rs.replicas[0].backend.stacked)
+# and the caught-up replica serves routed searches again
+routed2 = rs.routed
+for _ in range(3):
+    svc.search(base[:16], k=5)
+assert rs.routed > routed2, (rs.routed, routed2, rs.fallback)
+print("PASS catch_up_after_induced_lag catchups=%d" % rep["catchups"])
+
+svc.close()
+print("ALL_REPLICA_PASS")

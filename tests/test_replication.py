@@ -1,0 +1,436 @@
+"""Read-replica replication: routing, freshness bound, window, catch-up.
+
+Two layers:
+
+1. **Logic tests** (tier-1, fast) — ReplicaSet's routing/window/catch-up
+   machinery driven through duck-typed fake backends, so round-robin
+   order, the inflight cap, the ``max_lag`` freshness bound, window
+   eviction → ``_GAP``, ordered replay, and failure rerouting are each
+   pinned deterministically without building an index.
+2. **Service gates** (``gate`` marker, run as an explicit check.sh
+   step) — a real replicated durable service: bit-parity at equal seqno,
+   induced-lag fallback, snapshot catch-up, parity through checkpoint
+   and crash recovery; plus the 2-shard × 2-replica mesh suite in a
+   4-fake-device subprocess (``replica_script.py``).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import time
+from contextlib import contextmanager
+
+import numpy as np
+import pytest
+
+from repro.distributed.replication import _GAP, ReplicaSet, states_equal
+from repro.serve.queue import MicroBatch
+from repro.storage.wal import WalRecord
+
+
+# ---------------------------------------------------------------------------
+# Fakes
+# ---------------------------------------------------------------------------
+
+class FakeBackend:
+    """Duck-typed DurableBackend: ordered replay + forkable state."""
+
+    def __init__(self, marker: int = 0):
+        self.marker = marker
+        self._wal_applied = -1
+        self.replayed: list[WalRecord] = []
+        self.adopted = None
+
+    def replay(self, records, after_seqno: int = -1) -> int:
+        n = 0
+        for r in records:
+            if r.seqno <= after_seqno:
+                continue
+            assert r.seqno == self._wal_applied + 1, (
+                "out-of-order replay", r.seqno, self._wal_applied)
+            self.replayed.append(r)
+            self._wal_applied = r.seqno
+            n += 1
+        return n
+
+    def search(self, queries, k, nprobe, valid=None):
+        n = len(queries)
+        return (np.zeros((n, k), np.float32),
+                np.full((n, k), self.marker, np.int32))
+
+    def fork_state(self):
+        return ("fork", self._wal_applied)
+
+    def adopt_state(self, state):
+        self.adopted = state
+
+
+class FailingBackend(FakeBackend):
+    def search(self, queries, k, nprobe, valid=None):
+        raise RuntimeError("replica scan exploded")
+
+
+class FakeQueue:
+    def __init__(self):
+        self.requeued = []
+
+    def requeue(self, parts):
+        self.requeued.append(list(parts))
+
+
+class FakeEngine:
+    def __init__(self):
+        self.queue = FakeQueue()
+        self.metrics = type("M", (), {"note_ticket": lambda s, t: None})()
+
+    @contextmanager
+    def exclusive(self):
+        yield
+
+
+def rec(seqno: int) -> WalRecord:
+    return WalRecord("delete", {"vids": np.asarray([seqno])}, seqno)
+
+
+def search_batch(n: int = 4, k: int = 5) -> MicroBatch:
+    return MicroBatch(
+        op="search", key=(k, None), parts=[],
+        arrays={"queries": np.zeros((n, 4), np.float32)},
+        n_valid=n, bucket=n,
+    )
+
+
+def make_set(n_replicas=1, *, cls=FakeBackend, **kw) -> ReplicaSet:
+    primary = FakeBackend(marker=-1)
+    return ReplicaSet(
+        primary, [cls(marker=i) for i in range(n_replicas)], **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# Routing (workers never started: pure bookkeeping)
+# ---------------------------------------------------------------------------
+
+def test_route_round_robins_over_replicas():
+    rs = make_set(2, inflight=8)
+    for _ in range(4):
+        assert rs.route(search_batch())
+    assert [len(r.batches) for r in rs.replicas] == [2, 2]
+    assert rs.routed == 4 and rs.fallback == 0
+    assert [r.inflight for r in rs.replicas] == [2, 2]
+
+
+def test_route_ignores_non_search_ops():
+    rs = make_set(1)
+    assert not rs.route(MicroBatch(
+        op="insert", key=(), parts=[], arrays={}, n_valid=4, bucket=4))
+    assert rs.routed == 0 and rs.fallback == 0   # not even counted
+
+
+def test_route_inflight_cap_then_fallback():
+    rs = make_set(2, inflight=1)
+    assert rs.route(search_batch()) and rs.route(search_batch())
+    assert not rs.route(search_batch())          # both at the cap
+    assert rs.fallback == 1 and rs.routed == 2
+
+
+def test_route_skips_replica_past_max_lag():
+    rs = make_set(2, max_lag=3, inflight=8)
+    rs.primary._wal_applied = 10
+    rs.replicas[0].backend._wal_applied = 5      # lag 5 > 3: stale
+    rs.replicas[1].backend._wal_applied = 8      # lag 2: fresh
+    for _ in range(3):
+        assert rs.route(search_batch())
+    assert len(rs.replicas[0].batches) == 0
+    assert len(rs.replicas[1].batches) == 3
+    # everyone stale: fallback to the primary
+    rs.replicas[1].backend._wal_applied = 0
+    assert not rs.route(search_batch())
+    assert rs.fallback == 1
+
+
+def test_route_skips_failed_replica():
+    rs = make_set(2, inflight=8)
+    rs.replicas[0].error = RuntimeError("dead")
+    for _ in range(3):
+        assert rs.route(search_batch())
+    assert len(rs.replicas[1].batches) == 3
+
+
+def test_route_copies_out_of_staging_buffers():
+    """The queue reuses per-bucket staging arrays: a routed batch must
+    hold its own copy or the next pop overwrites the queries under the
+    replica worker."""
+    rs = make_set(1)
+    b = search_batch()
+    staging = b.arrays["queries"]
+    assert rs.route(b)
+    staging[:] = 7.0                             # simulate buffer reuse
+    routed = rs.replicas[0].batches[0]
+    assert not np.shares_memory(routed.arrays["queries"], staging)
+    assert (routed.arrays["queries"] == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Window / publish / gap detection
+# ---------------------------------------------------------------------------
+
+def test_publish_window_is_bounded_and_gap_detected():
+    rs = make_set(1, window=4)
+    for s in range(10):
+        rs.publish(s, "delete", {"vids": np.asarray([s])})
+    assert [r.seqno for r in rs._window] == [6, 7, 8, 9]
+    r = rs.replicas[0]
+    assert rs._next_record(r) is _GAP            # cursor -1, tail evicted
+    r.backend._wal_applied = 6
+    nxt = rs._next_record(r)
+    assert nxt is not _GAP and nxt.seqno == 7    # contiguous from 6
+    r.backend._wal_applied = 9
+    assert rs._next_record(r) is None            # caught up
+    assert rs.published == 10
+
+
+def test_publish_copies_payload_arrays():
+    rs = make_set(1, window=8)
+    vids = np.asarray([1, 2, 3])
+    rs.publish(0, "delete", {"vids": vids})
+    vids[:] = -9                                 # engine reuses the buffer
+    np.testing.assert_array_equal(rs._window[0].payload["vids"], [1, 2, 3])
+
+
+def test_worker_replays_in_seqno_order_and_redelivery_is_noop():
+    rs = make_set(1, window=64)
+    rs.start()
+    try:
+        for s in range(20):
+            rs.primary._wal_applied = s
+            rs.publish(s, "delete", {"vids": np.asarray([s])})
+        rs.wait_sync(timeout=10)
+        r = rs.replicas[0]
+        assert [x.seqno for x in r.backend.replayed] == list(range(20))
+        # redelivery (at-least-once window semantics) must not re-apply
+        assert r.backend.replay([rec(3), rec(19)], after_seqno=r.applied) == 0
+        assert r.applied == 19
+    finally:
+        rs.stop()
+
+
+def test_catch_up_forks_primary_on_window_overflow():
+    rs = make_set(1, window=2)
+    rs.pause(0)
+    rs.start()
+    try:
+        for s in range(8):
+            rs.primary._wal_applied = s
+            rs.publish(s, "delete", {"vids": np.asarray([s])})
+        rs.resume(0)
+        rs.wait_sync(timeout=10)
+        r = rs.replicas[0]
+        assert r.catchups >= 1
+        assert r.backend.adopted == ("fork", 7)  # forked AT the head seqno
+        assert r.applied == 7
+        assert rs.report()["per_replica"][0]["lag"] == 0
+    finally:
+        rs.stop()
+
+
+def test_failed_worker_reroutes_pending_batches():
+    rs = make_set(1, cls=FailingBackend, inflight=8)
+    eng = FakeEngine()
+    rs.bind(eng)
+    b1 = search_batch()
+    b2 = dataclasses.replace(search_batch(), parts=["p2"])
+    b3 = dataclasses.replace(search_batch(), parts=["p3"])
+    for b in (b1, b2, b3):
+        assert rs.route(b)
+    rs.start()
+    try:
+        deadline = time.monotonic() + 10
+        while rs.replicas[0].error is None:
+            assert time.monotonic() < deadline, "replica never failed"
+            time.sleep(0.005)
+    finally:
+        rs.stop()
+    # b1 crashed in-flight; b2/b3 were handed back to the engine queue
+    assert eng.queue.requeued == [["p2"], ["p3"]]
+    # a failed replica is out of rotation: the next route falls back
+    assert not rs.route(search_batch())
+    assert rs.fallback == 1
+
+
+def test_wait_sync_times_out_on_a_stuck_replica():
+    rs = make_set(1)
+    rs.primary._wal_applied = 5
+    with pytest.raises(TimeoutError):
+        rs.wait_sync(timeout=0.05)
+
+
+def test_report_shape():
+    rs = make_set(2, max_lag=7, inflight=3, window=32)
+    rs.primary._wal_applied = 4
+    rep = rs.report()
+    assert rep["n_replicas"] == 3                # total copies incl. primary
+    assert rep["max_lag"] == 7 and rep["inflight_cap"] == 3
+    assert rep["window"] == 32 and rep["primary_seqno"] == 4
+    assert [x["lag"] for x in rep["per_replica"]] == [5, 5]
+
+
+def test_states_equal_is_bitwise():
+    a = {"x": np.arange(4, dtype=np.float32), "y": np.ones(2, np.int32)}
+    b = {"x": np.arange(4, dtype=np.float32), "y": np.ones(2, np.int32)}
+    assert states_equal(a, b)
+    b["y"] = np.ones(2, np.int64)                # dtype drift
+    assert not states_equal(a, b)
+    b["y"] = np.asarray([1, 2], np.int32)        # value drift
+    assert not states_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Real-service gates
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def replicated_spec(tmp_path):
+    from tests.test_service_api import tiny_spec
+
+    spec = tiny_spec(tmp_path / "svc")
+    spec = dataclasses.replace(
+        spec, serve=dataclasses.replace(spec.serve, async_serve=True)
+    )
+    return spec.with_replicas(2, max_lag=4)
+
+
+@pytest.mark.gate
+def test_replicated_service_parity_fallback_catchup_recovery(
+        replicated_spec, rng):
+    """The local-backend end-to-end gate: one durable replicated service
+    through the full replica lifecycle — parity at equal seqno, the
+    freshness-bound fallback under induced lag, window-overflow snapshot
+    catch-up, parity across a primary checkpoint, and a recovery reopen
+    whose replicas start bit-identical at the recovered seqno."""
+    import spfresh
+    from tests.conftest import make_clustered
+
+    base = make_clustered(rng, 600, 16, n_clusters=4)
+    svc = spfresh.open(replicated_spec, vectors=base)
+    rs = svc.replicas
+    assert rs is not None and len(rs.replicas) == 1
+
+    # parity at equal seqno
+    vecs = make_clustered(rng, 24, 16, n_clusters=2)
+    for s in range(0, 24, 8):
+        svc.insert(vecs[s:s + 8],
+                   np.arange(2000 + s, 2008 + s, dtype=np.int32))
+    svc.drain()
+    rs.wait_sync()
+    assert states_equal(svc.backend.index.state,
+                        rs.replicas[0].backend.index.state)
+
+    # routed searches answer like the primary at equal seqno
+    routed0 = rs.routed
+    q = np.concatenate([vecs[:8], base[:8]])
+    d0, v0 = svc.search(q, k=10)
+    assert rs.routed > routed0
+    with svc.engine.exclusive():
+        dp, vp = svc.backend.search(q, 10, None)
+    np.testing.assert_array_equal(v0, np.asarray(vp))
+    np.testing.assert_allclose(d0, np.asarray(dp), rtol=1e-5)
+
+    # induced lag beyond max_lag: searches fall back to the primary
+    rs.pause(0)
+    wave = make_clustered(rng, 24, 16, n_clusters=2)
+    for s in range(0, 24, 4):                    # 6 dispatches > max_lag=4
+        svc.insert(wave[s:s + 4],
+                   np.arange(3000 + s, 3004 + s, dtype=np.int32))
+    svc.drain()
+    assert rs.report()["per_replica"][0]["lag"] > replicated_spec.serve.max_lag
+    fb0, routed1 = rs.fallback, rs.routed
+    _, hit = svc.search(wave[:6], k=1)
+    assert rs.fallback > fb0 and rs.routed == routed1
+    assert (hit[:, 0] == np.arange(3000, 3006)).all()   # primary answered
+
+    # window overflow while paused → snapshot catch-up on resume
+    rs.window_cap = 4
+    for s in range(5):
+        svc.insert(make_clustered(rng, 4, 16),
+                   np.arange(4000 + 4 * s, 4004 + 4 * s, dtype=np.int32))
+    svc.drain()
+    rs.resume(0)
+    rs.wait_sync()
+    rep = rs.report()["per_replica"][0]
+    assert rep["catchups"] >= 1 and rep["lag"] == 0
+    assert states_equal(svc.backend.index.state,
+                        rs.replicas[0].backend.index.state)
+
+    # a primary checkpoint (dirty-ledger bookkeeping) must not break parity
+    svc.checkpoint()
+    svc.insert(make_clustered(rng, 8, 16),
+               np.arange(5000, 5008, dtype=np.int32))
+    svc.drain()
+    rs.wait_sync()
+    assert states_equal(svc.backend.index.state,
+                        rs.replicas[0].backend.index.state)
+    want = svc.search(q, k=10)
+    svc.close()
+
+    # recovery: replicas of a reopened service start bit-identical at the
+    # recovered seqno and serve immediately
+    twin = spfresh.open(replicated_spec)
+    assert twin.recovered
+    rs2 = twin.replicas
+    assert states_equal(twin.backend.index.state,
+                        rs2.replicas[0].backend.index.state)
+    assert rs2.replicas[0].applied == int(twin.backend._wal_applied)
+    got = twin.search(q, k=10)
+    np.testing.assert_array_equal(want[1], got[1])
+    np.testing.assert_allclose(want[0], got[0], rtol=1e-5)
+    twin.close()
+
+
+@pytest.mark.gate
+def test_ephemeral_replication_mints_local_seqnos(rng):
+    """No durable root: ``_log`` mints a contiguous local seqno stream so
+    replicas stay consistent without a WAL (sync engine: routing happens
+    on the cooperative pump path too)."""
+    import spfresh
+    from tests.conftest import make_clustered
+    from tests.test_service_api import tiny_spec
+
+    spec = tiny_spec().with_replicas(2, max_lag=8)
+    base = make_clustered(rng, 500, 16, n_clusters=4)
+    svc = spfresh.open(spec, vectors=base)
+    rs = svc.replicas
+    assert svc.backend.wal_set is None
+    vecs = make_clustered(rng, 16, 16)
+    for s in range(0, 16, 8):
+        svc.insert(vecs[s:s + 8],
+                   np.arange(2000 + s, 2008 + s, dtype=np.int32))
+    svc.drain()
+    rs.wait_sync()
+    assert rs.report()["primary_seqno"] >= 1     # minted, not WAL-assigned
+    assert states_equal(svc.backend.index.state,
+                        rs.replicas[0].backend.index.state)
+    routed0 = rs.routed
+    _, hit = svc.search(vecs[:8], k=1)
+    assert rs.routed > routed0                   # sync pump routed it
+    assert (hit[:, 0] == np.arange(2000, 2008)).all()
+    svc.close()
+
+
+@pytest.mark.gate
+@pytest.mark.slow
+def test_replicas_over_two_shard_two_replica_mesh(tmp_path):
+    """The replica-aware CI leg: 2 shards × 2 replicas on a 4-fake-device
+    (data, model) mesh, in a subprocess so the main pytest process keeps
+    one device."""
+    script = os.path.join(os.path.dirname(__file__), "replica_script.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, script, str(tmp_path)],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "ALL_REPLICA_PASS" in proc.stdout

@@ -309,3 +309,22 @@ def test_fixture_tree_parses_under_expected_names():
         "badpkg", "badpkg.types", "badpkg.stamps", "badpkg.steps",
         "badpkg.serve_bad", "badpkg.kern_bad",
     } <= set(mods)
+
+
+def test_pytest_never_collects_the_fixture_tree():
+    """pytest.ini pins ``norecursedirs = tests/fixtures/spflint``: the
+    seeded-violation package is broken ON PURPOSE, so pytest must never
+    recurse into it — a ``test_*.py`` landing there would otherwise be
+    imported at collection time and take the whole suite down.  Run a
+    real collection pass over tests/ and assert the pin holds."""
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "--co", "-p", "no:cacheprovider", "tests/fixtures"],
+        capture_output=True, text=True, cwd=REPO, timeout=120,
+    )
+    # exit code 5 = "no tests collected" — exactly what the pin demands
+    assert proc.returncode == 5, proc.stdout + proc.stderr
+    assert "spflint" not in proc.stdout

@@ -558,6 +558,102 @@ def test_compact_wal_records_drops_dead_insert_rows():
         "insert", "delete", "delete", "insert", "maintain"]
 
 
+# ---------------------------------------------------------------------------
+# Replication stream (read replicas tail the dispatch log)
+# ---------------------------------------------------------------------------
+
+def _durable_backend(tmp_path, rng, n=400):
+    """A LocalBackend with a WalSet attached — the replication primary."""
+    from repro.serve.engine import LocalBackend
+
+    cfg = small_cfg()
+    base = make_clustered(rng, n, 16, n_clusters=4)
+    backend = LocalBackend(SPFreshIndex.build(cfg, base))
+    ws = WalSet(str(tmp_path / "wal"), 1)
+    backend.attach_durability(ws)
+    return backend, ws
+
+
+def _pad_insert(backend, rng, vid0, n=8):
+    vecs = make_clustered(rng, n, 16, n_clusters=2)
+    backend.insert(vecs, np.arange(vid0, vid0 + n, dtype=np.int32),
+                   np.ones(n, bool))
+
+
+def test_replica_tails_live_wal_in_seqno_order(tmp_path, rng):
+    """The async-replication contract over a LIVE WalSet tail: a replica
+    that repeatedly replays ``iter_wal(path, after_seqno=cursor)`` while
+    the primary keeps appending receives exactly the records past its
+    cursor, contiguous and in seqno order, and converges to bit-parity
+    every time it drains the tail."""
+    from repro.distributed.replication import states_equal
+
+    primary, ws = _durable_backend(tmp_path, rng)
+    replica = primary.clone()                  # applied == primary (-1)
+    path = ws.shard_path(0)
+    for step in range(3):
+        _pad_insert(primary, rng, 1000 + 100 * step)
+        primary.delete(np.asarray([1000 + 100 * step], np.int32),
+                       np.ones(1, bool))
+        cursor = replica._wal_applied
+        recs = list(iter_wal(path, after_seqno=cursor))
+        assert [r.seqno for r in recs] == list(
+            range(cursor + 1, primary._wal_applied + 1))
+        replica.replay(recs, after_seqno=cursor)
+        assert replica._wal_applied == primary._wal_applied
+        assert states_equal(primary.index.state, replica.index.state)
+
+
+def test_replica_replay_is_idempotent_on_redelivery(tmp_path, rng):
+    """The window hands a replica at-least-once delivery: re-replaying
+    records at or below the cursor (an overlapping read of the tail)
+    must apply nothing and leave the state bit-identical."""
+    from repro.distributed.replication import states_equal
+
+    primary, ws = _durable_backend(tmp_path, rng)
+    replica = primary.clone()
+    for step in range(2):
+        _pad_insert(primary, rng, 2000 + 100 * step)
+    all_recs = list(iter_wal(ws.shard_path(0), after_seqno=-1))
+    assert replica.replay(all_recs, after_seqno=replica._wal_applied) == 2
+    before = replica.fork_state()
+    # full redelivery, then an overlapping window: both no-ops
+    assert replica.replay(all_recs, after_seqno=replica._wal_applied) == 0
+    assert replica.replay(all_recs[-1:],
+                          after_seqno=replica._wal_applied) == 0
+    assert replica._wal_applied == primary._wal_applied
+    assert states_equal(before, replica.index.state)
+    assert states_equal(primary.index.state, replica.index.state)
+
+
+def test_replica_catchup_from_snapshot_plus_tail(tmp_path, rng):
+    """The window-overflow path: a replica too far behind adopts a fork
+    of the primary at seqno S and replays only the tail past S —
+    landing bit-identical to a replica that replayed everything."""
+    from repro.distributed.replication import states_equal
+
+    primary, ws = _durable_backend(tmp_path, rng)
+    patient = primary.clone()                  # replays the full stream
+    for step in range(2):
+        _pad_insert(primary, rng, 3000 + 100 * step)
+    fork, fork_seqno = primary.fork_state(), primary._wal_applied
+    for step in range(2):                      # the tail past the fork
+        _pad_insert(primary, rng, 4000 + 100 * step)
+
+    late = primary.clone()
+    late.adopt_state(fork)                     # snapshot catch-up
+    late._wal_applied = fork_seqno
+    tail = list(iter_wal(ws.shard_path(0), after_seqno=fork_seqno))
+    assert [r.seqno for r in tail] == [fork_seqno + 1, fork_seqno + 2]
+    late.replay(tail, after_seqno=fork_seqno)
+
+    patient.replay(list(iter_wal(ws.shard_path(0), after_seqno=-1)),
+                   after_seqno=patient._wal_applied)
+    assert late._wal_applied == patient._wal_applied == primary._wal_applied
+    assert states_equal(late.index.state, primary.index.state)
+    assert states_equal(late.index.state, patient.index.state)
+
+
 def test_compact_wal_records_leaves_sharded_streams_untouched():
     from repro.storage.wal import WalRecord, compact_wal_records
 

@@ -1,0 +1,270 @@
+#!/usr/bin/env python
+"""bench_diff — the bench-regression bot behind the nightly gate.
+
+Compares freshly regenerated ``BENCH_*.json`` reports against the
+checked-in baselines with per-metric tolerances, enforces each report's
+absolute invariants (the contracts that used to live as inline ``python
+- <<EOF`` steps in the workflow), renders one markdown table into
+``$GITHUB_STEP_SUMMARY`` (and stdout), and exits nonzero on any
+regression or violated invariant.
+
+    python tools/bench_diff.py --new-dir out BENCH_serve.json ...
+    python tools/bench_diff.py --new-dir out --all
+
+Tolerances by metric kind:
+
+* ``latency``  — regress if new > baseline × (1 + 20%)
+* ``bytes``    — regress if new > baseline × (1 + 10%)   (modeled scan
+  traffic: deterministic, so the slack only absorbs workload-size drift)
+* ``recall``   — regress if new < baseline − 0.01        (absolute)
+* ``info``     — reported, never gated (e.g. single-core open-loop tails
+  in BENCH_replicas.json, which are bistable run-to-run by design — see
+  the report's ``read_scaling_basis`` field)
+
+A missing baseline file or metric path is reported and tolerated (new
+benchmarks land before their first baseline); a missing NEW report is an
+error — the step that should have generated it failed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# Per-report specification
+# --------------------------------------------------------------------------
+
+TOL = {"latency": 0.20, "bytes": 0.10, "recall": 0.01}
+
+# (dotted path, kind) — kind keys TOL; "info" rows are never gated.
+METRICS: dict[str, list[tuple[str, str]]] = {
+    "BENCH_serve.json": [
+        ("summary.sync_search_p99_ms", "latency"),
+        ("summary.async_search_p99_ms", "latency"),
+        ("summary.search_p99_reduction_x", "info"),
+        ("summary.async_overlap_frac", "info"),
+    ],
+    "BENCH_search.json": [
+        ("paths.pallas_per_query.p99_ms", "latency"),
+        ("paths.pallas_batched.p99_ms", "latency"),
+        ("codecs.fp32.scan_bytes_per_query", "bytes"),
+        ("codecs.bf16.scan_bytes_per_query", "bytes"),
+        ("codecs.int8.scan_bytes_per_query", "bytes"),
+        ("codecs.fp32.recall_at_k", "recall"),
+        ("codecs.bf16.recall_at_k", "recall"),
+        ("codecs.int8.recall_at_k", "recall"),
+    ],
+    "BENCH_scenarios.json": [
+        ("scenarios.shift.drift_minus_size", "info"),
+    ],
+    "BENCH_recovery.json": [
+        ("recovery.replayed_rows_s", "info"),
+        ("snapshot.write_mb_s", "info"),
+        ("group_commit.fsync_reduction", "info"),
+    ],
+    "BENCH_update.json": [],
+    "BENCH_replicas.json": [
+        # Measured open-loop tails on the 1-core CI box are bistable —
+        # report, never gate (the gated numbers are the invariants below).
+        ("summary.p99_ms_1r", "info"),
+        ("summary.p99_ms_2r", "info"),
+        ("summary.goodput_ratio_2r_measured", "info"),
+    ],
+}
+
+# Absolute contracts, independent of any baseline.  Each entry:
+# (label, dotted path, op, bound).  op: ">=" / "<=" / "is_true", or
+# "<=path:" compare against another path in the same report.
+INVARIANTS: dict[str, list[tuple[str, str, str, object]]] = {
+    "BENCH_serve.json": [
+        ("async search p99 beats sync at the reference load",
+         "summary.async_search_p99_ms", "<=path",
+         "summary.sync_search_p99_ms"),
+        ("async leaves less rebuilder time inline than sync",
+         "summary.async_maint_inline_s", "<=path",
+         "summary.sync_maint_inline_s"),
+    ],
+    "BENCH_search.json": [
+        ("int8 scan traffic <= 0.30x fp32",
+         "codecs.int8.scan_bytes_per_query", "<=ratio",
+         ("codecs.fp32.scan_bytes_per_query", 0.30)),
+        ("bf16 scan-bytes saving >= 1.9x",
+         "codecs.bf16.scan_bytes_saving_vs_fp32", ">=", 1.9),
+        ("int8+rerank recall within 1% of fp32",
+         "codecs.int8.recall_delta_vs_fp32", ">=", -0.01),
+        ("bf16+rerank recall within 1% of fp32",
+         "codecs.bf16.recall_delta_vs_fp32", ">=", -0.01),
+    ],
+    "BENCH_scenarios.json": [
+        ("drift-aware policy >= size-only at equal budget",
+         "scenarios.shift.drift_minus_size", ">=", 0.0),
+        ("churn conserves the live set",
+         "scenarios.churn.summary.live_set_conserved", "is_true", True),
+    ],
+    "BENCH_replicas.json": [
+        ("read throughput scaling >= 1.6x at 2 replicas (modeled)",
+         "summary.read_scaling_2r", ">=", 1.6),
+        ("write-ack overhead with replication on <= 15%",
+         "summary.ack_overhead_frac", "<=", 0.15),
+        ("replica bit-identical to primary at equal seqno",
+         "summary.bit_identical_at_equal_seqno", "is_true", True),
+    ],
+}
+
+ALL_REPORTS = sorted(set(METRICS) | set(INVARIANTS))
+
+
+# --------------------------------------------------------------------------
+# Mechanics
+# --------------------------------------------------------------------------
+
+def get_path(report: dict, dotted: str):
+    cur = report
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, bool):
+        return str(v).lower()
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def diff_metric(kind: str, base, new) -> tuple[str, bool]:
+    """(status, failed) for one metric row."""
+    if new is None:
+        return "missing-new", True
+    if base is None:
+        return "no-baseline", False
+    if kind == "info":
+        return "info", False
+    if kind == "recall":
+        ok = new >= base - TOL["recall"]
+        return ("ok" if ok else f"regressed (> −{TOL['recall']})", not ok)
+    tol = TOL[kind]
+    if base == 0:
+        ok = new <= 0
+    else:
+        ok = new <= base * (1.0 + tol)
+    return ("ok" if ok else f"regressed (> +{tol:.0%})", not ok)
+
+
+def check_invariant(report: dict, label, path, op, bound):
+    val = get_path(report, path)
+    if val is None:
+        return label, None, f"{op} {bound}", True   # missing value = fail
+    if op == ">=":
+        ok, btxt = val >= bound, f">= {fmt(bound)}"
+    elif op == "<=":
+        ok, btxt = val <= bound, f"<= {fmt(bound)}"
+    elif op == "is_true":
+        ok, btxt = bool(val) is True, "== true"
+    elif op == "<=path":
+        other = get_path(report, bound)
+        ok = other is not None and val <= other
+        btxt = f"<= {bound.split('.')[-1]} ({fmt(other)})"
+    elif op == "<=ratio":
+        other_path, ratio = bound
+        other = get_path(report, other_path)
+        ok = other is not None and val <= other * ratio
+        btxt = f"<= {ratio}x {other_path.split('.')[-1]}"
+    else:  # pragma: no cover - spec typo guard
+        raise ValueError(op)
+    return label, val, btxt, not ok
+
+
+def run(names: list[str], new_dir: str, baseline_dir: str) -> tuple[str, int]:
+    lines = ["# Bench regression report", ""]
+    failures = 0
+
+    m_rows, i_rows = [], []
+    for name in names:
+        new_path = os.path.join(new_dir, name)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(new_path):
+            m_rows.append((name, "(report)", "—", "—", "missing-new", True))
+            failures += 1
+            continue
+        with open(new_path) as f:
+            new_rep = json.load(f)
+        base_rep = None
+        if os.path.exists(base_path):
+            with open(base_path) as f:
+                base_rep = json.load(f)
+
+        for dotted, kind in METRICS.get(name, []):
+            new_v = get_path(new_rep, dotted)
+            base_v = get_path(base_rep, dotted) if base_rep else None
+            status, failed = diff_metric(kind, base_v, new_v)
+            m_rows.append((name, f"{dotted} [{kind}]",
+                           fmt(base_v), fmt(new_v), status, failed))
+            failures += failed
+
+        for label, path, op, bound in INVARIANTS.get(name, []):
+            label, val, btxt, failed = check_invariant(
+                new_rep, label, path, op, bound)
+            i_rows.append((name, label, fmt(val), btxt, failed))
+            failures += failed
+
+    if m_rows:
+        lines += ["## Metrics vs checked-in baselines", "",
+                  "| report | metric | baseline | new | status |",
+                  "|---|---|---|---|---|"]
+        for name, metric, b, n, status, failed in m_rows:
+            mark = "❌" if failed else ("➖" if status != "ok" else "✅")
+            lines.append(f"| {name} | {metric} | {b} | {n} "
+                         f"| {mark} {status} |")
+        lines.append("")
+    if i_rows:
+        lines += ["## Invariants (absolute contracts)", "",
+                  "| report | invariant | value | bound | status |",
+                  "|---|---|---|---|---|"]
+        for name, label, val, btxt, failed in i_rows:
+            mark = "❌ FAIL" if failed else "✅ ok"
+            lines.append(f"| {name} | {label} | {val} | {btxt} | {mark} |")
+        lines.append("")
+    lines.append(f"**{failures} failure(s)** across {len(names)} report(s).")
+    return "\n".join(lines), failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("reports", nargs="*",
+                    help="report basenames, e.g. BENCH_serve.json")
+    ap.add_argument("--all", action="store_true",
+                    help="diff every report bench_diff knows about")
+    ap.add_argument("--new-dir", default="out",
+                    help="directory holding the regenerated reports")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the checked-in baselines")
+    args = ap.parse_args(argv)
+    names = list(args.reports)
+    if args.all:
+        names += [n for n in ALL_REPORTS if n not in names]
+    if not names:
+        ap.error("no reports given (pass basenames or --all)")
+    unknown = [n for n in names if n not in ALL_REPORTS]
+    if unknown:
+        ap.error(f"no metric/invariant spec for {unknown}; "
+                 f"known: {ALL_REPORTS}")
+
+    table, failures = run(names, args.new_dir, args.baseline_dir)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

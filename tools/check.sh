@@ -36,6 +36,9 @@ python -m pytest -q tests/test_codec.py
 echo "== async serving (pump thread stress, window, reservoir, drops) =="
 python -m pytest -q tests/test_serve_async.py
 
+echo "== replication (routing/window units, parity + fallback + catch-up) =="
+python -m pytest -q tests/test_replication.py
+
 echo "== spflint self-test (seeded fixtures, coverage, VMEM parity) =="
 python -m pytest -q tests/test_spflint.py
 
